@@ -1,0 +1,57 @@
+"""Appendix D reproduction: the DPT-construction spectrum.
+
+  paper    — DirtySet + WrittenSet + FW-LSN + FirstDirty  (Section 4.1)
+  perfect  — D.1: exact per-update LSNs in Delta records (DPT == SQL's)
+  reduced  — D.2: no FW-LSN/FirstDirty; coarser rLSNs, prune only prior
+             intervals' entries
+
+Trade-off measured: Delta-record payload (logging overhead during normal
+execution) vs DPT size / redo time."""
+from __future__ import annotations
+
+import json
+from dataclasses import replace
+
+from repro.core import Strategy
+from repro.core.records import DeltaRec
+
+from .harness import BenchSetup, build_crash_image, run_all_strategies
+
+
+def _delta_payload(image) -> int:
+    total = 0
+    for rec in image.log.scan(1):
+        if isinstance(rec, DeltaRec):
+            total += 8 * (len(rec.dirty_set) + len(rec.written_set)) + 24
+            if rec.dirty_lsns is not None:
+                total += 8 * len(rec.dirty_lsns)
+    return total
+
+
+def run(fast: bool = False) -> dict:
+    setup = BenchSetup(n_rows=30_000 if fast else 100_000,
+                       cache_pages=512,
+                       ckpt_updates=1_000 if fast else 4_000, n_ckpts=2)
+    rows = []
+    for mode in ("paper", "perfect", "reduced"):
+        s = replace(setup, delta_mode=mode)
+        image, base, info = build_crash_image(s)
+        res = run_all_strategies(image, base, s,
+                                 strategies=[Strategy.LOG1, Strategy.SQL1])
+        log1 = next(r for r in res if r.strategy == "Log1")
+        sql1 = next(r for r in res if r.strategy == "SQL1")
+        rows.append({
+            "delta_mode": mode,
+            "delta_payload_bytes": _delta_payload(image),
+            "log1_modeled_ms": round(log1.modeled_ms, 1),
+            "log1_dpt": log1.dpt_size,
+            "log1_fetches": log1.fetches,
+            "sql1_dpt": sql1.dpt_size,
+            "sql1_fetches": sql1.fetches,
+            "correct": log1.correct and sql1.correct,
+        })
+    return {"name": "appendix_d_variants", "rows": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

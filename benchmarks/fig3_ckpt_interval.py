@@ -1,0 +1,36 @@
+"""Figure 3 / Appendix C reproduction: redo time vs checkpoint interval
+(ci, 5ci, 10ci).  Log0 grows linearly with the interval; Log1/SQL1
+sub-linearly (DPT bounded by the dirty cache); Log2/SQL2 only modestly
+(prefetching amortizes)."""
+from __future__ import annotations
+
+import json
+from dataclasses import replace
+
+from .harness import BenchSetup, build_crash_image, run_all_strategies
+
+
+def run(fast: bool = False) -> dict:
+    base_ci = 500 if fast else 2_000
+    setup = BenchSetup(n_rows=30_000 if fast else 100_000,
+                       cache_pages=512, n_ckpts=2)
+    rows = []
+    for mult in (1, 5, 10):
+        s = replace(setup, ckpt_updates=base_ci * mult)
+        image, base, info = build_crash_image(s)
+        for r in run_all_strategies(image, base, s):
+            rows.append({
+                "ckpt_interval_updates": base_ci * mult,
+                "interval_mult": mult,
+                "strategy": r.strategy,
+                "modeled_ms": round(r.modeled_ms, 1),
+                "fetches": r.fetches,
+                "dpt_size": r.dpt_size,
+                "log_records": r.log_records,
+                "correct": r.correct,
+            })
+    return {"name": "fig3_ckpt_interval", "rows": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

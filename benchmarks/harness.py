@@ -1,0 +1,114 @@
+"""Shared benchmark harness: the paper's Section 5.2 experimental setup,
+scaled for this container.
+
+Paper setup -> ours (scale factor ~20x on rows, same structure):
+  * single table, (key, data) rows, clustered index
+  * update-only workload, 10 updates/txn, uniform keys (worst case, App. B)
+  * warm the cache to steady state (2x cache fill) before measuring
+  * crash after N checkpoints, M updates past the last one, ~100 updates
+    past the last Delta/BW record (tail of the log)
+  * all five strategies recover the SAME crash image over the common log
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+
+from repro.core import (CrashImage, Database, Strategy,
+                        committed_state_oracle, make_key, recover,
+                        recovered_state)
+
+
+@dataclass
+class BenchSetup:
+    n_rows: int = 100_000
+    value_size: int = 100
+    cache_pages: int = 1024
+    tracker_interval: int = 100      # updates per Delta/BW record
+    bg_flush_per_txn: int = 4
+    ckpt_updates: int = 4_000        # updates per checkpoint interval
+    n_ckpts: int = 3
+    tail_updates: int = 100          # past the last tracker record
+    ops_per_txn: int = 10
+    seed: int = 0
+    delta_mode: str = "paper"
+
+
+@dataclass
+class BenchResult:
+    strategy: str
+    modeled_ms: float
+    wall_ms: float
+    fetches: int
+    sync_reads: int
+    prefetch_reads: int
+    dpt_size: int
+    redone: int
+    pruned: int
+    log_records: int
+    correct: bool
+    n_delta_recs: int = 0
+    n_bw_recs: int = 0
+
+
+def build_crash_image(s: BenchSetup) -> tuple[CrashImage, dict, dict]:
+    """Run the workload; returns (image, oracle_base, run_info)."""
+    rng = random.Random(s.seed)
+    db = Database(cache_pages=s.cache_pages,
+                  tracker_interval=s.tracker_interval,
+                  bg_flush_per_txn=s.bg_flush_per_txn,
+                  delta_mode=s.delta_mode)
+    rows = [(f"k{i:08d}".encode(), rng.randbytes(s.value_size))
+            for i in range(s.n_rows)]
+    db.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+
+    def run_updates(n_updates: int):
+        for _ in range(n_updates // s.ops_per_txn):
+            db.run_txn([("update", "t",
+                         f"k{rng.randrange(s.n_rows):08d}".encode(),
+                         rng.randbytes(s.value_size))
+                        for _ in range(s.ops_per_txn)])
+
+    # warm to steady state: 2x the cache size in page touches
+    run_updates(max(2 * s.cache_pages, 2000))
+    for _ in range(s.n_ckpts):
+        db.checkpoint()
+        run_updates(s.ckpt_updates)
+    run_updates(s.tail_updates)          # tail past the last tracker record
+    info = {
+        "n_delta_recs": db.dc.n_delta_recs,
+        "n_bw_recs": db.dc.n_bw_recs,
+        "stable_pages": len(db.store),
+        "leaf_pages": None,
+        "dirty_at_crash": len(db.dc.pool.dirty_pids()),
+        "log_len": db.log.end_lsn,
+    }
+    return db.crash(), base, info
+
+
+def run_all_strategies(image: CrashImage, base: dict, s: BenchSetup,
+                       check: bool = True,
+                       strategies=None) -> list[BenchResult]:
+    oracle = committed_state_oracle(image, base) if check else None
+    out = []
+    for strat in (strategies or list(Strategy)):
+        t0 = time.perf_counter()
+        db, st = recover(image, strat, cache_pages=s.cache_pages,
+                         delta_mode=s.delta_mode)
+        wall = (time.perf_counter() - t0) * 1e3
+        ok = (recovered_state(db) == oracle) if check else True
+        out.append(BenchResult(
+            strategy=strat.value,
+            modeled_ms=st.io.modeled_ms,
+            wall_ms=wall,
+            fetches=st.io.total_reads(),
+            sync_reads=st.io.sync_reads,
+            prefetch_reads=st.io.prefetch_reads,
+            dpt_size=st.dpt_size,
+            redone=st.redo.redone,
+            pruned=st.redo.skipped_dpt,
+            log_records=st.log_records,
+            correct=ok))
+    return out

@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks (CPU: oracles give the timing signal; the Pallas
+kernels run in interpret mode for correctness, their perf case is made
+structurally via the roofline analysis).  Times the recovery engine's hot
+paths too: redo ops/sec is the paper-engine analogue of tokens/sec."""
+from __future__ import annotations
+
+import json
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Database, Strategy, make_key, recover
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(fast: bool = False) -> dict:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+
+    B, H, S, hd = 1, 4, 512, 64
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, hd), jnp.float32)
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    rows.append({"name": "attention_ref_512", "us_per_call": _time(f, q, k, v),
+                 "derived": f"{4*B*H*S*S*hd/1e9:.2f} GFLOP"})
+
+    r_ = jax.random.normal(ks[3], (B, H, S, hd), jnp.float32)
+    lw = -jnp.ones((B, H, S, hd), jnp.float32) * 0.1
+    u = jnp.ones((H, hd), jnp.float32) * 0.1
+    f = jax.jit(lambda a, b, c, d, e: ref.wkv6_ref(a, b, c, d, e))
+    rows.append({"name": "wkv6_ref_512", "us_per_call": _time(f, r_, k, v, lw, u),
+                 "derived": f"state {hd}x{hd}/head"})
+
+    # recovery engine: redo throughput
+    rng = random.Random(0)
+    db = Database(cache_pages=512, tracker_interval=100, bg_flush_per_txn=4)
+    n_rows = 5_000 if fast else 20_000
+    db.load_table("t", [(f"k{i:08d}".encode(), rng.randbytes(100))
+                        for i in range(n_rows)])
+    for _ in range(100):
+        db.run_txn([("update", "t", f"k{rng.randrange(n_rows):08d}".encode(),
+                     rng.randbytes(100)) for _ in range(10)])
+    db.checkpoint()
+    for _ in range(200):
+        db.run_txn([("update", "t", f"k{rng.randrange(n_rows):08d}".encode(),
+                     rng.randbytes(100)) for _ in range(10)])
+    image = db.crash()
+    t0 = time.perf_counter()
+    _, st = recover(image, Strategy.LOG1, cache_pages=512)
+    dt = time.perf_counter() - t0
+    rows.append({"name": "logical_redo_throughput",
+                 "us_per_call": dt / max(1, st.redo.submitted) * 1e6,
+                 "derived": f"{st.redo.submitted/dt:.0f} redo ops/s wall"})
+    return {"name": "kernel_bench", "rows": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

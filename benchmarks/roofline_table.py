@@ -1,0 +1,70 @@
+"""Aggregate the dry-run artifacts into the §Roofline table
+(artifacts/dryrun/*.json -> markdown + JSON)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def markdown_table(mesh: str = "single") -> str:
+    cells = load_cells(mesh)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "roofline-frac | useful-FLOP-ratio | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"skipped: {c['reason'][:60]} | | | |")
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | ERROR | | | | | | |")
+            continue
+        r = c["roofline"]
+        peak = (c["memory"].get("peak_bytes") or 0) / 1e9
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r.get('useful_flop_ratio', 0):.3f} | {peak:.2f} |")
+    return "\n".join(lines)
+
+
+def run(fast: bool = False) -> dict:
+    cells = load_cells("single")
+    ok = [c for c in cells if c.get("status") == "ok"]
+    return {"name": "roofline_table",
+            "n_ok": len(ok),
+            "n_skipped": sum(1 for c in cells if c.get("status") == "skipped"),
+            "n_error": sum(1 for c in cells if c.get("status") == "error"),
+            "rows": [{
+                "arch": c["arch"], "shape": c["shape"],
+                **{k: c["roofline"][k] for k in
+                   ("compute_s", "memory_s", "collective_s", "dominant",
+                    "roofline_fraction")},
+            } for c in ok]}
+
+
+if __name__ == "__main__":
+    print(markdown_table("single"))

@@ -1,0 +1,61 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark row, and writes
+full JSON to artifacts/bench/.  --full uses the paper-scaled setup (slower);
+the default "fast" mode keeps the whole suite under ~3 minutes.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    from . import (appendix_d_variants, fig2_cache_sweep, fig3_ckpt_interval,
+                   kernel_bench, roofline_table, trainstore_bench)
+    ART.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    for mod in (fig2_cache_sweep, fig3_ckpt_interval, appendix_d_variants,
+                trainstore_bench, kernel_bench, roofline_table):
+        out = mod.run(fast=fast)
+        (ART / f"{out['name']}.json").write_text(json.dumps(out, indent=1))
+        for row in out["rows"]:
+            if "us_per_call" in row:
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row.get('derived','')}\"")
+            elif "strategy" in row:
+                label = out["name"]
+                key = row.get("cache_pages") or row.get(
+                    "ckpt_interval_updates") or ""
+                us = row.get("modeled_ms", 0.0) * 1e3
+                derived = (f"dpt={row.get('dpt_size','')} "
+                           f"fetch={row.get('fetches','')} "
+                           f"ok={row.get('correct','')}")
+                print(f"{label}/{row['strategy']}@{key},{us:.0f},\"{derived}\"")
+            elif "touched_frac" in row:
+                print(f"trainstore/touch={row['touched_frac']},"
+                      f"{row['log1_modeled_ms']*1e3:.0f},"
+                      f"\"log0={row['log0_modeled_ms']}ms "
+                      f"speedup={row['speedup_log1_vs_log0']}x "
+                      f"dpt={row['log1_dpt']}\"")
+            elif "delta_mode" in row:
+                print(f"appendix_d/{row['delta_mode']},"
+                      f"{row['log1_modeled_ms']*1e3:.0f},"
+                      f"\"dpt={row['log1_dpt']} "
+                      f"payload={row['delta_payload_bytes']}B\"")
+            else:
+                print(f"{out['name']}/{row.get('arch','')}__"
+                      f"{row.get('shape','')},"
+                      f"{row.get('compute_s', 0)*1e6:.0f},"
+                      f"\"dom={row.get('dominant','')}\"")
+    print("# full JSON written to artifacts/bench/", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

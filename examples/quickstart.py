@@ -1,0 +1,53 @@
+"""Quickstart: the logical recovery engine in 60 seconds.
+
+Builds a small database, runs an update workload with checkpoints and fuzzy
+flushing, crashes it, and recovers the same crash image with all five
+strategies of the paper's study (Log0/Log1/Log2 logical, SQL1/SQL2
+physiological) — printing the side-by-side redo statistics that Figure 2 is
+made of, and verifying every strategy reproduces the identical state.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import random
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (Database, Strategy, committed_state_oracle, make_key,
+                        recover, recovered_state)
+
+N_ROWS, VALUE = 20_000, 100
+rng = random.Random(0)
+
+print("1. load table + warm the cache ...")
+db = Database(cache_pages=1024, tracker_interval=100, bg_flush_per_txn=4)
+rows = [(f"k{i:08d}".encode(), rng.randbytes(VALUE)) for i in range(N_ROWS)]
+db.load_table("t", rows)
+base = {make_key("t", k): v for k, v in rows}
+
+def txn_batch(n):
+    for _ in range(n):
+        db.run_txn([("update", "t", f"k{rng.randrange(N_ROWS):08d}".encode(),
+                     rng.randbytes(VALUE)) for _ in range(10)])
+
+txn_batch(300)                      # warmup to steady state
+print("2. checkpoints + more updates, then crash ...")
+for _ in range(3):
+    db.checkpoint()
+    txn_batch(200)
+image = db.crash()
+print(f"   crash image: {len(image.log)} log records, "
+      f"{len(image.store)} stable pages\n")
+
+oracle = committed_state_oracle(image, base)
+print(f"{'strategy':8s} {'modeled_ms':>10s} {'fetches':>8s} {'DPT':>6s} "
+      f"{'redone':>7s} {'pruned':>7s} {'correct':>8s}")
+for s in Strategy:
+    rec_db, st = recover(image, s, cache_pages=1024)
+    ok = recovered_state(rec_db) == oracle
+    print(f"{s.value:8s} {st.io.modeled_ms:10.1f} "
+          f"{st.io.total_reads():8d} {st.dpt_size:6d} "
+          f"{st.redo.redone:7d} {st.redo.skipped_dpt:7d} {str(ok):>8s}")
+print("\nLog1/Log2 (logical, DPT from Delta-records) track SQL1/SQL2 "
+      "(physiological)\nwhile Log0 (no DPT) pays for every logged page — "
+      "the paper's result.")

@@ -1,0 +1,17 @@
+"""Batched serving demo: prefill + greedy decode with KV caches, on any of
+the ten architectures (reduced preset for CPU).
+
+    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-3b
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "qwen2.5-3b", "--preset", "smoke",
+                     "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    main()

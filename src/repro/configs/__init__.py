@@ -1,0 +1,3 @@
+from .base import (DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+                   ModelConfig, ShapeConfig, shape_applicable)
+from .registry import all_cells, get_config, list_archs

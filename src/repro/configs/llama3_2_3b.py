@@ -1,0 +1,10 @@
+"""Llama-3.2-3B — small llama3 [hf:meta-llama/Llama-3.2 family; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="dense",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=8192, vocab_size=128256,
+    act="swiglu", norm="rmsnorm", rope_theta=500_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,12 @@
+"""Moonlight-16B-A3B (kimi/moonshot) — MoE 64e top-6, 2 shared experts
+[hf:moonshotai/Moonlight-16B-A3B]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=11264, vocab_size=163840,
+    n_experts=64, top_k=6, moe_d_ff=1408,
+    n_shared_experts=2, first_dense_layers=1,
+    act="swiglu", norm="rmsnorm",
+)

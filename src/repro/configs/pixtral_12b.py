@@ -1,0 +1,12 @@
+"""Pixtral-12B — mistral-nemo text backbone, ViT patch frontend (STUB:
+input_specs provide pre-projected patch embeddings)
+[hf:mistralai/Pixtral-12B-2409; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=131072, head_dim=128,
+    n_patches=256, act="swiglu", norm="rmsnorm",
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,10 @@
+"""Qwen3-8B — qk-norm, GQA kv=8 [hf:Qwen/Qwen3-8B]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12288, vocab_size=151936, head_dim=128,
+    qk_norm=True, act="swiglu", norm="rmsnorm",
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,10 @@
+"""RWKV6 'Finch' 3B — attention-free, data-dependent decay [arXiv:2404.05892; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=8960, vocab_size=65536,
+    rwkv_head_dim=64, norm="layernorm", act="relu_sq",
+    tie_embeddings=False,
+)

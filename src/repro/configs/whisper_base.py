@@ -1,0 +1,11 @@
+"""Whisper-base — enc-dec; conv audio frontend STUB (input_specs provide
+precomputed frame embeddings) [arXiv:2212.04356; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab_size=51865,
+    n_enc_layers=6, enc_ctx=1500,
+    norm="layernorm", act="gelu", rope_theta=10_000.0,
+)

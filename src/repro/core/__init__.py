@@ -1,0 +1,29 @@
+"""Logical recovery engine — the paper's contribution.
+
+Public surface:
+  Database / CrashImage / TransactionalComponent / DataComponent
+  Strategy / recover / committed_state_oracle / recovered_state
+  DPT / build_dpt_sql / build_dpt_logical
+"""
+from .btree import BTree
+from .bufferpool import BufferPool
+from .dc import DataComponent, make_key
+from .dpt import DPT, build_dpt_logical, build_dpt_sql
+from .log import LogManager
+from .pages import PAGE_SIZE, Page
+from .records import (LSN, NULL_LSN, NULL_PID, PID, BWRec, CLRRec, CommitRec,
+                      DeltaRec, RecKind, SMORec, UpdateRec)
+from .recovery import (RecoveryStats, Strategy, committed_state_oracle,
+                       recover, recovered_state)
+from .storage import DiskModel, IOSim, IOStats, PageStore
+from .tc import CrashImage, Database, TransactionalComponent
+
+__all__ = [
+    "BTree", "BufferPool", "DataComponent", "make_key", "DPT",
+    "build_dpt_logical", "build_dpt_sql", "LogManager", "PAGE_SIZE", "Page",
+    "LSN", "NULL_LSN", "NULL_PID", "PID", "BWRec", "CLRRec", "CommitRec",
+    "DeltaRec", "RecKind", "SMORec", "UpdateRec", "RecoveryStats", "Strategy",
+    "committed_state_oracle", "recover", "recovered_state", "DiskModel",
+    "IOSim", "IOStats", "PageStore", "CrashImage", "Database",
+    "TransactionalComponent",
+]

@@ -1,0 +1,274 @@
+"""Page-based B+tree: the DC's placement index (logical key -> leaf PID).
+
+All node access goes through the buffer pool so index-page IO is accounted
+exactly like data-page IO (the paper's Log1/Log2 vs SQL1/SQL2 comparison
+hinges on this burden).  Structure modifications (leaf/internal splits, root
+growth) are logged by the DC as SMO records carrying physiological
+after-images — DC-private physical information, permitted because the DC owns
+placement (Section 2.1).  DC recovery replays SMOs with an slsn idempotence
+test, guaranteeing a well-formed tree before TC redo begins (Section 1.2).
+
+LSN discipline (see pages.py): splits advance ``slsn`` (and the buffer's
+``wal_lsn``) but *never* ``plsn`` — record redistribution is not a data
+change, so data redo tests stay exact even for splits that happen while
+recovery itself is repeating history.
+
+Simplifications vs a production engine (documented, not load-bearing for the
+paper's claims): deletes do not rebalance; no sibling pointers.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Optional
+
+from .bufferpool import BufferPool
+from .log import LogManager
+from .pages import PAGE_SIZE, Page, empty_internal, empty_leaf
+from .records import LSN, NULL_LSN, NULL_PID, PID, SMORec
+
+
+class BTree:
+    def __init__(self, pool: BufferPool, log: LogManager,
+                 root_pid: PID = NULL_PID, height: int = 1,
+                 page_size: int = PAGE_SIZE):
+        self.pool = pool
+        self.log = log
+        self.root_pid = root_pid
+        self.height = height
+        self.page_size = page_size
+        self.smo_count = 0
+
+    # ------------------------------------------------------------- bootstrap
+    def create(self) -> None:
+        """Make an empty tree (single leaf root); logged as an SMO so recovery
+        can always rebuild placement meta from the log."""
+        leaf = empty_leaf(self.pool.store.allocate_pid())
+        self.root_pid = leaf.pid
+        self.height = 1
+        rec = SMORec(root_pid=self.root_pid,
+                     next_pid=self.pool.store.next_pid,
+                     height=self.height)
+        lsn = self.log.append(rec)
+        leaf.slsn = lsn
+        rec.images = {leaf.pid: leaf.to_bytes()}
+        self.pool.install_new(leaf, lsn)
+        self.pool.mark_dirty(leaf.pid, lsn)
+
+    # ------------------------------------------------------------------ find
+    def find_leaf(self, key: bytes) -> PID:
+        """Traverse to the leaf that owns ``key`` (the logical-redo step that
+        physiological recovery gets to skip)."""
+        pid = self.root_pid
+        for _ in range(self.height - 1):
+            node = self.pool.get(pid)
+            assert node is not None and not node.is_leaf, f"malformed index @pid={pid}"
+            idx = bisect.bisect_left(node.keys, key)
+            pid = node.children[idx]
+        return pid
+
+    def _path_to_leaf(self, key: bytes) -> list[PID]:
+        path = [self.root_pid]
+        pid = self.root_pid
+        for _ in range(self.height - 1):
+            node = self.pool.get(pid)
+            idx = bisect.bisect_left(node.keys, key)
+            pid = node.children[idx]
+            path.append(pid)
+        return path
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        leaf = self.pool.get(self.find_leaf(key))
+        return leaf.get(key) if leaf is not None else None
+
+    # ---------------------------------------------------------------- upsert
+    def put(self, key: bytes, value: bytes, lsn: LSN) -> PID:
+        """Insert or update; returns the PID of the leaf finally updated.
+
+        If a split is needed, the SMO record is *appended before* the page
+        mutations (WAL ordering) and its after-images are serialized *after*
+        the triggering record operation, so the image state is exactly
+        "all record ops with LSN <= image.plsn applied"."""
+        path = self._path_to_leaf(key)
+        leaf = self.pool.get(path[-1])
+        from .pages import _HDR, SLOT_OVERHEAD
+        if _HDR.size + len(key) + len(value) + SLOT_OVERHEAD > self.page_size:
+            raise ValueError(
+                f"record ({len(key)}+{len(value)}B) exceeds page size "
+                f"{self.page_size}; use a larger page_size or smaller chunks")
+        pending: list[tuple[SMORec, dict[PID, Page]]] = []
+        guard = 0
+        while leaf.would_overflow(key, value, self.page_size):
+            pending.append(self._split(path, key))
+            path = self._path_to_leaf(key)
+            leaf = self.pool.get(path[-1])
+            guard += 1
+            assert guard < 64, "split did not converge"
+        leaf.put(key, value, lsn)
+        self.pool.mark_dirty(leaf.pid, lsn)
+        for smo_rec, touched in pending:
+            smo_rec.images = {pid: pg.to_bytes()
+                              for pid, pg in touched.items()}
+        return leaf.pid
+
+    def delete(self, key: bytes, lsn: LSN) -> PID:
+        pid = self.find_leaf(key)
+        leaf = self.pool.get(pid)
+        leaf.delete(key, lsn)
+        self.pool.mark_dirty(pid, lsn)
+        return pid
+
+    # ----------------------------------------------------------------- scan
+    def items(self) -> list[tuple[bytes, bytes]]:
+        """Full ordered scan (used by equivalence checks)."""
+        out: list[tuple[bytes, bytes]] = []
+
+        def rec(pid: PID):
+            node = self.pool.get(pid)
+            if node.is_leaf:
+                out.extend(sorted(node.records.items()))
+            else:
+                for c in node.children:
+                    rec(c)
+        if self.root_pid != NULL_PID:
+            rec(self.root_pid)
+        return out
+
+    # ------------------------------------------------------------------ SMO
+    def _split(self, path: list[PID], key: bytes) -> tuple[SMORec, dict[PID, Page]]:
+        """Split the leaf on ``path`` (and ancestors as needed).  Returns the
+        (already appended) SMO record and the touched pages — the caller
+        serializes images after applying the triggering record op."""
+        touched: dict[PID, Page] = {}
+
+        # WAL ordering: log record exists before any page mutation can be
+        # flushed (flush forces the log up to the buffer's wal_lsn).
+        rec = SMORec()
+        lsn = self.log.append(rec)
+
+        leaf_pid = path[-1]
+        leaf = self.pool.get(leaf_pid)
+        new_leaf = empty_leaf(self.pool.store.allocate_pid())
+        items = sorted(leaf.records.items())
+        # Separator choice ("keys <= sep stay left"; sep need not be a stored
+        # key).  Append-beyond-range gets an empty right page (bulk-append /
+        # state-chunk pattern); prepend-below-range an empty left page;
+        # otherwise split at the middle (updates that grow a record converge
+        # by repeated halving onto a single-record leaf).
+        if key > items[-1][0]:
+            half, sep = len(items), items[-1][0]
+        elif key < items[0][0]:
+            half, sep = 0, key
+        else:
+            half = max(1, len(items) // 2)
+            sep = items[half - 1][0]
+        leaf.records = dict(items[:half])
+        new_leaf.records = dict(items[half:])
+        new_leaf.plsn = leaf.plsn         # data state inherited, plsn preserved
+        leaf.slsn = lsn
+        new_leaf.slsn = lsn
+        self.pool.install_new(new_leaf, lsn)
+        touched[leaf.pid] = leaf
+        touched[new_leaf.pid] = new_leaf
+        self.pool.mark_dirty(leaf.pid, lsn)
+        self.pool.mark_dirty(new_leaf.pid, lsn)
+
+        # push separator up the path
+        up_key: Optional[bytes] = sep
+        up_child: PID = new_leaf.pid
+        level = len(path) - 2
+        while up_key is not None:
+            if level < 0:
+                root = empty_internal(self.pool.store.allocate_pid())
+                root.keys = [up_key]
+                root.children = [path[0], up_child]
+                root.slsn = lsn
+                self.root_pid = root.pid
+                self.height += 1
+                self.pool.install_new(root, lsn)
+                self.pool.mark_dirty(root.pid, lsn)
+                touched[root.pid] = root
+                break
+            node_pid = path[level]
+            node = self.pool.get(node_pid)
+            idx = bisect.bisect_left(node.keys, up_key)
+            node.keys.insert(idx, up_key)
+            node.children.insert(idx + 1, up_child)
+            node.slsn = lsn
+            touched[node_pid] = node
+            self.pool.mark_dirty(node_pid, lsn)
+            if node.serialized_size() <= self.page_size:
+                up_key = None
+            else:
+                new_node = empty_internal(self.pool.store.allocate_pid())
+                mid = len(node.keys) // 2
+                up_key = node.keys[mid]
+                new_node.keys = node.keys[mid + 1:]
+                new_node.children = node.children[mid + 1:]
+                new_node.slsn = lsn
+                node.keys = node.keys[:mid]
+                node.children = node.children[:mid + 1]
+                self.pool.install_new(new_node, lsn)
+                self.pool.mark_dirty(new_node.pid, lsn)
+                touched[new_node.pid] = new_node
+                up_child = new_node.pid
+                level -= 1
+
+        rec.root_pid = self.root_pid
+        rec.next_pid = self.pool.store.next_pid
+        rec.height = self.height
+        self.smo_count += 1
+        return rec, touched
+
+    # ----------------------------------------------------------- DC recovery
+    def redo_smo(self, rec: SMORec) -> None:
+        """Idempotent SMO replay: restore any image whose structure is newer
+        than the cached/stable copy; adopt the record's placement meta."""
+        for pid, raw in rec.images.items():
+            img = Page.from_bytes(raw)
+            cur = self.pool.get(pid)
+            if cur is None or cur.slsn < rec.lsn:
+                if cur is None:
+                    self.pool.install_new(img, rec.lsn)
+                else:
+                    self.pool.buffers[pid].page = img
+                self.pool.mark_dirty(pid, rec.lsn)
+        self.root_pid = rec.root_pid
+        self.height = rec.height
+        self.pool.store.set_next_pid(rec.next_pid)
+
+    # ------------------------------------------------------------- structure
+    def index_pids(self) -> list[PID]:
+        """PIDs of all internal (index) pages — what Log2 bulk-preloads.
+        Depth-bounded: never touches leaf pages (leaves are the data pages
+        whose fetches the DPT machinery exists to avoid)."""
+        out: list[PID] = []
+
+        def rec(pid: PID, depth: int):
+            if depth >= self.height:        # children are leaves
+                return
+            out.append(pid)
+            node = self.pool.get(pid)
+            if node is None or node.is_leaf:
+                return
+            for c in node.children:
+                rec(c, depth + 1)
+        if self.root_pid != NULL_PID and self.height > 1:
+            rec(self.root_pid, 1)
+        return out
+
+    def leaf_pids(self) -> list[PID]:
+        out: list[PID] = []
+
+        def rec(pid: PID):
+            node = self.pool.get(pid)
+            if node.is_leaf:
+                out.append(pid)
+            else:
+                for c in node.children:
+                    rec(c)
+        if self.root_pid != NULL_PID:
+            rec(self.root_pid)
+        return out
+
+    def n_leaves(self) -> int:
+        return len(self.leaf_pids())

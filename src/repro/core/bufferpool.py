@@ -1,0 +1,155 @@
+"""Database cache (buffer pool) with dirty tracking, WAL enforcement, LRU
+eviction, and the penultimate-checkpoint "generation bit" scheme (Section 3.2).
+
+Listeners let the DC's Delta accumulator and the SQL-Server BW tracker observe
+page dirtying / flush completions without the pool knowing about logging.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from .log import LogManager
+from .pages import Page
+from .records import LSN, NULL_LSN, PID
+from .storage import IOSim, PageStore
+
+
+@dataclass(slots=True)
+class Buffer:
+    page: Page
+    dirty: bool = False
+    rlsn: LSN = NULL_LSN          # LSN of op that first dirtied this buffer
+    wal_lsn: LSN = NULL_LSN       # max LSN applied (incl. SMOs) — WAL horizon
+    dirty_gen: int = -1           # checkpoint generation when first dirtied
+    tick: int = 0                 # LRU clock
+
+
+class BufferPool:
+    def __init__(self, store: PageStore, log: LogManager, capacity_pages: int = 1 << 30):
+        self.store = store
+        self.log = log
+        self.capacity = capacity_pages
+        self.buffers: Dict[PID, Buffer] = {}
+        self._tick = 0
+        self.gen = 0                               # checkpoint generation bit
+        # listeners
+        self.on_update: list[Callable[[PID, LSN], None]] = []   # every page update
+        self.on_flush: list[Callable[[PID], None]] = []          # flush IO complete
+        # stats
+        self.fetches = 0
+        self.evictions = 0
+        self.flushes = 0
+        # recovery-time IO accounting hook
+        self.iosim: Optional[IOSim] = None
+
+    # ------------------------------------------------------------------ fetch
+    def get(self, pid: PID) -> Optional[Page]:
+        self._tick += 1
+        buf = self.buffers.get(pid)
+        if buf is not None:
+            buf.tick = self._tick
+            return buf.page
+        page = self.store.read_page(pid)
+        if page is None:
+            return None
+        if self.iosim is not None:
+            self.iosim.demand_read(pid)
+        self.fetches += 1
+        self._install(page, dirty=False)
+        return page
+
+    def contains(self, pid: PID) -> bool:
+        return pid in self.buffers
+
+    def install_new(self, page: Page, lsn: LSN) -> None:
+        """Install a freshly allocated page (born dirty)."""
+        self._install(page, dirty=True, rlsn=lsn)
+
+    def _install(self, page: Page, dirty: bool, rlsn: LSN = NULL_LSN) -> None:
+        self._evict_for_space()
+        self._tick += 1
+        self.buffers[page.pid] = Buffer(page=page, dirty=dirty, rlsn=rlsn,
+                                        wal_lsn=rlsn,
+                                        dirty_gen=self.gen if dirty else -1,
+                                        tick=self._tick)
+
+    # ------------------------------------------------------------------ dirty
+    def mark_dirty(self, pid: PID, lsn: LSN) -> None:
+        buf = self.buffers[pid]
+        if not buf.dirty:
+            buf.dirty = True
+            buf.rlsn = lsn
+            buf.dirty_gen = self.gen
+        if lsn > buf.wal_lsn:
+            buf.wal_lsn = lsn
+        for cb in self.on_update:
+            cb(pid, lsn)
+
+    # ------------------------------------------------------------------ flush
+    def flush_page(self, pid: PID) -> bool:
+        buf = self.buffers.get(pid)
+        if buf is None or not buf.dirty:
+            return False
+        # WAL: a page may not reach stable storage before the log records that
+        # produced its state — including SMOs, hence wal_lsn not plsn.  (EOSL
+        # gives the DC the TC stable point; here the integrated log is forced
+        # directly.)
+        if buf.wal_lsn > self.log.stable_lsn:
+            self.log.flush(buf.wal_lsn)
+        self.store.write_page(buf.page)
+        buf.dirty = False
+        buf.rlsn = NULL_LSN
+        buf.dirty_gen = -1
+        self.flushes += 1
+        for cb in self.on_flush:
+            cb(pid)
+        return True
+
+    def flush_some(self, max_pages: int) -> int:
+        """Background flusher: write the oldest-dirtied pages (rate-limited).
+        This is the training-framework 'fuzzy incremental checkpoint' driver."""
+        dirty = [(b.rlsn, pid) for pid, b in self.buffers.items() if b.dirty]
+        dirty.sort()
+        n = 0
+        for _, pid in dirty[:max_pages]:
+            if self.flush_page(pid):
+                n += 1
+        return n
+
+    # ------------------------------------------------------------- checkpoint
+    def begin_checkpoint_flush(self) -> int:
+        """Penultimate scheme: flip the generation bit, then flush every page
+        dirtied in an earlier generation.  Pages dirtied *during* the
+        checkpoint keep the new generation and are left dirty."""
+        self.gen += 1
+        flushed = 0
+        victims = [pid for pid, b in self.buffers.items()
+                   if b.dirty and b.dirty_gen < self.gen]
+        for pid in victims:
+            if self.flush_page(pid):
+                flushed += 1
+        return flushed
+
+    # --------------------------------------------------------------- eviction
+    def _evict_for_space(self) -> None:
+        while len(self.buffers) >= self.capacity:
+            # prefer clean LRU victim; else flush the LRU dirty page
+            clean = [(b.tick, pid) for pid, b in self.buffers.items() if not b.dirty]
+            if clean:
+                _, victim = min(clean)
+            else:
+                _, victim = min((b.tick, pid) for pid, b in self.buffers.items())
+                self.flush_page(victim)
+            del self.buffers[victim]
+            self.evictions += 1
+
+    # ------------------------------------------------------------------ misc
+    def dirty_pids(self) -> list[PID]:
+        return [pid for pid, b in self.buffers.items() if b.dirty]
+
+    def reset_stats(self) -> None:
+        self.fetches = self.evictions = self.flushes = 0
+
+    def __len__(self) -> int:
+        return len(self.buffers)

@@ -1,0 +1,247 @@
+"""Data Component (DC): owns placement (B-tree), the cache (buffer pool) and
+stable storage.  Knows *nothing* about transactions; executes (re-)submitted
+logical operations and runs its own recovery (SMO replay + DPT construction)
+before the TC's redo pass (Section 1.2, 4.2).
+
+The TC addresses records logically as (table, key); the DC maps that to a
+composite byte key (length-prefixed table + key) so one tree serves many
+tables, and then to a leaf PID.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .btree import BTree
+from .bufferpool import BufferPool
+from .delta_log import BWAccumulator, DeltaAccumulator
+from .dpt import DPT, build_dpt_logical
+from .log import LogManager
+from .records import (LSN, NULL_LSN, NULL_PID, PID, CLRRec, DeltaRec, LogRec,
+                      RecKind, RSSPRec, SMORec, UpdateRec)
+from .storage import PageStore
+
+
+def make_key(table: str, key: bytes) -> bytes:
+    t = table.encode()
+    return struct.pack("<H", len(t)) + t + key
+
+
+@dataclass
+class RedoStats:
+    submitted: int = 0
+    redone: int = 0
+    skipped_dpt: int = 0       # pruned without fetching the page (DPT miss / rLSN)
+    skipped_plsn: int = 0      # page fetched, pLSN said no
+    tail_ops: int = 0          # ops past the last Delta record (basic fallback)
+
+
+class DataComponent:
+    def __init__(self, store: PageStore, log: LogManager, cache_pages: int = 1 << 30,
+                 delta_mode: str = "paper", side_by_side: bool = True,
+                 page_size: int = None):
+        """delta_mode: 'paper' | 'perfect' (D.1) | 'reduced' (D.2) | 'off'.
+        side_by_side: also maintain SQL-Server BW records on the same log so
+        physiological recovery can be compared on a common log (Section 5.1).
+        page_size: stable-page byte size — replicas may differ (Section 1.1)."""
+        from .pages import PAGE_SIZE
+        self.page_size = page_size or PAGE_SIZE
+        self.store = store
+        self.log = log
+        self.pool = BufferPool(store, log, cache_pages)
+        self.btree = BTree(self.pool, log, page_size=self.page_size)
+        self.delta_mode = delta_mode
+        self.delta: Optional[DeltaAccumulator] = None
+        if delta_mode != "off":
+            self.delta = DeltaAccumulator(log, perfect=(delta_mode == "perfect"),
+                                          reduced=(delta_mode == "reduced"))
+            self.pool.on_update.append(self.delta.note_update)
+            self.pool.on_flush.append(self.delta.note_flush)
+        self.bw: Optional[BWAccumulator] = None
+        if side_by_side:
+            self.bw = BWAccumulator(log)
+            self.pool.on_flush.append(self.bw.note_flush)
+        self.n_delta_recs = 0
+        self.n_bw_recs = 0
+        # recovery artifacts
+        self.dpt: Optional[DPT] = None
+        self.last_delta_tc_lsn: LSN = NULL_LSN
+        self.pf_list: list[PID] = []
+        self.redo_stats = RedoStats()
+
+    # ----------------------------------------------------------- bootstrap
+    def bootstrap(self) -> None:
+        self.btree.create()
+
+    def bulk_build(self, items: list[tuple[bytes, bytes]]) -> None:
+        """Offline index build (initial load / restore-from-backup): packs
+        sorted records bottom-up straight into stable storage, no logging.
+        Must be followed by a checkpoint before the workload starts."""
+        from .pages import SLOT_OVERHEAD, empty_internal, empty_leaf
+        items = sorted(items)
+        fill = int(self.page_size * 0.7)
+
+        # ---- leaf level: (max_key, pid) per leaf, contiguous PIDs
+        leaves: list[tuple[bytes, PID]] = []
+        cur = empty_leaf(self.store.allocate_pid())
+        size = 0
+        for k, v in items:
+            rec_sz = len(k) + len(v) + SLOT_OVERHEAD
+            if size + rec_sz > fill and cur.records:
+                leaves.append((max(cur.records), cur.pid))
+                self.store.write_page(cur)
+                cur = empty_leaf(self.store.allocate_pid())
+                size = 0
+            cur.records[k] = v
+            size += rec_sz
+        leaves.append((max(cur.records) if cur.records else b"", cur.pid))
+        self.store.write_page(cur)
+
+        # ---- internal levels: children[i] holds keys <= keys[i]
+        level = leaves
+        height = 1
+        while len(level) > 1:
+            height += 1
+            nxt: list[tuple[bytes, PID]] = []
+            node = empty_internal(self.store.allocate_pid())
+            prev_mx: Optional[bytes] = None
+            for mx, pid in level:
+                if node.children and node.serialized_size() + len(mx) + 24 > fill:
+                    nxt.append((prev_mx, node.pid))
+                    self.store.write_page(node)
+                    node = empty_internal(self.store.allocate_pid())
+                if node.children:
+                    node.keys.append(prev_mx)
+                node.children.append(pid)
+                prev_mx = mx
+            nxt.append((prev_mx, node.pid))
+            self.store.write_page(node)
+            level = nxt
+        self.btree.root_pid = level[0][1]
+        self.btree.height = height
+
+    # ------------------------------------------------------- normal-mode ops
+    def apply(self, rec: UpdateRec) -> None:
+        """Execute a logical operation; stamps the touched PID back onto the
+        (shared prototype) log record so the physiological path can use it."""
+        k = make_key(rec.table, rec.key)
+        if rec.op == RecKind.DELETE:
+            rec.pid = self.btree.delete(k, rec.lsn)
+        else:
+            rec.pid = self.btree.put(k, rec.after, rec.lsn)
+        if self.delta is not None and rec.lsn > self.delta.applied_lsn:
+            self.delta.applied_lsn = rec.lsn
+
+    def apply_clr(self, rec: CLRRec) -> None:
+        k = make_key(rec.table, rec.key)
+        if rec.op == RecKind.DELETE or rec.after is None:
+            rec.pid = self.btree.delete(k, rec.lsn)
+        else:
+            rec.pid = self.btree.put(k, rec.after, rec.lsn)
+
+    def read(self, table: str, key: bytes) -> Optional[bytes]:
+        return self.btree.get(make_key(table, key))
+
+    # --------------------------------------------------------- control ops
+    def eosl(self, elsn: LSN) -> None:
+        """EOSL: TC's end-of-stable-log.  With the integrated prototype log the
+        pool reads stability directly; kept for interface fidelity."""
+        # (Deuteronomy-mode DCs would store elsn and cap page flushes by it.)
+        return None
+
+    def emit_trackers(self) -> None:
+        """Write a Delta-log record, then a BW record ('exactly before', 5.2)."""
+        if self.delta is not None and self.delta.emit() is not None:
+            self.n_delta_recs += 1
+        if self.bw is not None and self.bw.emit() is not None:
+            self.n_bw_recs += 1
+
+    def rssp(self, rssp_lsn: LSN) -> LSN:
+        """RSSP: flush every page dirtied by ops <= rssp_lsn (penultimate
+        checkpoint scheme via the generation bit), record the DC's meta +
+        rsspLSN on the log.  Returns the RSSP record's LSN."""
+        self.pool.begin_checkpoint_flush()
+        self.emit_trackers()
+        rec = RSSPRec(rssp_lsn=rssp_lsn, root_pid=self.btree.root_pid,
+                      next_pid=self.store.next_pid, height=self.btree.height)
+        lsn = self.log.append(rec)
+        self.log.set_master(rssp_rec=lsn)
+        return lsn
+
+    def maybe_background_flush(self, max_pages: int) -> int:
+        return self.pool.flush_some(max_pages)
+
+    # ------------------------------------------------------------ DC recovery
+    def recover(self, scan_from: LSN, rssp_lsn: LSN = NULL_LSN,
+                build_dpt: bool = True, preload_index: bool = False) -> None:
+        """DC-side recovery, before any TC redo (Section 4.2):
+          1. adopt meta from the master RSSP record,
+          2. replay SMOs so the B-tree is well-formed,
+          3. build the DPT + PF-list from Delta-log records,
+          4. optionally bulk-preload all index pages (Appendix A.1)."""
+        m = self.log.master
+        if m.rssp_rec_lsn != NULL_LSN:
+            rssp = self.log.record(m.rssp_rec_lsn)
+            assert isinstance(rssp, RSSPRec)
+            self.btree.root_pid = rssp.root_pid
+            self.btree.height = rssp.height
+            self.store.set_next_pid(rssp.next_pid)
+        for rec in self.log.scan(scan_from):
+            if isinstance(rec, SMORec):
+                self.btree.redo_smo(rec)
+        if build_dpt:
+            self.dpt, self.last_delta_tc_lsn, self.pf_list = \
+                build_dpt_logical(self.log, rssp_lsn)
+        if preload_index:
+            pids = self.index_pids_from_meta()
+            if self.pool.iosim is not None:
+                self.pool.iosim.prefetch(pids, contiguous=True)
+            for pid in pids:
+                self.pool.get(pid)
+
+    def index_pids_from_meta(self) -> list[PID]:
+        return self.btree.index_pids()
+
+    # ---------------------------------------------------------- redo service
+    def redo_basic(self, rec: UpdateRec) -> None:
+        """Algorithm 2: traverse, fetch, pLSN test, maybe re-execute."""
+        self.redo_stats.submitted += 1
+        k = make_key(rec.table, rec.key)
+        pid = self.btree.find_leaf(k)
+        page = self.pool.get(pid)
+        if rec.lsn <= page.plsn:
+            self.redo_stats.skipped_plsn += 1
+            return
+        self._reexecute(rec, k, pid)
+
+    def redo_with_dpt(self, rec: UpdateRec) -> None:
+        """Algorithm 5: DPT-assisted logical redo with log-tail fallback."""
+        self.redo_stats.submitted += 1
+        k = make_key(rec.table, rec.key)
+        pid = self.btree.find_leaf(k)
+        if rec.lsn <= self.last_delta_tc_lsn:
+            e = self.dpt.find(pid)
+            if e is None or rec.lsn < e.rlsn:
+                self.redo_stats.skipped_dpt += 1
+                return
+        else:
+            self.redo_stats.tail_ops += 1
+        page = self.pool.get(pid)
+        if rec.lsn <= page.plsn:
+            self.redo_stats.skipped_plsn += 1
+            return
+        self._reexecute(rec, k, pid)
+
+    def _reexecute(self, rec, k: bytes, pid: PID) -> None:
+        self.redo_stats.redone += 1
+        page = self.pool.get(pid)
+        if rec.op == RecKind.DELETE or rec.after is None:
+            page.delete(k, rec.lsn)
+            self.pool.mark_dirty(pid, rec.lsn)
+        elif not page.would_overflow(k, rec.after, self.page_size):
+            page.put(k, rec.after, rec.lsn)
+            self.pool.mark_dirty(pid, rec.lsn)
+        else:
+            # repeat history: the original insert split here too
+            self.btree.put(k, rec.after, rec.lsn)

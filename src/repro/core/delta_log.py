@@ -1,0 +1,102 @@
+"""Normal-execution trackers that prepare for optimized recovery.
+
+``DeltaAccumulator``  — builds the DC's Delta-log records (Section 4.1):
+    (DirtySet, WrittenSet, FW-LSN, FirstDirty, TC-LSN)
+``BWAccumulator``     — builds SQL Server's BW-log records (Section 3.3):
+    (WrittenSet, FW-LSN)
+
+Both attach to the buffer pool's listener hooks.  In the side-by-side
+prototype mode both are active on the same run (the paper writes Delta-log
+records "exactly before BW-log records to ensure a fair comparison").
+
+Correctness note (Section 4.1): *every* dirtied page must be captured in some
+DirtySet — a missed dirty page could make redo falsely skip an operation.  The
+accumulator therefore appends on every update (duplicates allowed; Appendix
+D.2 explains why dedup is deliberately not attempted).  The TC-LSN recorded is
+``min(TC end-of-stable-log, last op the DC has applied)`` so that an op whose
+page-dirtying the DC has not yet performed can never be <= TC-LSN (such ops
+fall into the "tail of the log" and use basic redo).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .log import LogManager
+from .records import LSN, NULL_LSN, PID, BWRec, DeltaRec
+
+
+class DeltaAccumulator:
+    def __init__(self, log: LogManager, *, perfect: bool = False, reduced: bool = False):
+        """``perfect``: Appendix D.1 — also record per-update LSNs (DirtyLSNs).
+        ``reduced``: Appendix D.2 — omit FW-LSN / FirstDirty at build time."""
+        self.log = log
+        self.perfect = perfect
+        self.reduced = reduced
+        self.applied_lsn: LSN = NULL_LSN     # last TC op applied by the DC
+        self._reset()
+
+    def _reset(self) -> None:
+        self.dirty_set: list[PID] = []
+        self.dirty_lsns: list[LSN] = []
+        self.written_set: list[PID] = []
+        self.fw_lsn: LSN = NULL_LSN
+        self.first_dirty: Optional[int] = None
+
+    # ------------------------------------------------------------- listeners
+    def note_update(self, pid: PID, lsn: LSN) -> None:
+        if self.fw_lsn != NULL_LSN and self.first_dirty is None:
+            self.first_dirty = len(self.dirty_set)
+        self.dirty_set.append(pid)
+        if self.perfect:
+            self.dirty_lsns.append(lsn)
+        if lsn > self.applied_lsn:
+            self.applied_lsn = lsn
+
+    def note_flush(self, pid: PID) -> None:
+        if self.fw_lsn == NULL_LSN:
+            self.fw_lsn = self.log.stable_lsn      # TC end-of-stable-log at first write
+        self.written_set.append(pid)
+
+    # ----------------------------------------------------------------- write
+    def emit(self) -> Optional[DeltaRec]:
+        """Write the Delta-log record and reset the interval."""
+        if not self.dirty_set and not self.written_set:
+            return None
+        tc_lsn = min(self.log.stable_lsn, self.applied_lsn) \
+            if self.applied_lsn != NULL_LSN else self.log.stable_lsn
+        fd = self.first_dirty if self.first_dirty is not None else len(self.dirty_set)
+        rec = DeltaRec(
+            dirty_set=list(self.dirty_set),
+            written_set=list(self.written_set),
+            fw_lsn=NULL_LSN if self.reduced else self.fw_lsn,
+            first_dirty=0 if self.reduced else fd,
+            tc_lsn=tc_lsn,
+            dirty_lsns=list(self.dirty_lsns) if self.perfect else None,
+        )
+        self.log.append(rec)
+        self._reset()
+        return rec
+
+
+class BWAccumulator:
+    def __init__(self, log: LogManager):
+        self.log = log
+        self._reset()
+
+    def _reset(self) -> None:
+        self.written_set: list[PID] = []
+        self.fw_lsn: LSN = NULL_LSN
+
+    def note_flush(self, pid: PID) -> None:
+        if self.fw_lsn == NULL_LSN:
+            self.fw_lsn = self.log.stable_lsn
+        self.written_set.append(pid)
+
+    def emit(self) -> Optional[BWRec]:
+        if not self.written_set:
+            return None
+        rec = BWRec(written_set=list(self.written_set), fw_lsn=self.fw_lsn)
+        self.log.append(rec)
+        self._reset()
+        return rec

@@ -1,0 +1,136 @@
+"""Dirty Page Table: structure + both construction algorithms.
+
+``build_dpt_sql``     — Algorithm 3: SQL Server's analysis pass over update
+                        log records (PIDs!) + BW-log records.
+``build_dpt_logical`` — Algorithm 4: the paper's contribution — DC analysis
+                        over Delta-log records *only*; no PID ever read from a
+                        TC (update) record.
+
+Safety invariants (checked by hypothesis property tests):
+  * every page actually dirty at the crash appears in the DPT
+    (conservative approximation of the dirty cache);
+  * every entry's rLSN <= LSN of the first op that dirtied the page.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .log import LogManager
+from .records import (LSN, NULL_LSN, PID, BWRec, CLRRec, DeltaRec, LogRec,
+                      UpdateRec)
+
+
+@dataclass(slots=True)
+class DPTEntry:
+    pid: PID
+    rlsn: LSN          # recovery LSN: <= LSN of op that first dirtied the page
+    lastlsn: LSN       # LSN (approximation) of the last op seen for the page
+
+
+class DPT:
+    def __init__(self):
+        self.entries: Dict[PID, DPTEntry] = {}
+
+    def find(self, pid: PID) -> Optional[DPTEntry]:
+        return self.entries.get(pid)
+
+    def add(self, pid: PID, lsn: LSN) -> None:
+        """ADDENTRY: new entry (rlsn=lastlsn=lsn); existing entry's lastlsn
+        advances (Algorithms 3 & 4)."""
+        e = self.entries.get(pid)
+        if e is None:
+            self.entries[pid] = DPTEntry(pid, lsn, lsn)
+        elif lsn > e.lastlsn:
+            e.lastlsn = lsn
+
+    def remove(self, pid: PID) -> None:
+        self.entries.pop(pid, None)
+
+    def __contains__(self, pid: PID) -> bool:
+        return pid in self.entries
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+def build_dpt_sql(log: LogManager, bckpt_lsn: LSN) -> DPT:
+    """Algorithm 3 — physiological analysis: every update record's PID enters
+    the DPT; BW-log records prune flushed pages / raise rLSNs."""
+    dpt = DPT()
+    for rec in log.scan(bckpt_lsn + 1):
+        if isinstance(rec, (UpdateRec, CLRRec)):
+            dpt.add(rec.pid, rec.lsn)
+        elif isinstance(rec, BWRec):
+            for pid in rec.written_set:
+                e = dpt.find(pid)
+                if e is None:
+                    continue
+                if e.lastlsn <= rec.fw_lsn:
+                    dpt.remove(pid)
+                elif e.rlsn < rec.fw_lsn:
+                    e.rlsn = rec.fw_lsn
+    return dpt
+
+
+def build_dpt_logical(log: LogManager, rssp_lsn: LSN) -> tuple[DPT, LSN, list[PID]]:
+    """Algorithm 4 — DC analysis over Delta-log records only.
+
+    Returns (DPT, TC-LSN of the last Delta record seen, PF-list).
+
+    * DirtySet entries with index < FirstDirty were dirtied before the
+      interval's first flush -> rLSN = TC-LSN of the *previous* Delta record
+      (rsspLSN for the first).  Entries at index >= FirstDirty were dirtied
+      after the first flush -> rLSN = the record's FW-LSN.
+    * WrittenSet prunes entries whose lastLSN < FW-LSN; survivors' rLSNs are
+      raised to FW-LSN.
+    * Reduced-logging variant (Appendix D.2): records carry no FW-LSN /
+      FirstDirty (fw_lsn == NULL_LSN while pages were written): every dirty
+      entry uses prevDeltaLSN and pruning only removes entries created by
+      *prior* Delta records.
+    * Perfect variant (Appendix D.1): per-entry exact update LSNs.
+
+    The PF-list (Appendix A.2) is the first-occurrence-ordered concatenation
+    of DirtySets restricted to pages that survive in the final DPT.
+    """
+    dpt = DPT()
+    prev_lsn = rssp_lsn
+    pf_order: list[PID] = []
+    seen: set[PID] = set()
+    for rec in log.scan(rssp_lsn + 1):
+        if not isinstance(rec, DeltaRec):
+            continue
+        if rec.tc_lsn <= rssp_lsn:
+            continue
+        reduced = rec.fw_lsn == NULL_LSN and bool(rec.written_set)
+        if rec.dirty_lsns is not None:                      # Appendix D.1
+            for pid, ulsn in zip(rec.dirty_set, rec.dirty_lsns):
+                dpt.add(pid, ulsn)
+                if pid not in seen:
+                    seen.add(pid)
+                    pf_order.append(pid)
+        else:
+            first_dirty = len(rec.dirty_set) if reduced else rec.first_dirty
+            for i, pid in enumerate(rec.dirty_set):
+                dpt.add(pid, prev_lsn if i < first_dirty else rec.fw_lsn)
+                if pid not in seen:
+                    seen.add(pid)
+                    pf_order.append(pid)
+        for pid in rec.written_set:
+            e = dpt.find(pid)
+            if e is None:
+                continue
+            if reduced:
+                # D.2: prune only entries created by PRIOR Delta records —
+                # current-interval entries carry lastlsn == prev_lsn and a
+                # flush recorded here may have preceded their dirtying
+                if e.lastlsn < prev_lsn:
+                    dpt.remove(pid)
+            else:
+                if e.lastlsn < rec.fw_lsn:
+                    dpt.remove(pid)
+                elif e.rlsn < rec.fw_lsn:
+                    e.rlsn = rec.fw_lsn
+        prev_lsn = rec.tc_lsn
+    pf_list = [pid for pid in pf_order if pid in dpt]
+    return dpt, prev_lsn, pf_list

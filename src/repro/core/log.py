@@ -1,0 +1,96 @@
+"""Write-ahead log manager.
+
+One LSN space; in-memory tail + "stable" prefix (what survives a crash).
+``flush()`` advances the stable point (group commit forces it).  ``crash()``
+returns the stable prefix — the unforced tail is lost, exactly the set of
+records the paper's "tail of the log" analysis concerns itself with.
+
+The master pointer (ARIES' master record) remembers the last complete
+checkpoint and the DC's last RSSP record so recovery knows where to start
+without scanning from the beginning of time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional
+
+from .records import (LSN, NULL_LSN, BeginCkptRec, EndCkptRec, LogRec, RSSPRec)
+
+# Purely for IO accounting: how many log records fit a "log page".
+LOG_RECS_PER_PAGE = 64
+
+
+@dataclass
+class Master:
+    """Stable master pointer (updated atomically, survives crash)."""
+    end_ckpt_lsn: LSN = NULL_LSN      # last complete checkpoint's eCkpt LSN
+    bckpt_lsn: LSN = NULL_LSN         # its matching bCkpt LSN
+    rssp_rec_lsn: LSN = NULL_LSN      # DC's last RSSP record (carries DC meta)
+
+
+class LogManager:
+    def __init__(self):
+        self._recs: List[LogRec] = []
+        self._stable_idx: int = 0          # records [0, _stable_idx) are stable
+        self.master = Master()
+        self.forced_flushes = 0
+
+    # ---------------------------------------------------------------- append
+    def append(self, rec: LogRec) -> LSN:
+        rec.lsn = len(self._recs) + 1      # dense LSNs starting at 1
+        self._recs.append(rec)
+        return rec.lsn
+
+    def flush(self, upto: Optional[LSN] = None) -> LSN:
+        """Force the log to stable storage up to ``upto`` (default: all)."""
+        tgt = len(self._recs) if upto is None else min(upto, len(self._recs))
+        if tgt > self._stable_idx:
+            self._stable_idx = tgt
+            self.forced_flushes += 1
+        return self.stable_lsn
+
+    @property
+    def stable_lsn(self) -> LSN:
+        return self._stable_idx            # LSN of last stable record
+
+    @property
+    def end_lsn(self) -> LSN:
+        return len(self._recs)
+
+    def record(self, lsn: LSN) -> LogRec:
+        return self._recs[lsn - 1]
+
+    def scan(self, from_lsn: LSN, to_lsn: Optional[LSN] = None) -> Iterator[LogRec]:
+        """Yield stable records with lsn >= from_lsn (inclusive)."""
+        hi = self._stable_idx if to_lsn is None else min(to_lsn, self._stable_idx)
+        for i in range(max(from_lsn, 1) - 1, hi):
+            yield self._recs[i]
+
+    # ------------------------------------------------------------ checkpoint
+    def set_master(self, *, end_ckpt: Optional[LSN] = None,
+                   bckpt: Optional[LSN] = None,
+                   rssp_rec: Optional[LSN] = None) -> None:
+        if end_ckpt is not None:
+            self.master.end_ckpt_lsn = end_ckpt
+        if bckpt is not None:
+            self.master.bckpt_lsn = bckpt
+        if rssp_rec is not None:
+            self.master.rssp_rec_lsn = rssp_rec
+
+    # ---------------------------------------------------------------- crash
+    def crash(self) -> "LogManager":
+        """Return the stable image of this log (tail beyond stable point lost)."""
+        survivor = LogManager()
+        survivor._recs = self._recs[: self._stable_idx]
+        survivor._stable_idx = self._stable_idx
+        survivor.master = Master(self.master.end_ckpt_lsn,
+                                 self.master.bckpt_lsn,
+                                 self.master.rssp_rec_lsn)
+        return survivor
+
+    def n_log_pages(self, from_lsn: LSN) -> int:
+        n = max(0, self._stable_idx - (from_lsn - 1))
+        return (n + LOG_RECS_PER_PAGE - 1) // LOG_RECS_PER_PAGE
+
+    def __len__(self) -> int:
+        return len(self._recs)

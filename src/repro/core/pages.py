@@ -1,0 +1,139 @@
+"""Fixed-size pages: the DC's physical storage unit.
+
+A page is either a B-tree *leaf* (sorted record slots: key -> value bytes) or
+an *internal* index node (separator keys + child PIDs).  Pages carry two LSNs:
+
+  ``plsn``  — data LSN: the last *record operation* applied.  Drives the
+              redo idempotence test (op needs redo iff op.lsn > plsn).
+  ``slsn``  — structure LSN: the last SMO (split/root-growth) that shaped this
+              page.  Drives SMO-replay idempotence during DC recovery.
+
+They are separate on purpose: a split redistributes records without changing
+the *data* state, so it must not advance ``plsn`` — otherwise a recovery-time
+split would cause later record redos to be falsely skipped.  (WAL enforcement
+uses the buffer-level ``wal_lsn`` = max of every LSN applied to the buffer.)
+
+A CRC32 detects torn/corrupt stable writes at read time.  ``PAGE_SIZE``
+bounds the serialized size; the B-tree splits a page when an insert would
+overflow it.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass, field
+
+from .records import LSN, NULL_LSN, PID
+
+PAGE_SIZE = 8192
+_HDR = struct.Struct("<qqqBIH")     # pid, plsn, slsn, is_leaf, crc, n_entries
+_SLOT = struct.Struct("<HI")        # key_len, val_len
+_CHILD = struct.Struct("<q")
+
+SLOT_OVERHEAD = _SLOT.size
+
+
+class PageCorruptError(Exception):
+    pass
+
+
+@dataclass(slots=True)
+class Page:
+    pid: PID
+    is_leaf: bool = True
+    plsn: LSN = NULL_LSN
+    slsn: LSN = NULL_LSN
+    # leaf payload: mapping key -> value (both bytes)
+    records: dict = field(default_factory=dict)
+    # internal payload: keys[i] separates children[i] (<= keys[i]) from children[i+1]
+    keys: list = field(default_factory=list)
+    children: list = field(default_factory=list)
+
+    # ------------------------------------------------------------------ size
+    def payload_size(self) -> int:
+        if self.is_leaf:
+            return sum(len(k) + len(v) + SLOT_OVERHEAD for k, v in self.records.items())
+        return (sum(len(k) + SLOT_OVERHEAD for k in self.keys)
+                + len(self.children) * _CHILD.size)
+
+    def serialized_size(self) -> int:
+        return _HDR.size + self.payload_size()
+
+    def would_overflow(self, key: bytes, value: bytes,
+                       page_size: int = PAGE_SIZE) -> bool:
+        extra = len(key) + len(value) + SLOT_OVERHEAD
+        if self.is_leaf and key in self.records:
+            extra -= len(key) + len(self.records[key]) + SLOT_OVERHEAD
+        return self.serialized_size() + extra > page_size
+
+    # ------------------------------------------------------------- leaf ops
+    def get(self, key: bytes):
+        return self.records.get(key)
+
+    def put(self, key: bytes, value: bytes, lsn: LSN) -> None:
+        assert self.is_leaf
+        self.records[key] = value
+        if lsn > self.plsn:
+            self.plsn = lsn
+
+    def delete(self, key: bytes, lsn: LSN) -> bool:
+        assert self.is_leaf
+        existed = self.records.pop(key, None) is not None
+        if lsn > self.plsn:
+            self.plsn = lsn
+        return existed
+
+    # --------------------------------------------------------- serialization
+    def to_bytes(self) -> bytes:
+        if self.is_leaf:
+            items = sorted(self.records.items())
+            body = b"".join(_SLOT.pack(len(k), len(v)) + k + v for k, v in items)
+            n = len(items)
+        else:
+            assert len(self.children) == len(self.keys) + 1, "malformed internal node"
+            body = b"".join(_SLOT.pack(len(k), 0) + k for k in self.keys)
+            body += b"".join(_CHILD.pack(c) for c in self.children)
+            n = len(self.keys)
+        crc = zlib.crc32(body)
+        return _HDR.pack(self.pid, self.plsn, self.slsn,
+                         1 if self.is_leaf else 0, crc, n) + body
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "Page":
+        pid, plsn, slsn, is_leaf, crc, n = _HDR.unpack_from(raw, 0)
+        body = raw[_HDR.size:]
+        if zlib.crc32(body) != crc:
+            raise PageCorruptError(f"page {pid}: CRC mismatch (torn write?)")
+        off = 0
+        if is_leaf:
+            recs = {}
+            for _ in range(n):
+                klen, vlen = _SLOT.unpack_from(body, off)
+                off += _SLOT.size
+                k = body[off:off + klen]; off += klen
+                v = body[off:off + vlen]; off += vlen
+                recs[k] = v
+            return cls(pid=pid, is_leaf=True, plsn=plsn, slsn=slsn, records=recs)
+        keys = []
+        for _ in range(n):
+            klen, _vlen = _SLOT.unpack_from(body, off)
+            off += _SLOT.size
+            keys.append(body[off:off + klen]); off += klen
+        children = []
+        for _ in range(n + 1):
+            (c,) = _CHILD.unpack_from(body, off)
+            off += _CHILD.size
+            children.append(c)
+        return cls(pid=pid, is_leaf=False, plsn=plsn, slsn=slsn,
+                   keys=keys, children=children)
+
+    def clone(self) -> "Page":
+        return Page.from_bytes(self.to_bytes())
+
+
+def empty_leaf(pid: PID) -> Page:
+    return Page(pid=pid, is_leaf=True)
+
+
+def empty_internal(pid: PID) -> Page:
+    return Page(pid=pid, is_leaf=False)

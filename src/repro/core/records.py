@@ -1,0 +1,210 @@
+"""Log record types for logical + physiological recovery.
+
+One integrated log (as in the paper's SQL-Server-2008-derived prototype, Section
+5.1) carries every record kind.  Logical recovery ignores the PIDs present on
+update records; physiological (SQL1/SQL2) recovery ignores Delta-log records.
+
+LSNs are dense integers assigned by the LogManager.  ``NULL_LSN`` (=0) sorts
+before every real LSN.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+LSN = int
+PID = int
+TxnId = int
+
+NULL_LSN: LSN = 0
+NULL_PID: PID = -1
+
+
+class RecKind(enum.IntEnum):
+    UPDATE = 1          # logical record update (carries PID for physiological path)
+    INSERT = 2          # logical record insert
+    DELETE = 3          # logical record delete
+    COMMIT = 4
+    ABORT = 5
+    CLR = 6             # compensation log record (redo-only undo action)
+    BEGIN_CKPT = 7      # bCkpt
+    END_CKPT = 8        # eCkpt
+    BW = 9              # SQL Server buffer-write record (Section 3.3)
+    DELTA = 10          # DC Delta-log record (Section 4.1)
+    SMO = 11            # DC structure-modification (B-tree split / root change)
+    RSSP = 12           # DC acknowledgment of redo-scan-start-point (checkpoint)
+
+
+@dataclass(slots=True)
+class LogRec:
+    """Base; ``lsn`` is stamped by LogManager.append()."""
+    lsn: LSN = NULL_LSN
+
+    @property
+    def kind(self) -> RecKind:
+        raise NotImplementedError
+
+
+@dataclass(slots=True)
+class UpdateRec(LogRec):
+    """Logical update/insert/delete of a record.
+
+    Logical identity:   (table, key)                — used by Log0/Log1/Log2.
+    Physiological hint: pid                         — used by SQL1/SQL2 only.
+    ``before`` enables logical undo; ``after`` is the redo argument.
+    ``prev_lsn`` chains a transaction's records for undo.
+    """
+    txn: TxnId = 0
+    table: str = ""
+    key: bytes = b""
+    before: Optional[bytes] = None
+    after: Optional[bytes] = None
+    pid: PID = NULL_PID
+    prev_lsn: LSN = NULL_LSN
+    op: RecKind = RecKind.UPDATE
+
+    @property
+    def kind(self) -> RecKind:
+        return self.op
+
+
+@dataclass(slots=True)
+class CommitRec(LogRec):
+    txn: TxnId = 0
+    prev_lsn: LSN = NULL_LSN
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.COMMIT
+
+
+@dataclass(slots=True)
+class AbortRec(LogRec):
+    txn: TxnId = 0
+    prev_lsn: LSN = NULL_LSN
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.ABORT
+
+
+@dataclass(slots=True)
+class CLRRec(LogRec):
+    """Compensation record: the logical undo of ``undone_lsn``.
+
+    ``undo_next`` points at the next record of the txn still to undo, so undo
+    never repeats work after a crash during recovery (ARIES semantics).
+    The undo action itself is expressed logically (table/key/after-image).
+    """
+    txn: TxnId = 0
+    table: str = ""
+    key: bytes = b""
+    after: Optional[bytes] = None       # state the record is restored to
+    op: RecKind = RecKind.UPDATE        # UPDATE: set value; DELETE: remove; INSERT: add
+    pid: PID = NULL_PID
+    undone_lsn: LSN = NULL_LSN
+    undo_next: LSN = NULL_LSN
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.CLR
+
+
+@dataclass(slots=True)
+class BeginCkptRec(LogRec):
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.BEGIN_CKPT
+
+
+@dataclass(slots=True)
+class EndCkptRec(LogRec):
+    bckpt_lsn: LSN = NULL_LSN
+    active_txns: dict = field(default_factory=dict)   # txn -> last_lsn at bCkpt
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.END_CKPT
+
+
+@dataclass(slots=True)
+class BWRec(LogRec):
+    """SQL Server Buffer-Write record:  (WrittenSet, FW-LSN)."""
+    written_set: list[PID] = field(default_factory=list)
+    fw_lsn: LSN = NULL_LSN
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.BW
+
+
+@dataclass(slots=True)
+class DeltaRec(LogRec):
+    """DC Delta-log record (Section 4.1):
+
+        (DirtySet, WrittenSet, FW-LSN, FirstDirty, TC-LSN)
+
+    DirtySet:   PIDs appended on every page update (duplicates allowed, D.2).
+    WrittenSet: PIDs whose flush IO completed during the interval.
+    FW-LSN:     TC end-of-stable-log captured at the interval's first flush.
+    FirstDirty: index in DirtySet of the first PID dirtied after that flush.
+    TC-LSN:     TC end-of-stable-log at the time this record is written
+                (clamped to the last op the DC has applied — see DeltaAccumulator).
+    """
+    dirty_set: list[PID] = field(default_factory=list)
+    written_set: list[PID] = field(default_factory=list)
+    fw_lsn: LSN = NULL_LSN
+    first_dirty: int = 0
+    tc_lsn: LSN = NULL_LSN
+    # Appendix D.1 "perfect DPT" variant: per-DirtySet-entry update LSNs.
+    dirty_lsns: Optional[list[LSN]] = None
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.DELTA
+
+
+@dataclass(slots=True)
+class SMORec(LogRec):
+    """B-tree structure modification, logged by the DC (Section 2.1).
+
+    Physiological after-images of the affected index/leaf pages: this is DC
+    private physical information — allowed, since the DC owns placement.
+    ``images`` maps pid -> serialized page bytes as of this SMO.
+    ``root_pid``/``next_pid`` persist tree meta so DC recovery rebuilds a
+    well-formed tree before TC redo begins.
+    """
+    images: dict = field(default_factory=dict)        # PID -> bytes
+    root_pid: PID = NULL_PID
+    next_pid: PID = 0
+    height: int = 1
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.SMO
+
+
+@dataclass(slots=True)
+class RSSPRec(LogRec):
+    """DC acknowledgment that all pages dirtied by ops <= rssp_lsn are stable.
+
+    Also carries DC meta (root pid / allocator / height) so recovery can
+    bootstrap without a separate master file (the log's master pointer finds
+    this record).
+    """
+    rssp_lsn: LSN = NULL_LSN
+    root_pid: PID = NULL_PID
+    next_pid: PID = 0
+    height: int = 1
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.RSSP
+
+
+UPDATE_KINDS = (RecKind.UPDATE, RecKind.INSERT, RecKind.DELETE)
+
+
+def is_update(rec: LogRec) -> bool:
+    return isinstance(rec, UpdateRec)

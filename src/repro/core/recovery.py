@@ -1,0 +1,261 @@
+"""Crash recovery: the five strategies of the paper's performance study
+(Section 5.2), all consuming the same crash image + common log.
+
+  Log0: basic logical redo (Algorithm 2) — traverse + fetch every page.
+  Log1: logical redo with the Delta-record DPT (Algorithms 4+5).
+  Log2: Log1 + index-page preload + PF-list data prefetch (Appendix A).
+  SQL1: physiological redo with the BW-record DPT (Algorithms 1+3).
+  SQL2: SQL1 + log-driven data prefetch.
+
+Every strategy shares: the SMO replay pass (well-formed B-tree / index pages —
+"the only difference in methods is the time at which these SMO recovery
+operations are executed", Section 2.1), the analysis scan that builds the
+transaction table, and the final logical undo pass for loser transactions.
+"""
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .dc import DataComponent, RedoStats, make_key
+from .dpt import DPT, build_dpt_sql
+from .log import LogManager
+from .records import (LSN, NULL_LSN, AbortRec, BeginCkptRec, CLRRec,
+                      CommitRec, DeltaRec, EndCkptRec, RecKind, UpdateRec)
+from .storage import DiskModel, IOSim, IOStats, PageStore
+from .tc import CrashImage, Database, TransactionalComponent
+
+
+class Strategy(enum.Enum):
+    LOG0 = "Log0"
+    LOG1 = "Log1"
+    LOG2 = "Log2"
+    SQL1 = "SQL1"
+    SQL2 = "SQL2"
+
+    @property
+    def logical(self) -> bool:
+        return self in (Strategy.LOG0, Strategy.LOG1, Strategy.LOG2)
+
+    @property
+    def uses_dpt(self) -> bool:
+        return self is not Strategy.LOG0
+
+    @property
+    def prefetches(self) -> bool:
+        return self in (Strategy.LOG2, Strategy.SQL2)
+
+
+@dataclass
+class RecoveryStats:
+    strategy: str = ""
+    scan_from: LSN = NULL_LSN
+    log_records: int = 0
+    dpt_size: int = 0
+    redo: RedoStats = field(default_factory=RedoStats)
+    io: IOStats = field(default_factory=IOStats)
+    index_fetches: int = 0
+    losers: int = 0
+    undone_ops: int = 0
+    analysis_ms: float = 0.0
+    redo_wall_ms: float = 0.0
+    total_wall_ms: float = 0.0
+    modeled_redo_ms: float = 0.0
+
+
+# --------------------------------------------------------------------------
+def analyze_txns(log: LogManager, scan_from: LSN) -> tuple[dict, set, set]:
+    """ARIES analysis: transaction table at crash.  Returns
+    (active: txn -> last chain LSN, committed, aborted)."""
+    active: dict[int, LSN] = {}
+    committed: set[int] = set()
+    aborted: set[int] = set()
+    m = log.master
+    if m.end_ckpt_lsn != NULL_LSN:
+        eck = log.record(m.end_ckpt_lsn)
+        if isinstance(eck, EndCkptRec):
+            active.update(eck.active_txns)
+    for rec in log.scan(scan_from):
+        if isinstance(rec, UpdateRec):
+            active[rec.txn] = rec.lsn
+        elif isinstance(rec, CLRRec):
+            active[rec.txn] = rec.lsn
+        elif isinstance(rec, CommitRec):
+            active.pop(rec.txn, None)
+            committed.add(rec.txn)
+        elif isinstance(rec, AbortRec):
+            active.pop(rec.txn, None)
+            aborted.add(rec.txn)
+    return active, committed, aborted
+
+
+def _redo_physiological(dc: DataComponent, dpt: DPT, rec, stats: RedoStats) -> None:
+    """Algorithm 1: ARIES/SQL-Server redo with DPT + rLSN + pLSN tests.
+    No index traversal: the log record's PID addresses the page directly."""
+    stats.submitted += 1
+    e = dpt.find(rec.pid)
+    if e is None or rec.lsn < e.rlsn:
+        stats.skipped_dpt += 1
+        return
+    page = dc.pool.get(rec.pid)
+    k = make_key(rec.table, rec.key)
+    if page is None:
+        # page never reached stable storage and its creating SMO is in the
+        # lost tail: repeat history logically.
+        stats.redone += 1
+        if rec.op == RecKind.DELETE or rec.after is None:
+            dc.btree.delete(k, rec.lsn)
+        else:
+            dc.btree.put(k, rec.after, rec.lsn)
+        return
+    if rec.lsn <= page.plsn:
+        stats.skipped_plsn += 1
+        return
+    dc._reexecute(rec, k, rec.pid)
+
+
+# --------------------------------------------------------------------------
+def recover(image: CrashImage, strategy: Strategy, *,
+            cache_pages: int = 4096,
+            disk: Optional[DiskModel] = None,
+            work_ms_per_op: float = 0.02,
+            lookahead: int = 64,
+            delta_mode: str = "paper",
+            page_size: int = None,
+            run_undo: bool = True) -> tuple[Database, RecoveryStats]:
+    """Recover a crash image with one strategy; returns a live Database that
+    can continue normal execution, plus the instrumented stats."""
+    t0 = time.perf_counter()
+    store = image.store.clone()
+    log = image.log.crash()            # stable prefix, private copy
+    iosim = IOSim(disk or DiskModel())
+    dc = DataComponent(store, log, cache_pages, delta_mode=delta_mode,
+                       side_by_side=True, page_size=page_size)
+    dc.pool.iosim = iosim
+    stats = RecoveryStats(strategy=strategy.value)
+
+    m = log.master
+    scan_from = m.bckpt_lsn if m.bckpt_lsn != NULL_LSN else 1
+    stats.scan_from = scan_from
+
+    # ------------------------------------------------ analysis + DC recovery
+    iosim.log_read(log.n_log_pages(scan_from))        # analysis log pass
+    active, committed, aborted = analyze_txns(log, scan_from)
+    dc.recover(scan_from, rssp_lsn=m.bckpt_lsn,
+               build_dpt=strategy.logical and strategy.uses_dpt,
+               preload_index=(strategy is Strategy.LOG2))
+    dpt: Optional[DPT] = None
+    if strategy.logical and strategy.uses_dpt:
+        dpt = dc.dpt
+    elif not strategy.logical:
+        dpt = build_dpt_sql(log, m.bckpt_lsn)
+    stats.dpt_size = len(dpt) if dpt is not None else 0
+    stats.analysis_ms = (time.perf_counter() - t0) * 1e3
+
+    # ---------------------------------------------------------- redo pass
+    t1 = time.perf_counter()
+    iosim.log_read(log.n_log_pages(scan_from))        # redo log pass
+    redo_recs = [r for r in log.scan(scan_from)
+                 if isinstance(r, (UpdateRec, CLRRec))]
+    stats.log_records = len(redo_recs)
+
+    pf_ptr = 0                                        # Log2 PF-list cursor
+    for i, rec in enumerate(redo_recs):
+        iosim.work(work_ms_per_op)
+        if strategy is Strategy.LOG2 and dc.pf_list:
+            # PF-list driven read-ahead: stay `lookahead` pages ahead
+            target = min(len(dc.pf_list), i + lookahead)
+            while pf_ptr < target:
+                batch = dc.pf_list[pf_ptr:min(pf_ptr + 8, target)]
+                iosim.prefetch(batch, contiguous=True)
+                pf_ptr += len(batch)
+        elif strategy is Strategy.SQL2 and dpt is not None:
+            # log-driven read-ahead over the next `lookahead` records
+            for fut in redo_recs[i + 1: i + 1 + lookahead]:
+                e = dpt.find(fut.pid)
+                if e is not None and fut.lsn >= e.rlsn:
+                    iosim.prefetch([fut.pid], contiguous=True)
+
+        if strategy is Strategy.LOG0:
+            dc.redo_basic(rec)
+        elif strategy.logical:
+            dc.redo_with_dpt(rec)
+        else:
+            _redo_physiological(dc, dpt, rec, dc.redo_stats)
+
+    stats.redo = dc.redo_stats
+    stats.redo_wall_ms = (time.perf_counter() - t1) * 1e3
+    stats.io = iosim.finish()
+    stats.modeled_redo_ms = stats.io.modeled_ms
+    # detach the IO model: undo / end-of-recovery checkpoint / post-recovery
+    # reads must not pollute the redo-pass accounting (the paper measures
+    # redo only, Section 2.1)
+    dc.pool.iosim = None
+
+    # ----------------------------------------------------------- undo pass
+    tc = TransactionalComponent(log, dc)
+    tc.active = dict(active)
+    # txn ids must never be reused across restarts (a new txn id colliding
+    # with a pre-crash aborted txn would corrupt outcome attribution)
+    max_txn = 0
+    for r in log.scan(1):
+        t = getattr(r, "txn", None)
+        if t is not None and t > max_txn:
+            max_txn = t
+    tc._next_txn = max_txn + 1
+    stats.losers = len(active)
+    if run_undo:
+        before = len(log)
+        for txn in sorted(active, key=lambda t: -active[t]):
+            tc.abort(txn)
+        stats.undone_ops = len(log) - before - len(active)  # CLRs written
+
+    # ----------------------------------------------- end-of-recovery checkpoint
+    # Mandatory for a *live* database: pages dirtied by redo carry their
+    # original (old) LSNs, which would violate the Delta-record rLSN
+    # approximation ("pages in a DirtySet were dirtied by ops newer than the
+    # previous Delta record's TC-LSN") for any post-recovery Delta record.
+    # Flushing them here — exactly what SQL Server's end-of-recovery
+    # checkpoint does — restores the invariant and resets the redo baseline.
+    tc.checkpoint()
+
+    db = Database.__new__(Database)
+    db.store, db.log, db.dc, db.tc = store, log, dc, tc
+    db.tracker_interval = 100
+    db.bg_flush_per_txn = 0
+    db._updates_since_tracker = 0
+    stats.total_wall_ms = (time.perf_counter() - t0) * 1e3
+    return db, stats
+
+
+# --------------------------------------------------------------------------
+def committed_state_oracle(image: CrashImage,
+                           base: Optional[dict[bytes, bytes]] = None
+                           ) -> dict[bytes, bytes]:
+    """Ground truth: the database state recovery must reproduce — all
+    committed transactions' effects (in LSN order) applied over the
+    bulk-loaded ``base`` rows (composite keys), nothing else.
+
+    Aborted transactions and losers contribute nothing: their updates are
+    compensated (aborts) or undone (losers) by recovery, and with the
+    serializable workloads our harness generates, net effect is absence."""
+    log = image.log
+    committed: set[int] = set()
+    for rec in log.scan(1):
+        if isinstance(rec, CommitRec):
+            committed.add(rec.txn)
+    state: dict[bytes, bytes] = dict(base or {})
+    for rec in log.scan(1):
+        if isinstance(rec, UpdateRec) and rec.txn in committed:
+            k = make_key(rec.table, rec.key)
+            if rec.op == RecKind.DELETE:
+                state.pop(k, None)
+            else:
+                state[k] = rec.after
+    return state
+
+
+def recovered_state(db: Database) -> dict[bytes, bytes]:
+    return dict(db.scan_all())

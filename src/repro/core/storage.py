@@ -1,0 +1,183 @@
+"""Stable page store + the IO cost simulator.
+
+The store holds *serialized* pages only (what survives a crash).  A
+deterministic discrete-time disk model prices every access so recovery
+strategies can be compared by modeled wall time as in the paper (whose costs
+are IO-count driven — Appendix B, Eq. 1-3) even though this container serves
+everything from RAM.
+
+Model (defaults tuned to commodity-2011 disk behaviour, configurable):
+  * random (sync, demand) page read ............ ``t_rand``      (8 ms)
+  * sequential log page read ................... ``t_seq``       (0.5 ms)
+  * block read of <=8 contiguous pages ......... ``t_block``     (10 ms, 1 IO)
+  * async prefetch: ``width`` concurrent requests; a demand hit on an
+    in-flight page stalls only for its residual service time.
+
+The simulator keeps a single clock per recovery run; prefetch IOs complete in
+issue order on ``width`` independent channels.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional
+
+from .pages import Page
+from .records import NULL_PID, PID
+
+
+@dataclass
+class IOStats:
+    sync_reads: int = 0            # demand-fetch random reads (stalled)
+    prefetch_reads: int = 0        # pages brought in by prefetch IOs
+    prefetch_ios: int = 0          # physical prefetch requests (blocks count 1)
+    prefetch_hits: int = 0         # demand requests satisfied with zero stall
+    partial_stalls: int = 0        # demand hit an in-flight prefetch
+    log_pages: int = 0
+    page_writes: int = 0
+    modeled_ms: float = 0.0
+
+    def total_reads(self) -> int:
+        return self.sync_reads + self.prefetch_reads
+
+
+@dataclass
+class DiskModel:
+    t_rand: float = 8.0
+    t_seq: float = 0.5
+    t_block: float = 10.0
+    block_size: int = 8
+    width: int = 4                 # concurrent prefetch channels
+
+
+class IOSim:
+    """Discrete-time disk: demand reads advance the clock; prefetches are
+    queued onto ``width`` channels and overlap with redo 'work'."""
+
+    def __init__(self, model: Optional[DiskModel] = None):
+        self.m = model or DiskModel()
+        self.stats = IOStats()
+        self.clock = 0.0
+        self._channels = [0.0] * self.m.width       # per-channel busy-until
+        self._inflight: Dict[PID, float] = {}       # pid -> completion time
+        self._done: set[PID] = set()                # prefetched & completed
+
+    # -------------------------------------------------------------- demand IO
+    def demand_read(self, pid: PID) -> None:
+        """Synchronous random read of one page (redo stalls)."""
+        if pid in self._done:
+            self.stats.prefetch_hits += 1
+            self._done.discard(pid)
+            return
+        t = self._inflight.pop(pid, None)
+        if t is not None:
+            # stall only for the residual prefetch time
+            if t > self.clock:
+                self.stats.partial_stalls += 1
+                self.clock = t
+            else:
+                self.stats.prefetch_hits += 1
+            self._done.discard(pid)
+            return
+        self.stats.sync_reads += 1
+        self.clock += self.m.t_rand
+
+    def log_read(self, n_pages: int = 1) -> None:
+        self.stats.log_pages += n_pages
+        self.clock += n_pages * self.m.t_seq
+
+    def write(self, n_pages: int = 1) -> None:
+        self.stats.page_writes += n_pages
+
+    # ------------------------------------------------------------- prefetch IO
+    def prefetch(self, pids: Iterable[PID], contiguous: bool = False) -> None:
+        """Issue an async read.  Contiguous runs of <= block_size pages cost a
+        single block IO (SQL Server's 8-page blocks, Appendix A)."""
+        pids = [p for p in pids if p not in self._done and p not in self._inflight]
+        if not pids:
+            return
+        groups: list[list[PID]] = []
+        if contiguous:
+            run: list[PID] = []
+            for p in sorted(pids):
+                if run and (p != run[-1] + 1 or len(run) >= self.m.block_size):
+                    groups.append(run)
+                    run = []
+                run.append(p)
+            if run:
+                groups.append(run)
+        else:
+            groups = [[p] for p in pids]
+        for g in groups:
+            ch = min(range(len(self._channels)), key=self._channels.__getitem__)
+            start = max(self.clock, self._channels[ch])
+            cost = self.m.t_block if len(g) > 1 else self.m.t_rand
+            fin = start + cost
+            self._channels[ch] = fin
+            self.stats.prefetch_ios += 1
+            self.stats.prefetch_reads += len(g)
+            for p in g:
+                self._inflight[p] = fin
+
+    def work(self, ms: float) -> None:
+        """Non-IO redo work advances the clock (lets prefetch overlap)."""
+        self.clock += ms
+        done = [p for p, t in self._inflight.items() if t <= self.clock]
+        for p in done:
+            self._done.add(p)
+            del self._inflight[p]
+
+    def finish(self) -> IOStats:
+        self.stats.modeled_ms = self.clock
+        return self.stats
+
+
+class PageStore:
+    """Crash-stable storage: serialized pages + a tiny 'master' blob.
+
+    ``clone()`` snapshots the stable state (used to build crash images that
+    several recovery strategies each recover independently)."""
+
+    def __init__(self):
+        self._pages: Dict[PID, bytes] = {}
+        self._next_pid: PID = 1
+        self.master: dict = {}          # e.g. {'rssp_rec_lsn': ..., 'ckpt_lsn': ...}
+
+    # allocation happens in the DC (volatile counter persisted via RSSP/SMO recs)
+    def allocate_pid(self) -> PID:
+        pid = self._next_pid
+        self._next_pid += 1
+        return pid
+
+    def set_next_pid(self, nxt: PID) -> None:
+        self._next_pid = max(self._next_pid, nxt)
+
+    @property
+    def next_pid(self) -> PID:
+        return self._next_pid
+
+    def write_page(self, page: Page) -> None:
+        self._pages[page.pid] = page.to_bytes()
+
+    def write_raw(self, pid: PID, raw: bytes) -> None:
+        self._pages[pid] = raw
+
+    def read_page(self, pid: PID) -> Optional[Page]:
+        raw = self._pages.get(pid)
+        return Page.from_bytes(raw) if raw is not None else None
+
+    def has_page(self, pid: PID) -> bool:
+        return pid in self._pages
+
+    def pids(self):
+        return self._pages.keys()
+
+    def clone(self) -> "PageStore":
+        s = PageStore()
+        s._pages = dict(self._pages)
+        s._next_pid = self._next_pid
+        s.master = dict(self.master)
+        return s
+
+    def __len__(self) -> int:
+        return len(self._pages)

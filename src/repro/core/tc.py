@@ -1,0 +1,176 @@
+"""Transactional Component (TC): logical locking surface, logical logging,
+checkpointing (RSSP), and the recovery driver's transaction table.
+
+The TC never sees a PID: it logs (table, key, before, after).  In the
+side-by-side prototype the DC stamps the touched PID back onto the shared log
+record *after* applying — exactly how the paper's SQL-Server-derived prototype
+keeps one log serving both recovery families (Section 5.1); logical recovery
+ignores that field.
+
+``Database`` is the harness: normal execution, checkpoints, trackers,
+background flushing, and crash-image capture.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .dc import DataComponent
+from .log import LogManager
+from .records import (LSN, NULL_LSN, AbortRec, BeginCkptRec, CLRRec,
+                      CommitRec, EndCkptRec, RecKind, TxnId, UpdateRec)
+from .storage import PageStore
+
+
+class TransactionalComponent:
+    def __init__(self, log: LogManager, dc: DataComponent):
+        self.log = log
+        self.dc = dc
+        self.active: dict[TxnId, LSN] = {}       # txn -> last LSN of its chain
+        self._next_txn: TxnId = 1
+
+    # ------------------------------------------------------------------ txns
+    def begin(self) -> TxnId:
+        txn = self._next_txn
+        self._next_txn += 1
+        self.active[txn] = NULL_LSN
+        return txn
+
+    def _log_op(self, txn: TxnId, table: str, key: bytes,
+                before: Optional[bytes], after: Optional[bytes],
+                op: RecKind) -> UpdateRec:
+        rec = UpdateRec(txn=txn, table=table, key=key, before=before,
+                        after=after, prev_lsn=self.active[txn], op=op)
+        self.log.append(rec)
+        self.active[txn] = rec.lsn
+        self.dc.apply(rec)       # DC stamps rec.pid (prototype common log)
+        return rec
+
+    def update(self, txn: TxnId, table: str, key: bytes, value: bytes) -> None:
+        before = self.dc.read(table, key)
+        self._log_op(txn, table, key, before, value, RecKind.UPDATE)
+
+    def insert(self, txn: TxnId, table: str, key: bytes, value: bytes) -> None:
+        self._log_op(txn, table, key, None, value, RecKind.INSERT)
+
+    def delete(self, txn: TxnId, table: str, key: bytes) -> None:
+        before = self.dc.read(table, key)
+        self._log_op(txn, table, key, before, None, RecKind.DELETE)
+
+    def commit(self, txn: TxnId) -> None:
+        rec = CommitRec(txn=txn, prev_lsn=self.active[txn])
+        self.log.append(rec)
+        self.log.flush()                          # group-commit force
+        self.dc.eosl(self.log.stable_lsn)         # EOSL push
+        del self.active[txn]
+
+    def abort(self, txn: TxnId) -> None:
+        """Logical undo of the transaction's chain, writing CLRs."""
+        lsn = self.active[txn]
+        while lsn != NULL_LSN:
+            rec = self.log.record(lsn)
+            if isinstance(rec, UpdateRec):
+                self._compensate(txn, rec)
+                lsn = rec.prev_lsn
+            elif isinstance(rec, CLRRec):
+                lsn = rec.undo_next
+            else:
+                break
+        arec = AbortRec(txn=txn, prev_lsn=self.active[txn])
+        self.log.append(arec)
+        self.log.flush()
+        del self.active[txn]
+
+    def _compensate(self, txn: TxnId, rec: UpdateRec) -> None:
+        """Undo one update logically; the CLR is redo-only."""
+        if rec.op == RecKind.INSERT:
+            clr = CLRRec(txn=txn, table=rec.table, key=rec.key, after=None,
+                         op=RecKind.DELETE, undone_lsn=rec.lsn,
+                         undo_next=rec.prev_lsn)
+        else:   # UPDATE or DELETE: restore the before image
+            clr = CLRRec(txn=txn, table=rec.table, key=rec.key,
+                         after=rec.before, op=RecKind.UPDATE,
+                         undone_lsn=rec.lsn, undo_next=rec.prev_lsn)
+        self.log.append(clr)
+        self.active[txn] = clr.lsn
+        self.dc.apply_clr(clr)
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self) -> LSN:
+        """Penultimate-scheme checkpoint, coordinated with the DC via RSSP.
+        Returns the bCkpt LSN (= redo scan start once complete)."""
+        b = BeginCkptRec()
+        self.log.append(b)
+        self.log.flush()
+        self.dc.rssp(b.lsn)                       # DC flushes + logs RSSP rec
+        e = EndCkptRec(bckpt_lsn=b.lsn, active_txns=dict(self.active))
+        self.log.append(e)
+        self.log.flush()
+        self.log.set_master(end_ckpt=e.lsn, bckpt=b.lsn)
+        return b.lsn
+
+
+@dataclass
+class CrashImage:
+    """What survives: the stable page store and the stable log prefix."""
+    store: PageStore
+    log: LogManager
+
+
+class Database:
+    """Side-by-side prototype harness (Section 5): one normal execution run
+    produces a common log + crash image that every recovery strategy consumes."""
+
+    def __init__(self, cache_pages: int = 4096, delta_mode: str = "paper",
+                 side_by_side: bool = True, tracker_interval: int = 100,
+                 bg_flush_per_txn: int = 0, page_size: int = None):
+        self.store = PageStore()
+        self.log = LogManager()
+        self.dc = DataComponent(self.store, self.log, cache_pages,
+                                delta_mode=delta_mode, side_by_side=side_by_side,
+                                page_size=page_size)
+        self.tc = TransactionalComponent(self.log, self.dc)
+        self.tracker_interval = tracker_interval
+        self.bg_flush_per_txn = bg_flush_per_txn
+        self._updates_since_tracker = 0
+
+    # ---------------------------------------------------------------- setup
+    def bootstrap_empty(self) -> None:
+        self.dc.bootstrap()
+        self.tc.checkpoint()
+
+    def load_table(self, table: str, rows: list[tuple[bytes, bytes]]) -> None:
+        from .dc import make_key
+        self.dc.bulk_build([(make_key(table, k), v) for k, v in rows])
+        self.tc.checkpoint()
+
+    # ------------------------------------------------------------- workload
+    def run_txn(self, ops: list[tuple[str, str, bytes, Optional[bytes]]]) -> None:
+        """ops: (verb, table, key, value) with verb in {update, insert, delete}."""
+        txn = self.tc.begin()
+        for verb, table, key, value in ops:
+            if verb == "update":
+                self.tc.update(txn, table, key, value)
+            elif verb == "insert":
+                self.tc.insert(txn, table, key, value)
+            else:
+                self.tc.delete(txn, table, key)
+            self._updates_since_tracker += 1
+            if self._updates_since_tracker >= self.tracker_interval:
+                self.dc.emit_trackers()
+                self._updates_since_tracker = 0
+        self.tc.commit(txn)
+        if self.bg_flush_per_txn:
+            self.dc.maybe_background_flush(self.bg_flush_per_txn)
+
+    def checkpoint(self) -> LSN:
+        return self.tc.checkpoint()
+
+    # ----------------------------------------------------------------- crash
+    def crash(self) -> CrashImage:
+        return CrashImage(store=self.store.clone(), log=self.log.crash())
+
+    # ------------------------------------------------------------- inspection
+    def scan_all(self) -> list[tuple[bytes, bytes]]:
+        return self.dc.btree.items()

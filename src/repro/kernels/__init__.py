@@ -1,0 +1,2 @@
+from .ops import (delta_apply, flash_attention, group_updates_by_page,
+                  ssd_scan, use_interpret, wkv6)

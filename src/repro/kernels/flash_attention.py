@@ -1,0 +1,117 @@
+"""Flash attention Pallas TPU kernel (causal, GQA).
+
+Online-softmax attention tiled for VMEM: the grid is
+(batch, q_heads, q_blocks, kv_blocks); the last grid dim is sequential on
+TPU, so the running (max, denom, accumulator) live in VMEM scratch across
+kv-block steps and the output tile is finalized at the last kv step.
+
+Block shapes are MXU-aligned (q_block x head_dim, head_dim multiples of 128
+preferred; 64 works at half MXU utilization).  The kv-block index map drives
+GQA: q head h reads kv head h // (H // KV).
+
+Causal blocks strictly above the diagonal are skipped with @pl.when — the
+kernel does no work for them (the jnp reference computes-and-masks instead;
+that difference is the kernel's win besides memory locality).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_Q_BLOCK = 128
+DEFAULT_KV_BLOCK = 128
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, scale: float, q_block: int, kv_block: int,
+                  kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (not causal) or (ki * kv_block <= qi * q_block + q_block - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)              # (Cq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (Ck, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # (Cq, Ck)
+        if causal:
+            qpos = qi * q_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 0)
+            kpos = ki * kv_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_block: int = DEFAULT_Q_BLOCK,
+                    kv_block: int = DEFAULT_KV_BLOCK,
+                    interpret: bool = False):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale, q_block=q_block,
+        kv_block=kv_block, kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, hd), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

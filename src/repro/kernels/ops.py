@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes as traced jax ops, validating logic against the oracles in ref.py.
+On TPU they compile to Mosaic.  ``use_interpret()`` picks automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .delta_apply import delta_apply as _delta_apply
+from .flash_attention import flash_attention as _flash
+from .ssd_scan import ssd_scan as _ssd
+from .wkv6 import wkv6 as _wkv6
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block"))
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128):
+    return _flash(q, k, v, causal=causal, q_block=q_block, kv_block=kv_block,
+                  interpret=use_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, logw, u, *, chunk: int = 64):
+    return _wkv6(r, k, v, logw, u, chunk=chunk, interpret=use_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, B_in, C_in, A, *, chunk: int = 128):
+    return _ssd(x, dt, B_in, C_in, A, chunk=chunk, interpret=use_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("additive",))
+def delta_apply(pages, vals, slot_idx, mask, *, additive: bool = False):
+    return _delta_apply(pages, vals, slot_idx, mask, additive=additive,
+                        interpret=use_interpret())
+
+
+def group_updates_by_page(page_idx: np.ndarray, n_pages: int,
+                          vals: np.ndarray, slots: np.ndarray,
+                          apply_mask: np.ndarray, max_upd: int | None = None):
+    """Host-side packer: (flat update stream) -> per-page dense batches for
+    the delta_apply kernel.  Preserves log order within each page (so
+    last-writer-wins assign semantics match LSN order)."""
+    order = np.argsort(page_idx, kind="stable")
+    width = vals.shape[-1]
+    counts = np.bincount(page_idx, minlength=n_pages)
+    m = int(counts.max()) if counts.size else 0
+    max_upd = max_upd or max(m, 1)
+    v = np.zeros((n_pages, max_upd, width), vals.dtype)
+    s = np.zeros((n_pages, max_upd), np.int32)
+    msk = np.zeros((n_pages, max_upd), bool)
+    fill = np.zeros(n_pages, np.int32)
+    for u in order:
+        p = page_idx[u]
+        j = fill[p]
+        if j >= max_upd:
+            raise ValueError(f"page {p} exceeds max_upd={max_upd}")
+        v[p, j] = vals[u]
+        s[p, j] = slots[u]
+        msk[p, j] = apply_mask[u]
+        fill[p] = j + 1
+    return v, s, msk

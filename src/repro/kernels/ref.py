@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every kernel — the ground truth the Pallas kernels
+are allclose-tested against (tests/test_kernels.py sweeps shapes/dtypes)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Skv,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (Sq, Skv), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (Sq, Skv), 1)
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Exact sequential recurrence.  r,k,v,logw: (B,H,T,hd); u: (H,hd)."""
+    B, H, T, hd = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp                 # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = jnp.exp(lw_t)[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0)
+               for a in (r, k, v, logw))
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype)
+
+
+def ssd_scan_ref(x, dt, B_in, C_in, A):
+    """Exact sequential SSD.  x: (B,H,T,P); dt: (B,H,T); B/C: (B,T,N); A: (H,)."""
+    Bsz, H, T, P = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                 # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(A[None, :] * dt_t)[..., None, None]
+        upd = dt_t[..., None, None] * x_t[..., :, None] * b_t[:, None, None, :]
+        h = decay * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(B_in.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C_in.astype(jnp.float32), 1, 0))
+    h0 = jnp.zeros((Bsz, H, P, B_in.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)
+
+
+def delta_apply_ref(pages, vals, slot_idx, mask, *, additive: bool = False):
+    """Sequential masked scatter, one page at a time."""
+    def per_page(page, v, s, m):
+        def body(u, pg):
+            cur = pg[s[u]]
+            new = pg[s[u]] + v[u] if additive else v[u]
+            return pg.at[s[u]].set(jnp.where(m[u], new, cur))
+        return jax.lax.fori_loop(0, v.shape[0], body, page)
+    return jax.vmap(per_page)(pages, vals, slot_idx, mask)

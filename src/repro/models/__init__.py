@@ -1,0 +1,1 @@
+from .api import ModelAPI, build_model, make_batch

@@ -1,0 +1,136 @@
+"""Unified model API: one surface over all ten architectures.
+
+    api = build_model(cfg)
+    params = api.init(rng)
+    loss   = api.loss(params, batch)                  # train
+    logits, cache = api.prefill(params, batch)        # inference prefill
+    logits, cache = api.decode(params, cache, tokens) # one decode step
+    cache  = api.init_cache(batch_size, max_len)      # decode-only lowering
+
+Batch dict keys: 'tokens' (B,S) int32 always; 'patches' (B,Np,D) for vlm;
+'frames' (B,Ta,D) for audio — modality frontends are stubs per assignment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import lm, rwkv6, whisper, zamba2
+from .layers import dtype_of
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[Any], dict]
+    loss: Callable[[dict, dict], jax.Array]
+    prefill: Callable[[dict, dict], tuple]
+    decode: Callable[[dict, dict, jax.Array], tuple]
+    init_cache: Callable[[int, int], dict]
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def init(rng):
+            return lm.init_lm(cfg, rng)
+
+        def loss(params, batch):
+            return lm.loss_fn(params, batch, cfg)
+
+        def prefill_fn(params, batch):
+            return lm.prefill(params, batch["tokens"], cfg,
+                              patches=batch.get("patches"))
+
+        def decode_fn(params, cache, tokens):
+            return lm.decode_step(params, cache, tokens, cfg)
+
+        def init_cache(batch, max_len):
+            from .layers import init_kv_cache
+            c = init_kv_cache(cfg, batch, max_len)
+            return c
+
+    elif fam == "ssm":
+        def init(rng):
+            return rwkv6.init_rwkv6(cfg, rng)
+
+        def loss(params, batch):
+            return rwkv6.loss_fn(params, batch, cfg)
+
+        def prefill_fn(params, batch):
+            return rwkv6.prefill(params, batch["tokens"], cfg)
+
+        def decode_fn(params, cache, tokens):
+            return rwkv6.decode_step(params, cache, tokens, cfg)
+
+        def init_cache(batch, max_len):
+            return {"state": rwkv6.init_state(cfg, batch),
+                    "len": jnp.zeros((), jnp.int32)}
+
+    elif fam == "hybrid":
+        def init(rng):
+            return zamba2.init_zamba2(cfg, rng)
+
+        def loss(params, batch):
+            return zamba2.loss_fn(params, batch, cfg)
+
+        def prefill_fn(params, batch):
+            return zamba2.prefill(params, batch["tokens"], cfg,
+                                  max_len=batch["tokens"].shape[1] + 8)
+
+        def decode_fn(params, cache, tokens):
+            return zamba2.decode_step(params, cache, tokens, cfg)
+
+        def init_cache(batch, max_len):
+            return zamba2.init_state(cfg, batch, max_len)
+
+    elif fam == "audio":
+        def init(rng):
+            return whisper.init_whisper(cfg, rng)
+
+        def loss(params, batch):
+            return whisper.loss_fn(params, batch, cfg)
+
+        def prefill_fn(params, batch):
+            return whisper.prefill(params, batch["tokens"], batch["frames"],
+                                   cfg, max_len=batch["tokens"].shape[1] + 8)
+
+        def decode_fn(params, cache, tokens):
+            return whisper.decode_step(params, cache, tokens, cfg)
+
+        def init_cache(batch, max_len):
+            L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+            dt = dtype_of(cfg)
+            return {
+                "k": jnp.zeros((L, batch, max_len, KV, hd), dt),
+                "v": jnp.zeros((L, batch, max_len, KV, hd), dt),
+                "cross_k": jnp.zeros((L, batch, cfg.enc_ctx, KV, hd), dt),
+                "cross_v": jnp.zeros((L, batch, cfg.enc_ctx, KV, hd), dt),
+                "len": jnp.zeros((), jnp.int32),
+            }
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return ModelAPI(cfg=cfg, init=init, loss=loss, prefill=prefill_fn,
+                    decode=decode_fn, init_cache=init_cache)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, rng=None,
+               for_loss: bool = True) -> dict:
+    """Concrete (smoke-test) batch; mirrors launch/specs.input_specs."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size,
+                                        dtype=jnp.int32)}
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k2, (batch, cfg.n_patches, cfg.d_model)).astype(dtype_of(cfg))
+    elif cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.enc_ctx, cfg.d_model)).astype(dtype_of(cfg))
+    return out

@@ -1,0 +1,231 @@
+"""Decoder-only LM covering the dense / moe / vlm families
+(stablelm, qwen2.5, qwen3, llama3.2, moonshot-moe, qwen3-moe, pixtral).
+
+Layers are weight-stacked and executed with ``jax.lax.scan`` (optionally
+rematerialized), so HLO size and compile time are depth-independent.
+VLM (pixtral): the stub frontend supplies pre-projected patch embeddings that
+are prepended to the token sequence; loss covers text positions only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import (attention, attention_decode, dtype_of, init_attention,
+                     init_kv_cache, init_mlp, init_moe, init_norm, mlp,
+                     moe_ffn, norm, shard_hint)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- init
+def init_lm(cfg: ModelConfig, rng) -> dict:
+    L = cfg.n_layers
+    n_dense = cfg.first_dense_layers
+    n_scan = L - n_dense
+    k_emb, k_blocks, k_dense, k_head = jax.random.split(rng, 4)
+    dt = dtype_of(cfg)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: dict = {
+        "embed": (jax.random.normal(k_emb, (V, D)) * 0.02).astype(dt),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (D, V))
+                             / math.sqrt(D)).astype(dt)
+
+    def make_block(key, prefix):
+        ka, km = jax.random.split(key)
+        block = {
+            "ln1": init_norm(cfg, prefix),
+            "attn": init_attention(cfg, ka, prefix),
+            "ln2": init_norm(cfg, prefix),
+        }
+        if cfg.n_experts:
+            block["moe"] = init_moe(cfg, km, prefix)
+        else:
+            block["mlp"] = init_mlp(cfg, km, shape_prefix=prefix)
+        return block
+
+    params["blocks"] = make_block(k_blocks, (n_scan,))
+    if n_dense:
+        # leading dense-FFN layers (e.g. moonshot first_dense_layers=1)
+        dense_block = {
+            "ln1": init_norm(cfg, (n_dense,)),
+            "attn": init_attention(cfg, k_dense, (n_dense,)),
+            "ln2": init_norm(cfg, (n_dense,)),
+            "mlp": init_mlp(cfg, jax.random.fold_in(k_dense, 1),
+                            shape_prefix=(n_dense,)),
+        }
+        params["dense_blocks"] = dense_block
+    return params
+
+
+# ---------------------------------------------------------------- forward
+def _block_fwd(x: Array, bp: dict, cfg: ModelConfig, positions: Array,
+               use_moe: bool) -> tuple[Array, Array]:
+    h = norm(x, bp["ln1"], cfg.norm)
+    x = x + attention(h, bp["attn"], cfg, positions)
+    h = norm(x, bp["ln2"], cfg.norm)
+    if use_moe:
+        y, aux = moe_ffn(h, bp["moe"], cfg)
+    else:
+        y, aux = mlp(h, bp["mlp"], cfg), jnp.zeros((), jnp.float32)
+    return shard_hint(x + y, "batch", None, None), aux
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig,
+            patches: Optional[Array] = None, remat: bool = False
+            ) -> tuple[Array, Array]:
+    """tokens: (B, S) int32; patches: (B, Np, D) or None.
+    Returns (logits over full sequence, aux loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x = shard_hint(x, "batch", None, None)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if "dense_blocks" in params:
+        db = params["dense_blocks"]
+        for i in range(cfg.first_dense_layers):
+            bp = jax.tree.map(lambda a: a[i], db)
+            x, _ = _block_fwd(x, bp, cfg, positions, use_moe=False)
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a = _block_fwd(x, bp, cfg, positions, use_moe=bool(cfg.n_experts))
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["blocks"])
+
+    x = norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard_hint(jnp.einsum("bsd,dv->bsv", x, head),
+                        "batch", None, "model")
+    return logits, aux_total
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            remat: bool = True) -> Array:
+    """Next-token cross-entropy (text positions only for VLM)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens, cfg,
+                          patches=batch.get("patches"),
+                          remat=remat and cfg.remat)
+    if batch.get("patches") is not None:
+        logits = logits[:, batch["patches"].shape[1]:, :]
+    logits = logits[:, :-1, :].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean() + 0.01 * aux
+
+
+# ----------------------------------------------------------------- decode
+def prefill(params: dict, tokens: Array, cfg: ModelConfig,
+            patches: Optional[Array] = None,
+            max_len: Optional[int] = None) -> tuple[Array, dict]:
+    """Run the full prompt, build the KV cache (padded to ``max_len`` so
+    decode steps have room), return last-token logits."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x = shard_hint(x, "batch", None, None)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    n_dense = cfg.first_dense_layers
+    caches = []
+
+    def run_block(x, bp, use_moe):
+        h = norm(x, bp["ln1"], cfg.norm)
+        from .layers import _project_qkv, _sdpa
+        q, k, v = _project_qkv(h, bp["attn"], cfg, positions)
+        o = _sdpa(q, k, v, causal=True)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), bp["attn"]["wo"])
+        h = norm(x, bp["ln2"], cfg.norm)
+        y = moe_ffn(h, bp["moe"], cfg)[0] if use_moe else mlp(h, bp["mlp"], cfg)
+        return x + y, (k, v)
+
+    if n_dense:
+        for i in range(n_dense):
+            bp = jax.tree.map(lambda a: a[i], params["dense_blocks"])
+            x, kv = run_block(x, bp, use_moe=False)
+            caches.append(kv)
+
+    def body(x, bp):
+        x, kv = run_block(x, bp, use_moe=bool(cfg.n_experts))
+        return x, kv
+
+    x, scan_kv = jax.lax.scan(body, x, params["blocks"])
+
+    x = norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1, :], head)
+
+    k_all, v_all = scan_kv
+    if caches:
+        k_pre = jnp.stack([c[0] for c in caches])
+        v_pre = jnp.stack([c[1] for c in caches])
+        k_all = jnp.concatenate([k_pre, k_all], axis=0)
+        v_all = jnp.concatenate([v_pre, v_all], axis=0)
+    pad = (max_len or S + 8) - S
+    if pad > 0:
+        k_all = jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v_all = jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k_all, "v": v_all,
+             "len": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, tokens: Array, cfg: ModelConfig
+                ) -> tuple[Array, dict]:
+    """One decode step.  tokens: (B, 1); cache from init_kv_cache/prefill
+    with k/v: (L, B, S_max, KV, hd)."""
+    x = shard_hint(jnp.take(params["embed"], tokens, axis=0),
+                   "batch", None, None)
+    pos = cache["len"]
+    n_dense = cfg.first_dense_layers
+
+    def run_block(x, bp, kv, use_moe):
+        h = norm(x, bp["ln1"], cfg.norm)
+        o, new_kv = attention_decode(h, bp["attn"], cfg,
+                                     {"k": kv[0], "v": kv[1], "len": pos}, pos)
+        x = x + o
+        h = norm(x, bp["ln2"], cfg.norm)
+        y = moe_ffn(h, bp["moe"], cfg)[0] if use_moe else mlp(h, bp["mlp"], cfg)
+        return x + y, (new_kv["k"], new_kv["v"])
+
+    new_k, new_v = [], []
+    if n_dense:
+        for i in range(n_dense):
+            bp = jax.tree.map(lambda a: a[i], params["dense_blocks"])
+            x, (k, v) = run_block(x, bp, (cache["k"][i], cache["v"][i]), False)
+            new_k.append(k); new_v.append(v)
+
+    def body(x, xs):
+        bp, k_l, v_l = xs
+        x, (k, v) = run_block(x, bp, (k_l, v_l), bool(cfg.n_experts))
+        return x, (k, v)
+
+    x, (k_scan, v_scan) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"][n_dense:], cache["v"][n_dense:]))
+
+    if new_k:
+        k_scan = jnp.concatenate([jnp.stack(new_k), k_scan], axis=0)
+        v_scan = jnp.concatenate([jnp.stack(new_v), v_scan], axis=0)
+
+    x = norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0, :]
+    return logits, {"k": k_scan, "v": v_scan, "len": pos + 1}

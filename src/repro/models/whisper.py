@@ -1,0 +1,204 @@
+"""Whisper-base backbone: encoder-decoder transformer (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs`` provide
+precomputed frame embeddings (B, enc_ctx, D) — i.e. the output the two conv
+layers would produce.  Encoder: bidirectional attention + sinusoidal
+positions.  Decoder: causal self-attention (RoPE stands in for Whisper's
+learned positions — mechanical deviation noted in DESIGN.md, required for the
+assignment's 32k decode shapes which exceed Whisper's native 448 positions)
+plus cross-attention into the encoder output.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import (attention, attention_decode, dtype_of, init_attention,
+                     init_mlp, init_norm, mlp, norm, shard_hint)
+
+Array = jax.Array
+
+
+def _sinusoid(length: int, d: int) -> Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def init_cross_attention(cfg: ModelConfig, key, shape_prefix=()) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    dt = dtype_of(cfg)
+    return {
+        "wq": (jax.random.normal(ks[0], (*shape_prefix, D, H * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (*shape_prefix, D, KV * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (*shape_prefix, D, KV * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (*shape_prefix, H * hd, D))
+               / math.sqrt(H * hd)).astype(dt),
+    }
+
+
+def init_whisper(cfg: ModelConfig, rng) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    ks = jax.random.split(rng, 8)
+    dt = dtype_of(cfg)
+    return {
+        "embed": (jax.random.normal(ks[0], (V, D)) * 0.02).astype(dt),
+        "enc_blocks": {
+            "ln1": init_norm(cfg, (Le,)),
+            "attn": init_attention(cfg, ks[1], (Le,)),
+            "ln2": init_norm(cfg, (Le,)),
+            "mlp": init_mlp(cfg, ks[2], shape_prefix=(Le,)),
+        },
+        "enc_norm": init_norm(cfg),
+        "dec_blocks": {
+            "ln1": init_norm(cfg, (Ld,)),
+            "self_attn": init_attention(cfg, ks[3], (Ld,)),
+            "ln_x": init_norm(cfg, (Ld,)),
+            "cross_attn": init_cross_attention(cfg, ks[4], (Ld,)),
+            "ln2": init_norm(cfg, (Ld,)),
+            "mlp": init_mlp(cfg, ks[5], shape_prefix=(Ld,)),
+        },
+        "dec_norm": init_norm(cfg),
+    }
+
+
+def encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """frames: (B, Ta, D) stub frontend output -> encoder states."""
+    B, Ta, D = frames.shape
+    x = shard_hint(frames + _sinusoid(Ta, D).astype(frames.dtype),
+                   "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(Ta, dtype=jnp.int32), (B, Ta))
+
+    def body(x, bp):
+        h = norm(x, bp["ln1"], cfg.norm)
+        x = x + attention(h, bp["attn"], cfg, positions, causal=False)
+        h = norm(x, bp["ln2"], cfg.norm)
+        return x + mlp(h, bp["mlp"], cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return norm(x, params["enc_norm"], cfg.norm)
+
+
+def _cross(x, enc, p, cfg):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("btd,dh->bth", enc, p["wk"]).reshape(B, -1, KV, hd)
+    v = jnp.einsum("btd,dh->bth", enc, p["wv"]).reshape(B, -1, KV, hd)
+    from .layers import _sdpa
+    o = _sdpa(q, k, v, causal=False)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def decode_full(params, tokens: Array, enc: Array, cfg: ModelConfig,
+                remat: bool = False) -> Array:
+    """Teacher-forced decoder pass -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = shard_hint(jnp.take(params["embed"], tokens, axis=0),
+                   "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, bp):
+        h = norm(x, bp["ln1"], cfg.norm)
+        x = x + attention(h, bp["self_attn"], cfg, positions)
+        h = norm(x, bp["ln_x"], cfg.norm)
+        x = x + _cross(h, enc, bp["cross_attn"], cfg)
+        h = norm(x, bp["ln2"], cfg.norm)
+        return x + mlp(h, bp["mlp"], cfg), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = norm(x, params["dec_norm"], cfg.norm)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"])      # tied head
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: bool = True) -> Array:
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    logits = decode_full(params, tokens, enc, cfg,
+                         remat=remat and cfg.remat)
+    logits = logits[:, :-1, :].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def prefill(params, tokens: Array, frames: Array, cfg: ModelConfig,
+            max_len: int | None = None):
+    """Encode audio + run the prompt through the decoder, build caches."""
+    enc = encode(params, frames, cfg)
+    B, S = tokens.shape
+    max_len = max_len or cfg.max_seq
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    def body(x, bp):
+        from .layers import _project_qkv, _sdpa
+        h = norm(x, bp["ln1"], cfg.norm)
+        q, k, v = _project_qkv(h, bp["self_attn"], cfg, positions)
+        o = _sdpa(q, k, v, causal=True)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1),
+                           bp["self_attn"]["wo"])
+        h = norm(x, bp["ln_x"], cfg.norm)
+        x = x + _cross(h, enc, bp["cross_attn"], cfg)
+        # precompute this layer's cross K/V for decode
+        ck = jnp.einsum("btd,dh->bth", enc, bp["cross_attn"]["wk"]
+                        ).reshape(B, -1, KV, hd)
+        cv = jnp.einsum("btd,dh->bth", enc, bp["cross_attn"]["wv"]
+                        ).reshape(B, -1, KV, hd)
+        h = norm(x, bp["ln2"], cfg.norm)
+        return x + mlp(h, bp["mlp"], cfg), (k, v, ck, cv)
+
+    x, (k_all, v_all, ck_all, cv_all) = jax.lax.scan(body, x,
+                                                     params["dec_blocks"])
+    x = norm(x, params["dec_norm"], cfg.norm)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1, :], params["embed"])
+    pad = max_len - S
+    k_all = jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v_all = jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k_all, "v": v_all, "cross_k": ck_all, "cross_v": cv_all,
+             "len": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens: Array, cfg: ModelConfig):
+    """One-token decode with cached self-attn KV + precomputed cross KV."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["len"]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def body(x, xs):
+        bp, k_l, v_l, ck_l, cv_l = xs
+        h = norm(x, bp["ln1"], cfg.norm)
+        o, new_kv = attention_decode(h, bp["self_attn"], cfg,
+                                     {"k": k_l, "v": v_l, "len": pos}, pos)
+        x = x + o
+        h = norm(x, bp["ln_x"], cfg.norm)
+        q = jnp.einsum("bsd,dh->bsh", h, bp["cross_attn"]["wq"]
+                       ).reshape(B, 1, H, hd)
+        from .layers import _sdpa
+        o = _sdpa(q, ck_l, cv_l, causal=False)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, -1),
+                           bp["cross_attn"]["wo"])
+        h = norm(x, bp["ln2"], cfg.norm)
+        return x + mlp(h, bp["mlp"], cfg), (new_kv["k"], new_kv["v"])
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = norm(x, params["dec_norm"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0, :]
+    return logits, {"k": k_new, "v": v_new, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "len": pos + 1}

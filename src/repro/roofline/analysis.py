@@ -1,0 +1,175 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+    compute   = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory    = HLO_bytes / (chips * HBM_bw)
+    collective= collective_bytes / (chips * link_bw)
+
+cost_analysis() supplies FLOPs / bytes; collective traffic is parsed out of
+the optimized HLO text (all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute), summing *operand* sizes per the assignment.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,1024,512]  or  f32[]
+_SHAPE_RE = re.compile(r"\b(pred|[sub]\d+|bf16|f16|f32|f64|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_KIND_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_REF_RES = [
+    (re.compile(r"body=%?([\w.\-]+)"), "body"),
+    (re.compile(r"condition=%?([\w.\-]+)"), "cond"),
+    (re.compile(r"calls=%?([\w.\-]+)"), "call"),
+    (re.compile(r"to_apply=%?([\w.\-]+)"), "call"),
+    (re.compile(r"(?:branch_computations|called_computations)=\{([^}]*)\}"),
+     "branches"),
+]
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Census of collective ops from the optimized (post-SPMD) HLO, with
+    while-loop trip counts applied (a collective inside a scanned layer body
+    executes L times but is printed once).
+
+    Post-optimization HLO prints only the RESULT type inline, so bytes are
+    derived from it with ring-algorithm traffic factors per device:
+      all-gather:     ~ result              (each device receives O*(n-1)/n)
+      all-reduce:     ~ 2 * result          (reduce-scatter + all-gather)
+      reduce-scatter: ~ result * group_size (operand = result * n)
+      all-to-all / collective-permute: ~ result
+    """
+    # ---- pass 1: split into computations; collect collectives + call edges
+    comps: dict[str, dict] = {}
+    cur = None
+    entry = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr is not None:
+            cur = hdr.group(2)
+            comps.setdefault(cur, {"coll": [], "edges": []})
+            if hdr.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        comp = comps[cur]
+        m = _KIND_RE.search(line)
+        if m is not None:
+            kind = m.group(2).replace("-start", "")
+            result_ty = m.group(1)
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(result_ty))
+            g = _GROUPS_RE.search(line)
+            group_size = int(g.group(2)) if g else 1
+            if kind == "all-reduce":
+                traffic = 2.0 * nbytes
+            elif kind == "reduce-scatter":
+                traffic = float(nbytes) * group_size
+            else:
+                traffic = float(nbytes)
+            comp["coll"].append((kind, traffic))
+        trip = None
+        tm = _TRIP_RE.search(line)
+        if tm:
+            trip = int(tm.group(1))
+        for ref_re, role in _REF_RES:
+            for rm in ref_re.finditer(line):
+                if role == "branches":
+                    for name in re.findall(r"%?([\w.\-]+)", rm.group(1)):
+                        comp["edges"].append((name, 1.0))
+                elif role == "body":
+                    comp["edges"].append((rm.group(1), float(trip or 1)))
+                else:
+                    comp["edges"].append((rm.group(1), 1.0))
+
+    # ---- pass 2: propagate multipliers from the entry computation
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0) -> None:
+        if name not in comps or depth > 50:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for child, f in comps[name]["edges"]:
+            visit(child, m * f, depth + 1)
+
+    visit(entry or next(iter(comps), ""), 1.0)
+
+    per_kind: dict[str, dict] = {}
+    total = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0 or not comp["coll"]:
+            continue
+        for kind, traffic in comp["coll"]:
+            k = per_kind.setdefault(kind, {"count": 0, "bytes": 0.0})
+            k["count"] += m
+            k["bytes"] += traffic * m
+            total += traffic * m
+    return {"per_kind": per_kind, "total_bytes": total}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active params
+    and D = tokens processed by the step."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # one new token per request
+    return 2.0 * n * tokens
+
+
+def roofline_terms(*, flops: float, hlo_bytes: float, collective_bytes: float,
+                   n_devices: int, cfg: Optional[ModelConfig] = None,
+                   shape: Optional[ShapeConfig] = None) -> dict:
+    compute_s = flops / (n_devices * PEAK_FLOPS_BF16)
+    memory_s = hlo_bytes / (n_devices * HBM_BW)
+    collective_s = collective_bytes / (n_devices * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    out = {**terms, "dominant": dom,
+           "bound_s": terms[dom],
+           "roofline_fraction": terms["compute_s"] / max(
+               1e-30, max(terms.values()))}
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        out["model_flops"] = mf
+        out["useful_flop_ratio"] = mf / max(flops, 1.0)
+    return out

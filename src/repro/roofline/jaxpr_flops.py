@@ -1,0 +1,144 @@
+"""Exact program-level FLOP/byte accounting by walking the jaxpr.
+
+XLA:CPU's cost_analysis does not multiply while-loop bodies by trip count, so
+a scan-over-layers model reports ~1/L of its real FLOPs.  This walker counts
+the *logical* program: dot_general/conv FLOPs, elementwise/reduce ops, with
+``scan`` bodies multiplied by length — including rematerialized recompute
+(remat shows up as extra equations in the VJP jaxpr), which is exactly what
+the MODEL_FLOPS / PROGRAM_FLOPS ratio in the roofline table needs to expose.
+
+Bytes here are "logical traffic": sum of operand+result sizes of every
+equation (an un-fused upper bound; the table reports XLA's fused
+'bytes accessed' alongside).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+
+@dataclass
+class Counts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    by_prim: dict = field(default_factory=dict)
+
+    def add(self, prim: str, flops: float, nbytes: float) -> None:
+        self.flops += flops
+        self.bytes += nbytes
+        e = self.by_prim.setdefault(prim, [0.0, 0.0])
+        e[0] += flops
+        e[1] += nbytes
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+_ELEMENTWISE_2X = {"exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                   "pow", "integer_pow", "sin", "cos"}
+_FREE = {"reshape", "broadcast_in_dim", "transpose", "convert_element_type",
+         "squeeze", "slice", "dynamic_slice", "dynamic_update_slice",
+         "concatenate", "pad", "gather", "scatter", "iota", "copy",
+         "stop_gradient", "rev", "bitcast_convert_type", "split"}
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    contract = 1
+    for d in lc:
+        contract *= lhs.shape[d]
+    batch = 1
+    for d in lb:
+        batch *= lhs.shape[d]
+    m = _size(lhs) // max(1, contract * batch)
+    n = _size(rhs) // max(1, contract * batch)
+    return 2.0 * batch * m * n * contract
+
+
+def count_jaxpr(jaxpr, counts: Counts, mult: float = 1.0) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        io_bytes = (sum(_bytes(v.aval) for v in eqn.invars
+                        if hasattr(v, "aval"))
+                    + sum(_bytes(v.aval) for v in eqn.outvars))
+
+        if prim == "dot_general":
+            counts.add(prim, mult * _dot_flops(eqn), mult * io_bytes)
+        elif prim == "conv_general_dilated":
+            out = eqn.outvars[0].aval
+            rhs = eqn.invars[1].aval
+            counts.add(prim, mult * 2.0 * _size(out) * _size(rhs)
+                       / max(1, rhs.shape[-1]), mult * io_bytes)
+        elif prim == "scan":
+            length = eqn.params["length"]
+            inner = eqn.params["jaxpr"]
+            sub = Counts()
+            count_jaxpr(inner.jaxpr, sub, 1.0)
+            # totals once; breakdown entries bypass the totals accumulator
+            counts.flops += mult * length * sub.flops
+            counts.bytes += mult * length * sub.bytes
+            for p, (f, b) in sub.by_prim.items():
+                e = counts.by_prim.setdefault(f"scan/{p}", [0.0, 0.0])
+                e[0] += mult * length * f
+                e[1] += mult * length * b
+        elif prim == "while":
+            # trip count unknown statically: count body once (documented)
+            inner = eqn.params["body_jaxpr"]
+            count_jaxpr(inner.jaxpr, counts, mult)
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            subs = []
+            for br in branches:
+                s = Counts()
+                count_jaxpr(br.jaxpr, s, 1.0)
+                subs.append(s)
+            worst = max(subs, key=lambda s: s.flops)
+            counts.add("cond", mult * worst.flops, mult * worst.bytes)
+        elif prim in ("pjit", "closed_call", "remat2", "custom_jvp_call",
+                      "custom_vjp_call", "custom_vjp_call_jaxpr",
+                      "checkpoint", "core_call"):
+            inner = (eqn.params.get("jaxpr")
+                     or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                count_jaxpr(ij, counts, mult)
+        elif prim in _FREE:
+            counts.add(prim, 0.0, mult * io_bytes)
+        elif prim in _ELEMENTWISE_2X:
+            out_sz = sum(_size(v.aval) for v in eqn.outvars)
+            counts.add(prim, mult * 2.0 * out_sz, mult * io_bytes)
+        elif prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                      "argmax", "argmin", "cumsum", "cumlogsumexp", "cummax",
+                      "reduce_and", "reduce_or", "sort", "top_k"):
+            in_sz = sum(_size(v.aval) for v in eqn.invars
+                        if hasattr(v, "aval"))
+            counts.add(prim, mult * in_sz, mult * io_bytes)
+        else:
+            out_sz = sum(_size(v.aval) for v in eqn.outvars)
+            counts.add(prim, mult * out_sz, mult * io_bytes)
+
+
+def program_counts(fn, *args) -> Counts:
+    closed = jax.make_jaxpr(fn)(*args)
+    c = Counts()
+    count_jaxpr(closed.jaxpr, c)
+    return c

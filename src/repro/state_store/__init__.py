@@ -1,0 +1,4 @@
+from .chunking import (CHUNK_ELEMS, n_state_records, records_to_tree,
+                       tree_to_records)
+from .train_wal import (TrainWAL, WALConfig, resume_from_crash,
+                        train_with_recovery)

@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode.
+
+Every kernel must be allclose to its ref.py oracle across head counts, GQA
+ratios, sequence lengths (incl. non-multiple-of-block), and dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.kernels.delta_apply import delta_apply
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import group_updates_by_page
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.wkv6 import wkv6
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 4, 4, 128, 64),
+    (2, 8, 2, 256, 64),      # GQA 4:1
+    (1, 4, 1, 384, 128),     # MQA, S not a block multiple
+    (2, 2, 2, 64, 32),       # tiny blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, H, KV, S, hd, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    qb = 128 if S % 128 == 0 else 64
+    out = flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=qb,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+def test_flash_attention_long_kv_short_q():
+    """Asymmetric prefill-style: q shorter than kv (cross-attention shape)."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 4, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 4, 512, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("B,H,T,hd,chunk", [
+    (1, 2, 64, 32, 16),
+    (2, 4, 128, 64, 64),
+    (1, 3, 96, 64, 32),      # odd head count, chunk < T
+    (2, 2, 256, 32, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_matches_ref(B, H, T, hd, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r = jax.random.normal(ks[0], (B, H, T, hd), dtype)
+    k = jax.random.normal(ks[1], (B, H, T, hd), dtype)
+    v = jax.random.normal(ks[2], (B, H, T, hd), dtype)
+    # realistic decay: logw in [-4, -1e-3)
+    logw = -jnp.exp(jax.random.uniform(ks[3], (B, H, T, hd),
+                                       minval=-6.0, maxval=1.2)
+                    ).astype(jnp.float32).clip(1e-3, 4.0)
+    u = (jax.random.normal(ks[4], (H, hd)) * 0.3).astype(jnp.float32)
+    out = wkv6(r, k, v, logw.astype(dtype), u, chunk=chunk, interpret=True)
+    want = ref.wkv6_ref(r, k, v, logw.astype(dtype), u)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                    atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# ----------------------------------------------------------------- ssd_scan
+@pytest.mark.parametrize("B,H,T,P,N,chunk", [
+    (1, 2, 64, 32, 16, 32),
+    (2, 4, 128, 64, 64, 64),
+    (1, 5, 256, 64, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_ref(B, H, T, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, H, T, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, T))).astype(jnp.float32)
+    B_in = jax.random.normal(ks[2], (B, T, N), dtype)
+    C_in = jax.random.normal(ks[3], (B, T, N), dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.5)
+    out = ssd_scan(x, dt.astype(dtype), B_in, C_in, A, chunk=chunk,
+                   interpret=True)
+    want = ref.ssd_scan_ref(x, dt.astype(dtype), B_in, C_in, A)
+    # chunked vs sequential reassociate fp adds: tolerance reflects a
+    # T-long product/sum chain, not an implementation bug
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    rtol=4e-2 if dtype == jnp.bfloat16 else 2e-3,
+                    atol=4e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+# -------------------------------------------------------------- delta_apply
+@pytest.mark.parametrize("n_pages,slots,width,max_upd", [
+    (4, 16, 32, 8),
+    (8, 64, 128, 16),
+    (2, 8, 8, 4),
+])
+@pytest.mark.parametrize("additive", [False, True])
+def test_delta_apply_matches_ref(n_pages, slots, width, max_upd, additive):
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    pages = jax.random.normal(ks[0], (n_pages, slots, width), jnp.float32)
+    vals = jax.random.normal(ks[1], (n_pages, max_upd, width), jnp.float32)
+    slot_idx = jax.random.randint(ks[2], (n_pages, max_upd), 0, slots,
+                                  dtype=jnp.int32)
+    mask = jax.random.bernoulli(ks[3], 0.7, (n_pages, max_upd))
+    out = delta_apply(pages, vals, slot_idx, mask, additive=additive,
+                      interpret=True)
+    want = ref.delta_apply_ref(pages, vals, slot_idx, mask, additive=additive)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_delta_apply_last_writer_wins_order():
+    """Two updates to the same slot: the later one (log order) must win —
+    this is the LSN-ordered redo semantics of Algorithm 5."""
+    pages = jnp.zeros((1, 4, 2), jnp.float32)
+    vals = jnp.array([[[1., 1.], [2., 2.]]])
+    slot_idx = jnp.array([[1, 1]], jnp.int32)
+    mask = jnp.array([[True, True]])
+    out = delta_apply(pages, vals, slot_idx, mask, interpret=True)
+    assert_allclose(np.asarray(out[0, 1]), [2., 2.])
+
+
+def test_group_updates_by_page_roundtrip():
+    rng = np.random.default_rng(0)
+    n_pages, slots, width, n_upd = 6, 32, 16, 40
+    page_idx = rng.integers(0, n_pages, n_upd)
+    vals = rng.normal(size=(n_upd, width)).astype(np.float32)
+    slot = rng.integers(0, slots, n_upd).astype(np.int32)
+    apply_mask = rng.random(n_upd) < 0.8
+    v, s, m = group_updates_by_page(page_idx, n_pages, vals, slot, apply_mask)
+    pages = np.zeros((n_pages, slots, width), np.float32)
+    out = delta_apply(jnp.asarray(pages), jnp.asarray(v), jnp.asarray(s),
+                      jnp.asarray(m), interpret=True)
+    # oracle: sequential log-order application
+    want = pages.copy()
+    for u in range(n_upd):
+        if apply_mask[u]:
+            want[page_idx[u], slot[u]] = vals[u]
+    assert_allclose(np.asarray(out), want, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests: REDUCED configs (same family, tiny dims) run
+one forward/train step + one decode step on CPU; assert shapes + finiteness.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import build_model, make_batch
+
+ARCHS = list_archs()
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, rng):
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(rng)
+    batch = make_batch(cfg, batch=2, seq=32, rng=rng)
+    loss, grads = jax.jit(jax.value_and_grad(api.loss))(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss {loss}"
+    leaves = jax.tree.leaves(grads)
+    assert leaves, f"{arch}: no grads"
+    for g in leaves:
+        assert jnp.all(jnp.isfinite(g.astype(jnp.float32))), \
+            f"{arch}: non-finite grad"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_smoke(arch, rng):
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(rng)
+    batch = make_batch(cfg, batch=2, seq=16, rng=rng)
+    logits, cache = jax.jit(api.prefill)(params, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    logits2, cache2 = jax.jit(api.decode)(params, cache, next_tok)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits2.astype(jnp.float32)))
+    assert int(cache2["len"]) == int(cache["len"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_from_empty_cache_smoke(arch, rng):
+    """decode-only path used by the decode_* dry-run shapes."""
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(rng)
+    cache = api.init_cache(2, 64)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache2 = jax.jit(api.decode)(params, cache, tok)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+
+
+def test_prefill_decode_consistency_dense(rng):
+    """Decode after prefill must equal the full-forward logits (teacher
+    forcing): validates cache correctness for the dense family."""
+    cfg = get_config("llama3.2-3b").reduced()
+    api = build_model(cfg)
+    params = api.init(rng)
+    tokens = jax.random.randint(rng, (2, 12), 0, cfg.vocab_size, jnp.int32)
+
+    from repro.models import lm
+    full_logits, _ = jax.jit(
+        lambda p, t: lm.forward(p, t, cfg))(params, tokens)
+
+    # prefill on first 11 tokens; decode the 12th and compare its logits
+    logits_p, cache = jax.jit(api.prefill)(params, {"tokens": tokens[:, :11]})
+    assert jnp.allclose(logits_p, full_logits[:, 10, :], atol=2e-2), \
+        "prefill last-token logits diverge from full forward"
+    logits_d, _ = jax.jit(api.decode)(params, cache, tokens[:, 11:12])
+    assert jnp.allclose(logits_d, full_logits[:, 11, :], atol=2e-2), \
+        "decode logits diverge from full forward"
+
+
+def test_prefill_decode_consistency_rwkv(rng):
+    cfg = get_config("rwkv6-3b").reduced()
+    api = build_model(cfg)
+    params = api.init(rng)
+    tokens = jax.random.randint(rng, (2, 12), 0, cfg.vocab_size, jnp.int32)
+    from repro.models import rwkv6
+    full_logits, _ = jax.jit(lambda p, t: rwkv6.forward(p, t, cfg))(params, tokens)
+    _, cache = jax.jit(api.prefill)(params, {"tokens": tokens[:, :11]})
+    logits_d, _ = jax.jit(api.decode)(params, cache, tokens[:, 11:12])
+    assert jnp.allclose(logits_d, full_logits[:, 11, :], atol=2e-2)

@@ -1,0 +1,156 @@
+"""Property-based tests (hypothesis) for the recovery engine's invariants.
+
+Invariant 1 (equivalence): for ANY workload and ANY crash point, every
+  recovery strategy reproduces exactly the committed-transaction state.
+Invariant 2 (DPT safety): every page dirty at crash whose first-dirtying op
+  is <= the last stable Delta record's TC-LSN appears in the logical DPT with
+  rLSN <= its true first-dirtying LSN.
+Invariant 3 (pages): serialization round-trips arbitrary record sets.
+"""
+import random
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Database, Strategy, committed_state_oracle, make_key,
+                        recover, recovered_state)
+from repro.core.dpt import build_dpt_logical
+from repro.core.pages import Page, empty_leaf
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------- workloads
+@st.composite
+def workload(draw):
+    seed = draw(st.integers(0, 2**32 - 1))
+    n_rows = draw(st.integers(20, 200))
+    n_txns = draw(st.integers(3, 40))
+    cache = draw(st.integers(8, 64))
+    tracker = draw(st.integers(3, 40))
+    bg_flush = draw(st.integers(0, 4))
+    ckpt_every = draw(st.integers(0, 15))
+    abort_frac = draw(st.floats(0.0, 0.3))
+    trailing_loser = draw(st.booleans())
+    delta_mode = draw(st.sampled_from(["paper", "perfect", "reduced"]))
+    return dict(seed=seed, n_rows=n_rows, n_txns=n_txns, cache=cache,
+                tracker=tracker, bg_flush=bg_flush, ckpt_every=ckpt_every,
+                abort_frac=abort_frac, trailing_loser=trailing_loser,
+                delta_mode=delta_mode)
+
+
+def build_and_crash(p):
+    rng = random.Random(p["seed"])
+    db = Database(cache_pages=p["cache"], tracker_interval=p["tracker"],
+                  bg_flush_per_txn=p["bg_flush"], delta_mode=p["delta_mode"])
+    rows = [(f"k{i:06d}".encode(), bytes([i % 251]) * rng.randrange(20, 60))
+            for i in range(p["n_rows"])]
+    db.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+
+    for t in range(p["n_txns"]):
+        ops = []
+        for _ in range(rng.randrange(1, 8)):
+            roll = rng.random()
+            if roll < 0.6:
+                i = rng.randrange(p["n_rows"])
+                ops.append(("update", "t", f"k{i:06d}".encode(), rng.randbytes(40)))
+            elif roll < 0.85:
+                ops.append(("insert", "t", f"x{rng.randrange(10**6):08d}".encode(),
+                            rng.randbytes(40)))
+            else:
+                i = rng.randrange(p["n_rows"])
+                ops.append(("delete", "t", f"k{i:06d}".encode(), None))
+        if rng.random() < p["abort_frac"]:
+            txn = db.tc.begin()
+            for verb, table, key, value in ops:
+                if verb == "update":
+                    db.tc.update(txn, table, key, value)
+                elif verb == "insert":
+                    db.tc.insert(txn, table, key, value)
+                else:
+                    db.tc.delete(txn, table, key)
+            db.tc.abort(txn)
+        else:
+            db.run_txn(ops)
+        if p["ckpt_every"] and t % p["ckpt_every"] == p["ckpt_every"] - 1:
+            db.checkpoint()
+
+    if p["trailing_loser"]:
+        txn = db.tc.begin()
+        for _ in range(rng.randrange(1, 5)):
+            i = rng.randrange(p["n_rows"])
+            db.tc.update(txn, "t", f"k{i:06d}".encode(), b"loser")
+        if rng.random() < 0.5:
+            db.log.flush()      # loser ops stable -> must be undone
+    return db, base
+
+
+@given(workload())
+@settings(**SETTINGS)
+def test_every_strategy_matches_oracle(p):
+    db, base = build_and_crash(p)
+    image = db.crash()
+    oracle = committed_state_oracle(image, base)
+    for s in Strategy:
+        rec_db, _ = recover(image, s, cache_pages=p["cache"])
+        assert recovered_state(rec_db) == oracle, \
+            f"{s.value} diverged (seed={p['seed']})"
+
+
+@given(workload())
+@settings(**SETTINGS)
+def test_logical_dpt_safety(p):
+    if p["delta_mode"] == "reduced":
+        p = dict(p, delta_mode="paper")
+    db, base = build_and_crash(p)
+
+    # ground truth BEFORE crash: dirty buffers + their true first-dirty LSNs
+    true_dirty = {pid: buf.rlsn for pid, buf in db.dc.pool.buffers.items()
+                  if buf.dirty}
+    image = db.crash()
+    log = image.log
+    rssp = log.master.bckpt_lsn
+    dpt, last_tc_lsn, _pf = build_dpt_logical(log, rssp)
+    for pid, first_dirty_lsn in true_dirty.items():
+        if first_dirty_lsn <= last_tc_lsn and first_dirty_lsn > rssp:
+            e = dpt.find(pid)
+            assert e is not None, \
+                f"dirty page {pid} (rlsn={first_dirty_lsn}) missing from DPT " \
+                f"(lastDelta={last_tc_lsn}, seed={p['seed']})"
+            assert e.rlsn <= first_dirty_lsn, \
+                f"DPT rlsn {e.rlsn} > true first-dirty {first_dirty_lsn} " \
+                f"for page {pid} (seed={p['seed']})"
+
+
+@given(st.dictionaries(st.binary(min_size=1, max_size=40),
+                       st.binary(min_size=0, max_size=200),
+                       min_size=0, max_size=40),
+       st.integers(0, 2**40), st.integers(0, 2**40))
+@settings(max_examples=50, deadline=None)
+def test_page_serialization_roundtrip(records, plsn, slsn):
+    p = empty_leaf(123)
+    p.records = dict(records)
+    p.plsn, p.slsn = plsn, slsn
+    q = Page.from_bytes(p.to_bytes())
+    assert q.records == p.records and q.plsn == plsn and q.slsn == slsn
+
+
+@given(workload())
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_double_crash(p):
+    """Crash during 'continued operation' after a recovery; recover again."""
+    db, base = build_and_crash(p)
+    image1 = db.crash()
+    db2, _ = recover(image1, Strategy.LOG1, cache_pages=p["cache"])
+    rng = random.Random(p["seed"] ^ 0xDEAD)
+    for _ in range(5):
+        i = rng.randrange(p["n_rows"])
+        db2.run_txn([("update", "t", f"k{i:06d}".encode(), rng.randbytes(30))])
+    image2 = db2.crash()
+    oracle2 = committed_state_oracle(image2, base)
+    for s in (Strategy.LOG0, Strategy.LOG1, Strategy.SQL1):
+        db3, _ = recover(image2, s, cache_pages=p["cache"])
+        assert recovered_state(db3) == oracle2

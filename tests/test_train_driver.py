@@ -1,0 +1,29 @@
+"""End-to-end driver smoke: launch.train with crash+restore, in-process."""
+import sys
+
+import pytest
+
+
+def test_train_driver_crash_restore(capsys, monkeypatch):
+    from repro.launch.train import main
+    monkeypatch.setattr(sys, "argv", [
+        "train", "--arch", "qwen2.5-3b", "--preset", "smoke",
+        "--steps", "8", "--crash-at", "5", "--batch", "2", "--seq", "32",
+        "--chunk-interval", "2", "--ckpt-interval", "4"])
+    main()
+    out = capsys.readouterr().out
+    assert "CRASH at step 5" in out
+    assert "RECOVERED to step 5" in out
+    assert "bit-exact" in out
+    assert "done: 8 steps" in out
+
+
+def test_serve_driver(capsys, monkeypatch):
+    from repro.launch.serve import main
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", "rwkv6-3b", "--preset", "smoke",
+        "--batch", "2", "--prompt-len", "8", "--gen", "3"])
+    main()
+    out = capsys.readouterr().out
+    assert "prefill: batch=2" in out
+    assert "decode: 3 steps" in out
