@@ -1,0 +1,22 @@
+# One-command gates for every PR.
+#   make test        tier-1 suite (the ROADMAP verify command)
+#   make bench-smoke fast benchmark pass (all tables/figures + replication)
+#   make examples    run every example end-to-end
+PY      := python
+PYPATH  := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke examples all
+
+all: test bench-smoke examples
+
+test:
+	$(PYPATH) $(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PYPATH) $(PY) -m benchmarks.run
+
+examples:
+	$(PY) examples/quickstart.py
+	$(PY) examples/replica_relayout.py
+	$(PY) examples/train_with_recovery.py
+	$(PY) examples/serve_batched.py

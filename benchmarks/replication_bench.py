@@ -1,0 +1,155 @@
+"""Replication benchmark: the three costs that decide whether logical
+log-shipping can serve read traffic at scale.
+
+  1. apply throughput vs primary commit rate — how fast a standby's
+     continuous logical redo consumes the stream, as transaction size (and
+     thus commit-record overhead per op) varies;
+  2. steady-state lag vs shipping batch size — small batches ship eagerly
+     but pay per-poll overhead, large batches amortize it but let the
+     standby fall further behind between polls;
+  3. failover time vs lag — promote() must drain the un-applied tail, undo
+     in-flight losers, and checkpoint; its cost is linear in how far behind
+     the chosen standby was.
+
+Every run cross-checks the replica (4 KiB pages) against
+``committed_state_oracle`` of the 8 KiB-page primary.
+"""
+from __future__ import annotations
+
+import json
+import random
+import time
+
+from repro.core import Database, committed_state_oracle, make_key
+from repro.replication import Replica, ReplicaSet
+
+PAGE_PRIMARY, PAGE_REPLICA = 8192, 4096
+
+
+def _setup(rng, n_rows, value_size=60):
+    rows = [(f"k{i:07d}".encode(), rng.randbytes(value_size))
+            for i in range(n_rows)]
+    primary = Database(page_size=PAGE_PRIMARY, cache_pages=512,
+                       tracker_interval=100, bg_flush_per_txn=4)
+    primary.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+    replica = Replica("r1", page_size=PAGE_REPLICA, cache_pages=1024,
+                      tracker_interval=100, bg_flush_per_txn=4,
+                      seed_tables={"t": rows})
+    return primary, replica, rows, base
+
+
+def _drive(primary, rng, n_rows, n_txns, ops_per_txn):
+    for _ in range(n_txns):
+        primary.run_txn([("update", "t",
+                          f"k{rng.randrange(n_rows):07d}".encode(),
+                          rng.randbytes(60)) for _ in range(ops_per_txn)])
+
+
+def bench_apply_throughput(fast: bool) -> list[dict]:
+    """Replica apply rate as the primary's commit rate (commits per op)
+    varies: 1, 10 and 50 ops per transaction."""
+    n_rows = 5_000 if fast else 20_000
+    total_ops = 2_000 if fast else 10_000
+    rows = []
+    for ops_per_txn in (1, 10, 50):
+        rng = random.Random(11)
+        primary, replica, _, base = _setup(rng, n_rows)
+        rs = ReplicaSet(primary, [replica])
+        _drive(primary, rng, n_rows, total_ops // ops_per_txn, ops_per_txn)
+        t0 = time.perf_counter()
+        applied = rs.sync()
+        wall = time.perf_counter() - t0
+        ok = replica.user_state() == committed_state_oracle(
+            primary.crash(), base)
+        assert ok, f"replica diverged at ops_per_txn={ops_per_txn}"
+        rows.append({
+            "name": f"repl_apply/ops_per_txn={ops_per_txn}",
+            "ops_per_txn": ops_per_txn,
+            "applied_ops": applied,
+            "apply_ops_per_s": round(applied / wall, 1),
+            "us_per_call": wall / max(applied, 1) * 1e6,
+            "derived": f"{applied / wall:,.0f} ops/s "
+                       f"txns={replica.applied_txns} ok={ok}",
+        })
+    return rows
+
+
+def bench_lag_vs_batch(fast: bool) -> list[dict]:
+    """Steady-state lag: one bounded poll per committed transaction, batch
+    size swept.  Lag is measured in primary-LSN units behind the last
+    stable commit."""
+    n_rows = 5_000 if fast else 20_000
+    n_polls = 75 if fast else 300
+    ops_per_txn, txns_per_poll = 10, 2     # ~24+ records produced per poll
+    rows = []
+    for batch in (16, 32, 256):
+        rng = random.Random(12)
+        primary, replica, _, base = _setup(rng, n_rows)
+        rs = ReplicaSet(primary, [replica], batch_records=batch)
+        lags, t_apply = [], 0.0
+        for _ in range(n_polls):
+            _drive(primary, rng, n_rows, txns_per_poll, ops_per_txn)
+            t0 = time.perf_counter()
+            rs.sync(max_records=batch)
+            t_apply += time.perf_counter() - t0
+            lags.append(replica.lag(primary.log))
+        rs.sync()                              # drain, then cross-check
+        assert replica.user_state() == committed_state_oracle(
+            primary.crash(), base), f"replica diverged at batch={batch}"
+        mean_lag = sum(lags) / len(lags)
+        rows.append({
+            "name": f"repl_lag/batch={batch}",
+            "batch_records": batch,
+            "mean_lag_lsn": round(mean_lag, 1),
+            "max_lag_lsn": max(lags),
+            "us_per_call": t_apply / n_polls * 1e6,
+            "derived": f"mean_lag={mean_lag:.0f} max_lag={max(lags)} "
+                       f"polls={rs.shipper.polls}",
+        })
+    return rows
+
+
+def bench_failover_vs_lag(fast: bool) -> list[dict]:
+    """Failover: crash the primary with the standby N transactions behind
+    (plus one stable in-flight loser), then time promote()'s
+    drain + loser-undo + end-of-recovery checkpoint."""
+    n_rows = 5_000 if fast else 20_000
+    ops_per_txn = 10
+    rows = []
+    for behind_txns in (0, 50, 200) if fast else (0, 200, 1000):
+        rng = random.Random(13)
+        primary, replica, _, base = _setup(rng, n_rows)
+        rs = ReplicaSet(primary, [replica])
+        _drive(primary, rng, n_rows, 100 if fast else 400, ops_per_txn)
+        rs.sync()                                  # caught up ...
+        _drive(primary, rng, n_rows, behind_txns, ops_per_txn)  # ... then not
+        loser = primary.tc.begin()
+        primary.tc.update(loser, "t", b"k0000001", b"LOSER")
+        primary.log.flush()
+        image = primary.crash()
+        lag = replica.lag(image.log)
+        t0 = time.perf_counter()
+        new_primary = rs.promote(image=image)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        ok = dict(new_primary.scan_all()) == committed_state_oracle(image, base)
+        assert ok, f"promoted state diverged at behind={behind_txns}"
+        rows.append({
+            "name": f"repl_failover/behind={behind_txns}txns",
+            "behind_txns": behind_txns,
+            "lag_lsn_at_crash": lag,
+            "promote_ms": round(wall_ms, 2),
+            "us_per_call": wall_ms * 1e3,
+            "derived": f"lag={lag}lsn promote={wall_ms:.1f}ms ok={ok}",
+        })
+    return rows
+
+
+def run(fast: bool = False) -> dict:
+    rows = (bench_apply_throughput(fast) + bench_lag_vs_batch(fast)
+            + bench_failover_vs_lag(fast))
+    return {"name": "replication", "rows": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(fast=True), indent=1))

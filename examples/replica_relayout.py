@@ -1,18 +1,23 @@
-"""Heterogeneous replica via logical log shipping (the paper's Section 1.1
-motivation): because the TC log carries no PIDs, the SAME log stream
-maintains a replica whose physical layout is completely different — here a
-DC with 4 KiB pages replicating a primary with 8 KiB pages.
+"""Heterogeneous hot standby via the replication subsystem (the paper's
+Section 1.1 motivation, now a real subsystem: ``repro.replication``).
 
-Physiological (PID-addressed) records could never do this: the primary's
-page 17 does not exist on the replica.
+Because the TC log carries no PIDs, the SAME shipped log stream maintains a
+replica whose physical layout is completely different — here a DC with
+4 KiB pages standing by for a primary with 8 KiB pages.  Physiological
+(PID-addressed) records could never do this: the primary's page 17 does not
+exist on the replica.
 
 Steps:
-  1. primary (8 KiB pages) runs an update workload,
-  2. its committed logical records are shipped and applied at the replica
-     (4 KiB pages, its own B-tree, its own Delta-records),
-  3. states compare equal,
-  4. the REPLICA is crashed and recovered with DPT-assisted logical redo —
-     recovery is geometry-local, using the replica's own Delta-log records.
+  1. primary (8 KiB pages) runs an update workload; a ReplicaSet ships its
+     stable logical records to a 4 KiB-page standby and routes reads with
+     read-your-writes LSN tokens,
+  2. states compare equal under committed_state_oracle,
+  3. the REPLICA crashes and recovers *locally* with DPT-assisted logical
+     redo (Strategy.LOG1), restores its durable watermark, re-subscribes
+     through a fresh shipper, and converges again,
+  4. the PRIMARY crashes; promote() drains the shipped tail, undoes the
+     in-flight loser logically, checkpoints, and hands back a writable
+     primary.
 
     PYTHONPATH=src python examples/replica_relayout.py
 """
@@ -21,59 +26,66 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (Database, Strategy, CommitRec, UpdateRec, RecKind,
-                        recover, recovered_state)
+from repro.core import Database, Strategy, committed_state_oracle, make_key
+from repro.replication import Replica, ReplicaSet
 
 rng = random.Random(1)
 N_ROWS = 5_000
 
-print("1. primary: 8 KiB pages, workload + checkpointing ...")
+print("1. primary 8 KiB pages, standby 4 KiB pages, shipped + routed ...")
+rows = [(f"k{i:07d}".encode(), rng.randbytes(80)) for i in range(N_ROWS)]
 primary = Database(cache_pages=512, tracker_interval=50, bg_flush_per_txn=2,
                    page_size=8192)
-rows = [(f"k{i:07d}".encode(), rng.randbytes(80)) for i in range(N_ROWS)]
 primary.load_table("t", rows)
+base = {make_key("t", k): v for k, v in rows}
+replica = Replica("standby", page_size=4096, cache_pages=2048,
+                  tracker_interval=50, bg_flush_per_txn=2,
+                  seed_tables={"t": rows})
+rs = ReplicaSet(primary, [replica])
+
+token = 0
 for i in range(150):
-    primary.run_txn([("update", "t",
-                      f"k{rng.randrange(N_ROWS):07d}".encode(),
-                      rng.randbytes(80)) for _ in range(10)])
+    token = rs.write([("update", "t",
+                       f"k{rng.randrange(N_ROWS):07d}".encode(),
+                       rng.randbytes(80)) for _ in range(10)])
+    if i % 10 == 9:
+        rs.sync()
     if i % 60 == 59:
         primary.checkpoint()
-image = primary.crash()
+res = rs.read("t", b"k0000001", min_lsn=token)   # read-your-writes
+rs.sync()
+print(f"   applied {replica.applied_ops} ops in {replica.applied_txns} txns "
+      f"(primary height={primary.dc.btree.height}, "
+      f"replica height={replica.db.dc.btree.height}); "
+      f"token-read served by {res.source}")
 
-print("2. replica: 4 KiB pages, apply the shipped LOGICAL records ...")
-replica = Database(cache_pages=2048, tracker_interval=50, bg_flush_per_txn=2,
-                   page_size=4096)
-replica.load_table("t", rows)
-committed = {r.txn for r in image.log.scan(1) if isinstance(r, CommitRec)}
-applied = 0
-for rec in image.log.scan(1):
-    if isinstance(rec, UpdateRec) and rec.txn in committed:
-        verb = {RecKind.UPDATE: "update", RecKind.INSERT: "insert",
-                RecKind.DELETE: "delete"}[rec.op]
-        replica.run_txn([(verb, rec.table, rec.key, rec.after)])
-        applied += 1
-print(f"   applied {applied} logical records "
-      f"(primary tree height={primary.dc.btree.height}, "
-      f"replica height={replica.dc.btree.height}, "
-      f"replica pages={len(replica.store)})")
+oracle = committed_state_oracle(primary.crash(), base)
+assert replica.user_state() == oracle, "replica diverged from primary!"
+print("2. replica state == primary committed state  (different page size!)")
 
-from repro.core import committed_state_oracle, make_key
-base = {make_key("t", k): v for k, v in rows}
-oracle = committed_state_oracle(image, base)
-assert dict(replica.scan_all()) == oracle, "replica diverged from primary!"
-print("3. replica state == primary committed state  (different page size!)")
-
-print("4. crash the replica; recover it with DPT-assisted logical redo ...")
-replica.checkpoint()
-for i in range(60):
-    replica.run_txn([("update", "t",
-                      f"k{rng.randrange(N_ROWS):07d}".encode(),
-                      rng.randbytes(80)) for _ in range(10)])
-r_image = replica.crash()
-r_db, stats = recover(r_image, Strategy.LOG1, cache_pages=2048,
-                      page_size=4096)
+print("3. crash the replica; recover locally with Log1; re-subscribe ...")
+stats = replica.recover_local(Strategy.LOG1)
 print(f"   redo: {stats.redo.submitted} submitted, {stats.redo.redone} "
-      f"redone, {stats.redo.skipped_dpt} DPT-pruned, "
-      f"DPT={stats.dpt_size}, fetches={stats.io.total_reads()}")
-print("   replica recovered on its own geometry — logical recovery is "
-      "placement-oblivious.")
+      f"redone, {stats.redo.skipped_dpt} DPT-pruned, DPT={stats.dpt_size}; "
+      f"watermark applied={replica.applied_lsn} resume={replica.resume_lsn}")
+replica.resubscribe(rs.shipper)
+for _ in range(30):
+    rs.write([("update", "t", f"k{rng.randrange(N_ROWS):07d}".encode(),
+               rng.randbytes(80)) for _ in range(10)])
+rs.sync()
+oracle = committed_state_oracle(primary.crash(), base)
+assert replica.user_state() == oracle, "replica diverged after recovery!"
+print("   converged again — recovery strategies compose with replication.")
+
+print("4. crash the PRIMARY mid-transaction; promote the standby ...")
+loser = primary.tc.begin()
+primary.tc.update(loser, "t", b"k0000002", b"LOSER")
+primary.log.flush()                       # stable but uncommitted
+image = primary.crash()
+new_primary = rs.promote(image=image)
+assert dict(new_primary.scan_all()) == committed_state_oracle(image, base), \
+    "promotion diverged!"
+new_primary.run_txn([("update", "t", b"k0000003", b"post-failover")])
+assert new_primary.dc.read("t", b"k0000003") == b"post-failover"
+print("   standby promoted: tail drained, loser undone with CLRs, "
+      "end-of-recovery checkpoint taken, writes accepted.")

@@ -7,7 +7,7 @@ Public surface:
 """
 from .btree import BTree
 from .bufferpool import BufferPool
-from .dc import DataComponent, make_key
+from .dc import DataComponent, make_key, split_key
 from .dpt import DPT, build_dpt_logical, build_dpt_sql
 from .log import LogManager
 from .pages import PAGE_SIZE, Page
@@ -19,7 +19,7 @@ from .storage import DiskModel, IOSim, IOStats, PageStore
 from .tc import CrashImage, Database, TransactionalComponent
 
 __all__ = [
-    "BTree", "BufferPool", "DataComponent", "make_key", "DPT",
+    "BTree", "BufferPool", "DataComponent", "make_key", "split_key", "DPT",
     "build_dpt_logical", "build_dpt_sql", "LogManager", "PAGE_SIZE", "Page",
     "LSN", "NULL_LSN", "NULL_PID", "PID", "BWRec", "CLRRec", "CommitRec",
     "DeltaRec", "RecKind", "SMORec", "UpdateRec", "RecoveryStats", "Strategy",

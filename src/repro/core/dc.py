@@ -28,6 +28,12 @@ def make_key(table: str, key: bytes) -> bytes:
     return struct.pack("<H", len(t)) + t + key
 
 
+def split_key(composite: bytes) -> tuple[str, bytes]:
+    """Inverse of make_key: (table, key) from a composite tree key."""
+    (tlen,) = struct.unpack_from("<H", composite)
+    return composite[2:2 + tlen].decode(), composite[2 + tlen:]
+
+
 @dataclass
 class RedoStats:
     submitted: int = 0

@@ -12,9 +12,10 @@ without scanning from the beginning of time.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional
+from typing import Iterator, List, Optional, Tuple
 
-from .records import (LSN, NULL_LSN, BeginCkptRec, EndCkptRec, LogRec, RSSPRec)
+from .records import (LSN, NULL_LSN, BeginCkptRec, CommitRec, EndCkptRec,
+                      LogRec, RSSPRec)
 
 # Purely for IO accounting: how many log records fit a "log page".
 LOG_RECS_PER_PAGE = 64
@@ -34,11 +35,18 @@ class LogManager:
         self._stable_idx: int = 0          # records [0, _stable_idx) are stable
         self.master = Master()
         self.forced_flushes = 0
+        self.max_txn: int = 0              # largest txn id ever logged
+        self.last_commit_lsn: LSN = NULL_LSN   # newest CommitRec appended
 
     # ---------------------------------------------------------------- append
     def append(self, rec: LogRec) -> LSN:
         rec.lsn = len(self._recs) + 1      # dense LSNs starting at 1
         self._recs.append(rec)
+        txn = getattr(rec, "txn", None)
+        if txn is not None and txn > self.max_txn:
+            self.max_txn = txn
+        if isinstance(rec, CommitRec):
+            self.last_commit_lsn = rec.lsn
         return rec.lsn
 
     def flush(self, upto: Optional[LSN] = None) -> LSN:
@@ -66,6 +74,26 @@ class LogManager:
         for i in range(max(from_lsn, 1) - 1, hi):
             yield self._recs[i]
 
+    def scan_stable(self, from_lsn: LSN,
+                    max_records: Optional[int] = None
+                    ) -> Tuple[List[LogRec], LSN]:
+        """Shipping-cursor read: a batch of stable records starting at
+        ``from_lsn``, plus the cursor for the next call.
+
+        Returns ``(records, next_lsn)`` where ``next_lsn`` is the LSN the
+        caller should resume from — callers keep no other state, which is
+        what makes a log shipper restartable: the cursor can always be
+        reconstructed from the consumer's durable resume point.  Only the
+        stable prefix is visible; the unforced tail is never shipped (it can
+        still be lost, and a replica must never apply work its primary could
+        disown)."""
+        lo = max(from_lsn, 1)
+        hi = self._stable_idx
+        if max_records is not None:
+            hi = min(hi, lo - 1 + max_records)
+        recs = self._recs[lo - 1: hi]
+        return recs, lo + len(recs)
+
     # ------------------------------------------------------------ checkpoint
     def set_master(self, *, end_ckpt: Optional[LSN] = None,
                    bckpt: Optional[LSN] = None,
@@ -86,6 +114,16 @@ class LogManager:
         survivor.master = Master(self.master.end_ckpt_lsn,
                                  self.master.bckpt_lsn,
                                  self.master.rssp_rec_lsn)
+        # max_txn may over-approximate (tail txns lost in the crash), which is
+        # safe: recovery only needs fresh txn ids to be strictly larger than
+        # any id that can appear in the surviving log.
+        survivor.max_txn = self.max_txn
+        if self.last_commit_lsn <= self._stable_idx:
+            survivor.last_commit_lsn = self.last_commit_lsn
+        else:   # a commit appended but not yet forced was lost in the crash
+            survivor.last_commit_lsn = next(
+                (r.lsn for r in reversed(survivor._recs)
+                 if isinstance(r, CommitRec)), NULL_LSN)
         return survivor
 
     def n_log_pages(self, from_lsn: LSN) -> int:

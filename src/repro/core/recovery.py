@@ -124,6 +124,8 @@ def recover(image: CrashImage, strategy: Strategy, *,
             lookahead: int = 64,
             delta_mode: str = "paper",
             page_size: int = None,
+            tracker_interval: int = 100,
+            bg_flush_per_txn: int = 0,
             run_undo: bool = True) -> tuple[Database, RecoveryStats]:
     """Recover a crash image with one strategy; returns a live Database that
     can continue normal execution, plus the instrumented stats."""
@@ -198,13 +200,10 @@ def recover(image: CrashImage, strategy: Strategy, *,
     tc = TransactionalComponent(log, dc)
     tc.active = dict(active)
     # txn ids must never be reused across restarts (a new txn id colliding
-    # with a pre-crash aborted txn would corrupt outcome attribution)
-    max_txn = 0
-    for r in log.scan(1):
-        t = getattr(r, "txn", None)
-        if t is not None and t > max_txn:
-            max_txn = t
-    tc._next_txn = max_txn + 1
+    # with a pre-crash aborted txn would corrupt outcome attribution).
+    # LogManager tracks the high-water mark at append time, so no second
+    # O(log) scan is needed here.
+    tc._next_txn = log.max_txn + 1
     stats.losers = len(active)
     if run_undo:
         before = len(log)
@@ -223,8 +222,8 @@ def recover(image: CrashImage, strategy: Strategy, *,
 
     db = Database.__new__(Database)
     db.store, db.log, db.dc, db.tc = store, log, dc, tc
-    db.tracker_interval = 100
-    db.bg_flush_per_txn = 0
+    db.tracker_interval = tracker_interval
+    db.bg_flush_per_txn = bg_flush_per_txn
     db._updates_since_tracker = 0
     stats.total_wall_ms = (time.perf_counter() - t0) * 1e3
     return db, stats

@@ -29,6 +29,12 @@ class TransactionalComponent:
         self.dc = dc
         self.active: dict[TxnId, LSN] = {}       # txn -> last LSN of its chain
         self._next_txn: TxnId = 1
+        # commit hooks: called as f(txn, commit_lsn) after the group-commit
+        # force, i.e. once the txn's records are stable and thus shippable.
+        self.on_commit: list = []
+        # per-txn first write of each (table, key): (lsn, before-image) —
+        # the committed value at the time the in-flight txn first touched it
+        self._first_writes: dict[TxnId, dict] = {}
 
     # ------------------------------------------------------------------ txns
     def begin(self) -> TxnId:
@@ -44,6 +50,8 @@ class TransactionalComponent:
                         after=after, prev_lsn=self.active[txn], op=op)
         self.log.append(rec)
         self.active[txn] = rec.lsn
+        self._first_writes.setdefault(txn, {}).setdefault(
+            (table, key), (rec.lsn, before))
         self.dc.apply(rec)       # DC stamps rec.pid (prototype common log)
         return rec
 
@@ -58,12 +66,42 @@ class TransactionalComponent:
         before = self.dc.read(table, key)
         self._log_op(txn, table, key, before, None, RecKind.DELETE)
 
-    def commit(self, txn: TxnId) -> None:
+    def committed_read(self, table: str, key: bytes) -> Optional[bytes]:
+        """Read (table, key) as of the last commit.  The DC executes updates
+        at log time — before commit — so a plain ``dc.read`` sees in-flight
+        work.  The first in-flight writer of a key captured the committed
+        value as its before-image; ``_first_writes`` keeps that per active
+        transaction, making this O(active txns) per read."""
+        best: Optional[tuple] = None
+        for txn in self.active:
+            hit = self._first_writes.get(txn, {}).get((table, key))
+            if hit is not None and (best is None or hit[0] < best[0]):
+                best = hit
+        if best is not None:
+            return best[1]
+        return self.dc.read(table, key)
+
+    def apply_shipped(self, txn: TxnId, shipped: UpdateRec) -> None:
+        """Re-log and re-execute a logical record shipped from another TC.
+
+        The shipped record is read-only (it belongs to the source's log); a
+        fresh record is appended to OUR log with OUR LSN space, reusing the
+        shipped before-image so the undo chain works without a local read.
+        This is the replica apply hook: logical identity (table, key) crosses
+        the wire, PIDs never do."""
+        self._log_op(txn, shipped.table, shipped.key, shipped.before,
+                     shipped.after, shipped.op)
+
+    def commit(self, txn: TxnId) -> LSN:
         rec = CommitRec(txn=txn, prev_lsn=self.active[txn])
         self.log.append(rec)
         self.log.flush()                          # group-commit force
         self.dc.eosl(self.log.stable_lsn)         # EOSL push
         del self.active[txn]
+        self._first_writes.pop(txn, None)
+        for hook in self.on_commit:
+            hook(txn, rec.lsn)
+        return rec.lsn
 
     def abort(self, txn: TxnId) -> None:
         """Logical undo of the transaction's chain, writing CLRs."""
@@ -81,6 +119,7 @@ class TransactionalComponent:
         self.log.append(arec)
         self.log.flush()
         del self.active[txn]
+        self._first_writes.pop(txn, None)
 
     def _compensate(self, txn: TxnId, rec: UpdateRec) -> None:
         """Undo one update logically; the CLR is redo-only."""
@@ -146,8 +185,23 @@ class Database:
         self.tc.checkpoint()
 
     # ------------------------------------------------------------- workload
-    def run_txn(self, ops: list[tuple[str, str, bytes, Optional[bytes]]]) -> None:
-        """ops: (verb, table, key, value) with verb in {update, insert, delete}."""
+    def note_update(self) -> None:
+        """Tracker cadence: count one logical update; emit Delta/BW records
+        every ``tracker_interval`` updates."""
+        self._updates_since_tracker += 1
+        if self._updates_since_tracker >= self.tracker_interval:
+            self.dc.emit_trackers()
+            self._updates_since_tracker = 0
+
+    def post_commit_flush(self) -> None:
+        """Background page flushing budgeted per committed transaction."""
+        if self.bg_flush_per_txn:
+            self.dc.maybe_background_flush(self.bg_flush_per_txn)
+
+    def run_txn(self, ops: list[tuple[str, str, bytes, Optional[bytes]]]) -> LSN:
+        """ops: (verb, table, key, value) with verb in {update, insert, delete}.
+        Returns the commit LSN — usable as a read-your-writes staleness token
+        against a replica set."""
         txn = self.tc.begin()
         for verb, table, key, value in ops:
             if verb == "update":
@@ -156,13 +210,10 @@ class Database:
                 self.tc.insert(txn, table, key, value)
             else:
                 self.tc.delete(txn, table, key)
-            self._updates_since_tracker += 1
-            if self._updates_since_tracker >= self.tracker_interval:
-                self.dc.emit_trackers()
-                self._updates_since_tracker = 0
-        self.tc.commit(txn)
-        if self.bg_flush_per_txn:
-            self.dc.maybe_background_flush(self.bg_flush_per_txn)
+            self.note_update()
+        commit_lsn = self.tc.commit(txn)
+        self.post_commit_flush()
+        return commit_lsn
 
     def checkpoint(self) -> LSN:
         return self.tc.checkpoint()

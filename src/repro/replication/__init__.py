@@ -1,0 +1,23 @@
+"""Logical log-shipping replication (Deuteronomy-style TC/DC unbundling).
+
+The PID-free logical log is the transport: one primary's stable log stream
+maintains any number of standby DCs, each with its own physical layout.
+
+Public surface:
+  LogShipper / ShipBatch      cursor-based stable-log streaming
+  Replica                     continuous committed-only logical redo; local
+                              crash recovery via Strategy.LOG1/LOG2
+  ReplicaSet / ReadResult     staleness-bounded read routing + failover
+  promote                     standby -> writable primary
+"""
+from .failover import promote
+from .replica import (REPL_KEY, REPL_TABLE, Replica, pack_watermark,
+                      unpack_watermark)
+from .router import ReadResult, ReplicaSet
+from .shipper import SHIPPED_KINDS, LogShipper, ShipBatch
+
+__all__ = [
+    "LogShipper", "ShipBatch", "SHIPPED_KINDS", "Replica", "REPL_TABLE",
+    "REPL_KEY", "pack_watermark", "unpack_watermark", "ReplicaSet",
+    "ReadResult", "promote",
+]

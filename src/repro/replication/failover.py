@@ -1,0 +1,67 @@
+"""Failover: promote a hot standby to a writable primary.
+
+``promote`` is deliberately shaped like the tail of crash recovery
+(Section 2.1's repeat-history-then-undo), because that is exactly what a
+takeover is: the stable shipped log plays the role of the surviving log.
+
+  1. Drain — ship and apply every remaining stable record, so all
+     transactions the dead primary acknowledged as committed are present.
+  2. Losers — transactions still in the replica's in-flight buffer have a
+     stable prefix but no commit: repeat their history through the local TC,
+     then undo them logically with the *existing*
+     ``TransactionalComponent.abort`` (CLR-protected).  This leaves the same
+     abort trail in the new primary's log that crash recovery would, so a
+     future consumer of the new primary's log sees those transactions
+     resolved rather than silently vanished.  Undo is per-transaction in
+     descending last-LSN order — ``recover()``'s exact discipline, and like
+     it correct under the TC's logical-locking model, which excludes
+     write-write interleavings between uncommitted transactions on a key.
+  3. Retire the ``__repl`` watermark row — it is a position in the DEAD
+     primary's LSN space, meaningless (and a phantom row for scans) on a
+     database that is itself a primary now.
+  4. End-of-recovery checkpoint — same reason ``recover()`` takes one:
+     pages dirtied by apply carry old LSNs that would violate the
+     Delta-record rLSN approximation for post-promotion Delta records.
+
+Returns the replica's ``Database``, now writable as the new primary.
+"""
+from __future__ import annotations
+
+from ..core.tc import Database
+from .replica import REPL_KEY, REPL_TABLE, Replica
+from .shipper import LogShipper
+
+
+def promote(replica: Replica, shipper: LogShipper) -> Database:
+    if replica.promoted:
+        raise RuntimeError(f"replica {replica.replica_id} already promoted")
+
+    # 1. drain the shipped tail
+    shipper.drain(replica.replica_id, replica.apply_batch)
+
+    # 2. repeat history for ALL in-flight losers in primary-LSN order, then
+    # undo newest-first — recover()'s exact discipline.  Ordering matters
+    # when losers interleave on a key: undo restores original before-images,
+    # which only compose back to the committed value newest-first.
+    local: dict[int, int] = {}
+    for rec in sorted((r for buf in replica.pending.values() for r in buf),
+                      key=lambda r: r.lsn):
+        txn = local.get(rec.txn)
+        if txn is None:
+            txn = local[rec.txn] = replica.db.tc.begin()
+        replica.db.tc.apply_shipped(txn, rec)
+    for src_txn in sorted(replica.pending,
+                          key=lambda t: -replica.pending[t][-1].lsn):
+        replica.db.tc.abort(local[src_txn])   # logical undo, CLRs + AbortRec
+    replica.pending = {}
+
+    # 3. retire the old-LSN-space watermark row
+    if replica.db.dc.read(REPL_TABLE, REPL_KEY) is not None:
+        txn = replica.db.tc.begin()
+        replica.db.tc.delete(txn, REPL_TABLE, REPL_KEY)
+        replica.db.tc.commit(txn)
+
+    # 4. end-of-recovery checkpoint; the database is now a writable primary
+    replica.db.checkpoint()
+    replica.promoted = True
+    return replica.db

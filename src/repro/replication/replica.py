@@ -1,0 +1,204 @@
+"""Hot standby: continuous logical redo of a shipped log stream onto a DC
+with its own geometry.
+
+The replica is a full ``Database`` — own log, own B-tree (possibly a
+different page size than the primary), own Delta-records and DPT — so the
+paper's entire recovery machinery works *locally*: a crashed replica
+recovers itself with ``Strategy.LOG1``/``LOG2`` and then re-subscribes,
+rather than being re-seeded from scratch.
+
+Apply discipline (committed-only):
+  * update records buffer per source transaction (in-flight work is never
+    visible to reads);
+  * a commit record replays the buffered chain through the replica's own TC
+    as one local transaction;
+  * an abort record discards the buffer (CLRs never ship: a transaction
+    either commits cleanly or ends in AbortRec, and the abort alone tells a
+    buffering consumer everything).
+
+Durable watermark: every applied commit also writes, *inside the same local
+transaction*, a row in the ``__repl`` system table recording
+``(applied, resume)`` in primary-LSN space:
+
+  applied — the primary commit LSN of the last transaction applied; a
+            replica can serve a read-your-writes token t iff applied >= t.
+  resume  — where shipping must restart so that no in-flight transaction's
+            records are missed: min over buffered transactions of their
+            first record's LSN (or applied+1 when none are buffered).
+
+Because the watermark commits atomically with the data, local crash recovery
+reconstructs exactly the replication position matching the recovered state —
+re-subscribing from ``resume`` re-ships some records, and commits with
+LSN <= ``applied`` are dropped as duplicates (idempotent re-apply).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Optional
+
+from ..core.dc import make_key, split_key
+from ..core.records import (LSN, NULL_LSN, AbortRec, CommitRec, LogRec,
+                            UpdateRec)
+from ..core.recovery import RecoveryStats, Strategy, recover
+from ..core.tc import CrashImage, Database
+from .shipper import LogShipper, ShipBatch
+
+REPL_TABLE = "__repl"
+REPL_KEY = b"applied"
+
+
+def pack_watermark(applied: LSN, resume: LSN) -> bytes:
+    return struct.pack("<QQ", applied, resume)
+
+
+def unpack_watermark(raw: bytes) -> tuple[LSN, LSN]:
+    return struct.unpack("<QQ", raw)
+
+
+class Replica:
+    def __init__(self, replica_id: str, *, page_size: Optional[int] = None,
+                 cache_pages: int = 4096, tracker_interval: int = 100,
+                 bg_flush_per_txn: int = 0, delta_mode: str = "paper",
+                 seed_tables: Optional[dict[str, list]] = None):
+        """``seed_tables``: table -> [(key, value)] initial load, which must
+        match the primary's state at the LSN the subscription starts from."""
+        self.replica_id = replica_id
+        self.page_size = page_size
+        self.cache_pages = cache_pages
+        self.delta_mode = delta_mode
+        self.tracker_interval = tracker_interval
+        self.bg_flush_per_txn = bg_flush_per_txn
+        self.db = Database(cache_pages=cache_pages, delta_mode=delta_mode,
+                           tracker_interval=tracker_interval,
+                           bg_flush_per_txn=bg_flush_per_txn,
+                           page_size=page_size)
+        if seed_tables:
+            items = [(make_key(t, k), v)
+                     for t, rows in seed_tables.items() for k, v in rows]
+            self.db.dc.bulk_build(items)
+            self.db.tc.checkpoint()
+        else:
+            self.db.bootstrap_empty()
+        self.applied_lsn: LSN = NULL_LSN       # primary commit watermark
+        self.resume_lsn: LSN = 1               # durable shipping resume point
+        self._ship_pos: LSN = 1                # next primary LSN expected
+        self.pending: dict[int, list[UpdateRec]] = {}
+        self.applied_txns = 0
+        self.applied_ops = 0
+        self.dropped_dup_txns = 0
+        self.promoted = False
+
+    # ------------------------------------------------------------ apply path
+    def apply_batch(self, batch: ShipBatch) -> int:
+        """Continuous redo of one shipped batch; returns ops applied.
+
+        Rejects a batch that skips ahead of the last position this replica
+        consumed: a gap means records were shipped elsewhere (e.g. the
+        shipper cursor is stale after a local recovery without
+        ``resubscribe``), and applying past it would silently lose the
+        buffered prefix of straddling transactions."""
+        if batch.from_lsn > self._ship_pos:
+            raise RuntimeError(
+                f"replica {self.replica_id}: shipped batch starts at LSN "
+                f"{batch.from_lsn} but {self._ship_pos} was expected — "
+                f"re-subscribe from resume_lsn={self.resume_lsn}")
+        n = 0
+        for rec in batch.records:
+            n += self.apply_record(rec)
+        self._ship_pos = max(self._ship_pos, batch.next_lsn)
+        return n
+
+    def apply_record(self, rec: LogRec) -> int:
+        if self.promoted:
+            raise RuntimeError(
+                f"replica {self.replica_id} was promoted; applying shipped "
+                "records from the old primary would corrupt the new one")
+        if isinstance(rec, UpdateRec):
+            self.pending.setdefault(rec.txn, []).append(rec)
+        elif isinstance(rec, AbortRec):
+            self.pending.pop(rec.txn, None)
+        elif isinstance(rec, CommitRec):
+            ops = self.pending.pop(rec.txn, [])
+            if rec.lsn <= self.applied_lsn:
+                # duplicate from a re-subscription rescan: already applied
+                self.dropped_dup_txns += 1
+                return 0
+            return self._apply_commit(rec.txn, rec.lsn, ops)
+        return 0
+
+    def _apply_commit(self, src_txn: int, commit_lsn: LSN,
+                      ops: list[UpdateRec]) -> int:
+        resume = min([buf[0].lsn for buf in self.pending.values()]
+                     + [commit_lsn + 1])
+        txn = self.db.tc.begin()
+        try:
+            for rec in ops:
+                self.db.tc.apply_shipped(txn, rec)
+                self.db.note_update()        # replica-local Delta-records
+            self.db.tc.update(txn, REPL_TABLE, REPL_KEY,
+                              pack_watermark(commit_lsn, resume))
+        except Exception:
+            # keep the replica committed-only consistent: logically undo the
+            # partially applied prefix (before-images are on the local log),
+            # put the buffer back, and surface the failure — e.g. a record
+            # that fits the primary's page size but not this geometry
+            self.db.tc.abort(txn)
+            self.pending[src_txn] = ops
+            raise
+        self.db.tc.commit(txn)
+        self.db.post_commit_flush()
+        self.applied_lsn, self.resume_lsn = commit_lsn, resume
+        self.applied_txns += 1
+        self.applied_ops += len(ops)
+        return len(ops)
+
+    # ------------------------------------------------------------- lag / reads
+    def lag(self, primary_log) -> int:
+        """Staleness in primary-LSN units: distance from the primary's last
+        *stable commit* (non-commit tail records — in-flight work, abort
+        trails — cannot make a committed-only replica stale)."""
+        lc = min(primary_log.last_commit_lsn, primary_log.stable_lsn)
+        return max(0, lc - self.applied_lsn)
+
+    def read(self, table: str, key: bytes) -> Optional[bytes]:
+        return self.db.dc.read(table, key)
+
+    def user_state(self) -> dict[bytes, bytes]:
+        """Replica state minus the ``__repl`` system table — directly
+        comparable against ``committed_state_oracle``."""
+        return {k: v for k, v in self.db.scan_all()
+                if split_key(k)[0] != REPL_TABLE}
+
+    # ------------------------------------------------------- crash / recovery
+    def crash(self) -> CrashImage:
+        return self.db.crash()
+
+    def recover_local(self, strategy: Strategy = Strategy.LOG1,
+                      image: Optional[CrashImage] = None) -> RecoveryStats:
+        """Crash (or take ``image``) and recover THIS replica with the
+        paper's own machinery, on its own geometry, from its own
+        Delta-records — then restore the replication position from the
+        durable watermark row.  In-flight buffers are volatile and lost; the
+        ``resume`` watermark is exactly what makes that safe."""
+        image = image or self.db.crash()
+        self.db, stats = recover(image, strategy,
+                                 cache_pages=self.cache_pages,
+                                 delta_mode=self.delta_mode,
+                                 page_size=self.page_size,
+                                 tracker_interval=self.tracker_interval,
+                                 bg_flush_per_txn=self.bg_flush_per_txn)
+        self.pending = {}
+        raw = self.db.dc.read(REPL_TABLE, REPL_KEY)
+        self.applied_lsn, self.resume_lsn = \
+            unpack_watermark(raw) if raw is not None else (NULL_LSN, 1)
+        self._ship_pos = self.resume_lsn
+        return stats
+
+    def resubscribe(self, shipper: LogShipper) -> None:
+        """Point ``shipper`` at this replica's durable resume point.  Also
+        rewinds the in-flight buffers: everything from ``resume_lsn`` on is
+        about to be re-shipped, and keeping stale buffers would double-apply
+        straddling transactions."""
+        self.pending = {}
+        self._ship_pos = self.resume_lsn
+        shipper.subscribe(self.replica_id, self.resume_lsn)

@@ -1,0 +1,135 @@
+"""Read routing over a primary + N hot standbys.
+
+Consistency contract: every read carries an optional staleness bound —
+
+  ``min_lsn``  a read-your-writes token (the commit LSN returned by
+               ``write``): only replicas whose ``applied_lsn`` has reached
+               the token may serve, because commits apply in primary-LSN
+               order, so ``applied_lsn >= t`` implies every commit <= t is
+               visible.
+  ``max_lag``  an absolute bound in primary-LSN units on how far behind the
+               serving replica may be.
+
+A read no replica can serve within its bound falls back to the primary,
+which is always current.  Eligible replicas are balanced round-robin.
+
+Failover: ``promote`` drains and promotes the most caught-up replica (see
+``failover.promote``) and re-points the set's shipper at the new primary's
+log.  The remaining replicas hold watermarks in the *old* primary's LSN
+space, which does not map onto the new log, so they are detached; re-seeding
+survivors against a new primary (and parallel per-key-range apply) is the
+ROADMAP's open item.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from ..core.records import LSN, NULL_LSN
+from ..core.tc import CrashImage, Database
+from .failover import promote
+from .replica import Replica
+from .shipper import LogShipper
+
+
+@dataclass
+class ReadResult:
+    value: Optional[bytes]
+    source: str                 # replica id, or "primary"
+    applied_lsn: LSN            # position the serving node had reached
+
+
+class ReplicaSet:
+    def __init__(self, primary: Database, replicas: list[Replica] = (),
+                 *, batch_records: int = 256, auto_sync: bool = False):
+        self.primary = primary
+        self.shipper = LogShipper(primary.log, batch_records=batch_records)
+        self.replicas: dict[str, Replica] = {}
+        for r in replicas:
+            self.add_replica(r)
+        self._rr = 0
+        self.reads_primary = 0
+        self.reads_replica = 0
+        self.auto_sync = auto_sync
+        if auto_sync:
+            # commit hook: pump shipping as soon as new records are stable
+            primary.tc.on_commit.append(lambda _txn, _lsn: self.sync())
+
+    def add_replica(self, replica: Replica) -> None:
+        self.replicas[replica.replica_id] = replica
+        replica.resubscribe(self.shipper)
+
+    # -------------------------------------------------------------- traffic
+    def write(self, ops) -> LSN:
+        """Run a transaction on the primary; the returned commit LSN is the
+        read-your-writes token for subsequent routed reads."""
+        return self.primary.run_txn(ops)
+
+    def sync(self, max_records: Optional[int] = None) -> int:
+        """Pump shipping: one bounded poll per replica (or full drain when
+        ``max_records`` is None).  Returns ops applied across the set."""
+        applied = 0
+        for r in self.replicas.values():
+            if max_records is None:
+                before = r.applied_ops
+                self.shipper.drain(r.replica_id, r.apply_batch)
+                applied += r.applied_ops - before
+            else:
+                applied += r.apply_batch(
+                    self.shipper.poll(r.replica_id, max_records))
+        return applied
+
+    def read(self, table: str, key: bytes, *, min_lsn: LSN = NULL_LSN,
+             max_lag: Optional[int] = None) -> ReadResult:
+        reps = list(self.replicas.values())
+        for i in range(len(reps)):
+            r = reps[(self._rr + i) % len(reps)]
+            if r.applied_lsn < min_lsn:
+                continue
+            if max_lag is not None and r.lag(self.primary.log) > max_lag:
+                continue
+            self._rr = (self._rr + i + 1) % max(len(reps), 1)
+            self.reads_replica += 1
+            return ReadResult(r.read(table, key), r.replica_id, r.applied_lsn)
+        self.reads_primary += 1
+        # committed_read, not dc.read: the fallback must honor the same
+        # committed-only visibility the replica path enforces
+        return ReadResult(self.primary.tc.committed_read(table, key),
+                          "primary", self.primary.log.last_commit_lsn)
+
+    # -------------------------------------------------------------- failover
+    def max_lag(self) -> int:
+        return max((r.lag(self.primary.log) for r in self.replicas.values()),
+                   default=0)
+
+    def promote(self, replica_id: Optional[str] = None,
+                image: Optional[CrashImage] = None) -> Database:
+        """Fail over to ``replica_id`` (default: the most caught-up
+        replica).  ``image``: the dead primary's crash image; when given,
+        the drain reads the stable log that survived the crash rather than
+        the live primary's."""
+        if not self.replicas:
+            raise RuntimeError("no replicas to promote (a prior failover "
+                               "detaches survivors; re-seed standbys first)")
+        if replica_id is None:
+            replica_id = max(self.replicas,
+                             key=lambda rid: self.replicas[rid].applied_lsn)
+        chosen = self.replicas.pop(replica_id)
+        shipper = self.shipper if image is None \
+            else self._shipper_for_image(image, chosen)
+        new_primary = promote(chosen, shipper)
+        self.primary = new_primary
+        self.shipper = LogShipper(new_primary.log,
+                                  batch_records=self.shipper.batch_records)
+        self.replicas = {}          # old-LSN-space survivors: see module doc
+        if self.auto_sync:          # the contract survives the failover
+            new_primary.tc.on_commit.append(lambda _txn, _lsn: self.sync())
+        return new_primary
+
+    def _shipper_for_image(self, image: CrashImage,
+                           replica: Replica) -> LogShipper:
+        s = LogShipper(image.log, batch_records=self.shipper.batch_records)
+        s.subscribe(replica.replica_id,
+                    self.shipper.cursors.get(replica.replica_id,
+                                             replica.resume_lsn))
+        return s

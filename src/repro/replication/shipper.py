@@ -1,0 +1,123 @@
+"""Log shipping: incremental, cursor-based streaming of the primary's stable
+logical log.
+
+The paper's PID-free log is what makes this subsystem possible at all
+(Section 1.1): the records crossing the wire carry only logical identity
+(table, key, before, after), so the consumer may have any physical layout —
+different page size, different B-tree shape, its own Delta-records.  This is
+the "unbundled" Deuteronomy deployment: one TC log, many DCs.
+
+Only the *stable* prefix ships.  A replica must never apply work its primary
+could still disown in a crash, so the shipper reads through
+``LogManager.scan_stable`` and never sees the unforced tail.
+
+Cursors are soft state.  A shipper that restarts (or a brand-new shipper
+pointed at the same log) resumes from the consumer's durable resume point —
+the replica persists (applied, resume) transactionally with the data it
+applies, so no shipper-side durability is needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Union
+
+from ..core.log import LogManager
+from ..core.records import LSN, AbortRec, CommitRec, LogRec, UpdateRec
+
+# What crosses the wire: the TC-logical records a committed-only consumer
+# needs.  DC-private physical records (Delta, BW, SMO, RSSP) and checkpoint
+# records describe the *primary's* geometry and recovery state; they are
+# meaningless — and actively harmful — on a DC with its own layout.  CLRs
+# are also omitted: a transaction either commits cleanly (no CLRs) or ends
+# in an AbortRec, and the abort alone tells a buffering consumer to discard.
+SHIPPED_KINDS = (UpdateRec, CommitRec, AbortRec)
+
+
+@dataclass
+class ShipBatch:
+    """One poll's worth of shipped records.
+
+    ``records`` keeps the primary's LSNs intact (replicas key their
+    watermarks on primary LSNs); ``from_lsn``/``next_lsn`` delimit the LSN
+    range this batch covers (consumers use them to detect gaps in the
+    stream); ``has_more`` says whether more stable records were available
+    beyond this batch at poll time."""
+    records: List[LogRec] = field(default_factory=list)
+    from_lsn: LSN = 1
+    next_lsn: LSN = 1
+    has_more: bool = False
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+class LogShipper:
+    """Streams stable log records to named subscribers in bounded batches.
+
+    ``source`` may be a live ``Database``, a ``CrashImage`` (failover: the
+    primary is dead but its stable log survives), or a bare ``LogManager``.
+    """
+
+    def __init__(self, source: Union[LogManager, object],
+                 batch_records: int = 256):
+        self.log: LogManager = source if isinstance(source, LogManager) \
+            else source.log
+        self.batch_records = batch_records
+        self.cursors: dict[str, LSN] = {}
+        self.shipped_records = 0
+        self.polls = 0
+
+    # --------------------------------------------------------- subscriptions
+    def subscribe(self, replica_id: str, from_lsn: LSN = 1) -> None:
+        """(Re-)register a subscriber; ``from_lsn`` is typically the
+        replica's durable resume point."""
+        self.cursors[replica_id] = max(from_lsn, 1)
+
+    def unsubscribe(self, replica_id: str) -> None:
+        self.cursors.pop(replica_id, None)
+
+    def backlog(self, replica_id: str) -> int:
+        """Stable records not yet shipped to this subscriber."""
+        return max(0, self.log.stable_lsn - (self.cursors[replica_id] - 1))
+
+    # ---------------------------------------------------------------- polling
+    def poll(self, replica_id: str,
+             max_records: Optional[int] = None) -> ShipBatch:
+        """Ship the next batch for ``replica_id`` and advance its cursor.
+
+        Only logical (shippable) records count against the batch budget;
+        filtered physical records are skipped over for free, so a bounded
+        poll always makes logical progress when logical backlog exists —
+        a checkpoint burst on the primary can't starve a small batch."""
+        cur = self.cursors[replica_id]
+        budget = max_records if max_records is not None else self.batch_records
+        shipped: List[LogRec] = []
+        nxt = cur
+        done = False
+        while not done:
+            chunk, _ = self.log.scan_stable(nxt, 64)
+            if not chunk:
+                break
+            for rec in chunk:
+                if isinstance(rec, SHIPPED_KINDS):
+                    if len(shipped) >= budget:
+                        done = True     # leave this record for the next poll
+                        break
+                    shipped.append(rec)
+                nxt = rec.lsn + 1
+        self.cursors[replica_id] = nxt
+        self.shipped_records += len(shipped)
+        self.polls += 1
+        return ShipBatch(records=shipped, from_lsn=cur, next_lsn=nxt,
+                         has_more=nxt <= self.log.stable_lsn)
+
+    def drain(self, replica_id: str, apply) -> int:
+        """Poll until no stable records remain, feeding each batch to
+        ``apply``; returns the number of records shipped."""
+        total = 0
+        while True:
+            batch = self.poll(replica_id)
+            total += len(batch)
+            apply(batch)
+            if not batch.has_more:
+                return total

@@ -9,6 +9,10 @@ Invariant 3 (pages): serialization round-trips arbitrary record sets.
 """
 import random
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

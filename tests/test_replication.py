@@ -1,0 +1,387 @@
+"""Replication subsystem tests: log shipping, heterogeneous standby apply,
+replica-local crash recovery + re-subscription, staleness-bounded routing,
+and failover promotion."""
+import random
+
+from repro.core import (Database, LogManager, Strategy, UpdateRec,
+                        committed_state_oracle, make_key)
+from repro.core.records import CommitRec
+from repro.replication import (LogShipper, Replica, ReplicaSet, promote)
+
+N_ROWS = 400
+VAL = 40
+
+
+def make_primary(rng, page_size=8192):
+    rows = [(f"k{i:05d}".encode(), rng.randbytes(VAL)) for i in range(N_ROWS)]
+    db = Database(page_size=page_size, cache_pages=256, tracker_interval=25,
+                  bg_flush_per_txn=2)
+    db.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+    return db, rows, base
+
+
+def make_replica(rows, rid="r1", page_size=4096):
+    return Replica(rid, page_size=page_size, cache_pages=512,
+                   tracker_interval=25, bg_flush_per_txn=2,
+                   seed_tables={"t": rows})
+
+
+def random_ops(rng, n):
+    ops = []
+    for _ in range(n):
+        roll = rng.random()
+        if roll < 0.7:
+            ops.append(("update", "t", f"k{rng.randrange(N_ROWS):05d}".encode(),
+                        rng.randbytes(VAL)))
+        elif roll < 0.9:
+            ops.append(("insert", "t", f"x{rng.randrange(10**6):07d}".encode(),
+                        rng.randbytes(VAL)))
+        else:
+            ops.append(("delete", "t", f"k{rng.randrange(N_ROWS):05d}".encode(),
+                        None))
+    return ops
+
+
+def drive(db, rng, n_txns, abort_frac=0.15):
+    for _ in range(n_txns):
+        ops = random_ops(rng, rng.randrange(1, 6))
+        if rng.random() < abort_frac:
+            txn = db.tc.begin()
+            for verb, table, key, value in ops:
+                if verb == "update":
+                    db.tc.update(txn, table, key, value)
+                elif verb == "insert":
+                    db.tc.insert(txn, table, key, value)
+                else:
+                    db.tc.delete(txn, table, key)
+            db.tc.abort(txn)
+        else:
+            db.run_txn(ops)
+
+
+# ---------------------------------------------------------------- scan_stable
+def test_scan_stable_batches_and_excludes_tail():
+    log = LogManager()
+    for i in range(10):
+        log.append(UpdateRec(txn=1, table="t", key=b"k", after=b"v"))
+    log.flush(upto=7)                       # records 8..10 unforced
+    recs, nxt = log.scan_stable(1, max_records=3)
+    assert [r.lsn for r in recs] == [1, 2, 3] and nxt == 4
+    recs, nxt = log.scan_stable(nxt, max_records=100)
+    assert [r.lsn for r in recs] == [4, 5, 6, 7] and nxt == 8
+    recs, nxt = log.scan_stable(nxt)        # tail is invisible
+    assert recs == [] and nxt == 8
+    log.flush()
+    recs, nxt = log.scan_stable(nxt)
+    assert [r.lsn for r in recs] == [8, 9, 10] and nxt == 11
+
+
+def test_shipper_filters_to_logical_records():
+    rng = random.Random(0)
+    primary, rows, _ = make_primary(rng)
+    drive(primary, rng, 10, abort_frac=0.0)
+    primary.checkpoint()                    # emits ckpt/Delta/BW/RSSP records
+    shipper = LogShipper(primary, batch_records=10_000)
+    shipper.subscribe("r1")
+    batch = shipper.poll("r1")
+    kinds = {type(r).__name__ for r in batch.records}
+    assert kinds <= {"UpdateRec", "CommitRec", "AbortRec"}
+    assert any(isinstance(r, CommitRec) for r in batch.records)
+
+
+def test_poll_budget_counts_only_logical_records():
+    """A checkpoint burst of physical records must not starve a bounded
+    poll: the budget counts shipped records, filtered ones skip for free."""
+    rng = random.Random(15)
+    primary, rows, _ = make_primary(rng)
+    drive(primary, rng, 3, abort_frac=0.0)
+    primary.checkpoint()                   # bCkpt/Delta/BW/RSSP/eCkpt burst
+    drive(primary, rng, 3, abort_frac=0.0)
+    shipper = LogShipper(primary, batch_records=4)
+    shipper.subscribe("r1", 1)
+    total = 0
+    while True:
+        batch = shipper.poll("r1")
+        assert len(batch.records) <= 4
+        total += len(batch.records)
+        # bounded poll makes logical progress whenever backlog exists
+        if batch.has_more:
+            assert len(batch.records) == 4
+        else:
+            break
+    logical = sum(1 for r in primary.log.scan(1)
+                  if type(r).__name__ in ("UpdateRec", "CommitRec",
+                                          "AbortRec"))
+    assert total == logical
+
+
+# --------------------------------------------------- heterogeneous replication
+def test_heterogeneous_replica_matches_oracle():
+    rng = random.Random(1)
+    primary, rows, base = make_primary(rng, page_size=8192)
+    rep = make_replica(rows, page_size=4096)      # half the primary page size
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 60)
+    rs.sync()
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert rep.user_state() == oracle
+    assert rep.applied_lsn > 0 and rep.lag(primary.log) == 0
+    # the replica built its own geometry, not a copy of the primary's
+    assert rep.db.dc.page_size != primary.dc.page_size
+
+
+def test_commit_buffering_hides_inflight_work():
+    rng = random.Random(2)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    txn = primary.tc.begin()                     # in-flight, stable, no commit
+    primary.tc.update(txn, "t", b"k00000", b"UNCOMMITTED")
+    primary.log.flush()
+    rs.sync()
+    assert rep.read("t", b"k00000") == base[make_key("t", b"k00000")]
+    assert txn in rep.pending                    # buffered, not applied
+    primary.tc.commit(txn)
+    rs.sync()
+    assert rep.read("t", b"k00000") == b"UNCOMMITTED"
+
+
+# -------------------------------------------- replica crash -> local recovery
+def test_replica_crash_recovers_locally_and_resubscribes():
+    rng = random.Random(3)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 40)
+    rs.sync()
+    drive(primary, rng, 30)
+    rs.sync(max_records=40)                  # mid-apply: partial batch only
+    # leave an in-flight primary txn so the replica has a pending buffer
+    # (resume watermark < applied watermark territory) at crash time
+    txn = primary.tc.begin()
+    primary.tc.update(txn, "t", b"k00005", b"straddler")
+    primary.log.flush()
+    rs.sync(max_records=20)
+
+    stats = rep.recover_local(Strategy.LOG1)
+    assert stats.strategy == "Log1"
+    assert rep.pending == {}                 # volatile buffers gone
+    # watermark restored from the __repl row, crash-consistent with the data
+    assert rep.applied_lsn > 0 and rep.resume_lsn <= rep.applied_lsn + 1
+
+    # a FRESH shipper (shipper restart) resumes purely from the replica's
+    # durable resume point — no shipper-side state survives, none is needed
+    fresh = LogShipper(primary)
+    rep.resubscribe(fresh)
+    primary.tc.commit(txn)
+    fresh.drain("r1", rep.apply_batch)
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert rep.user_state() == oracle
+
+
+def test_replica_crash_recovery_via_log2_also_works():
+    rng = random.Random(4)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 30)
+    rs.sync()
+    rep.recover_local(Strategy.LOG2)
+    rep.resubscribe(rs.shipper)
+    drive(primary, rng, 10)
+    rs.sync()
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert rep.user_state() == oracle
+
+
+# ----------------------------------------------------------------- failover
+def test_promote_drains_undoes_losers_and_is_writable():
+    rng = random.Random(5)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 40)
+    rs.sync(max_records=60)                  # promote must drain the rest
+    # stable in-flight loser: shipped but never committed
+    txn = primary.tc.begin()
+    primary.tc.update(txn, "t", b"k00007", b"LOSER")
+    primary.tc.insert(txn, "t", b"xlostrow", b"LOSER")
+    primary.log.flush()
+    image = primary.crash()
+
+    new_primary = rs.promote(image=image)
+    oracle = committed_state_oracle(image, base)
+    # promote retired the __repl watermark row, so raw state == oracle
+    assert dict(new_primary.scan_all()) == oracle   # loser's effects undone
+    assert new_primary.dc.read("t", b"xlostrow") is None
+    # writable as a primary
+    tok = new_primary.run_txn([("update", "t", b"k00009", b"new-era")])
+    assert tok > 0 and new_primary.dc.read("t", b"k00009") == b"new-era"
+    # double failure: the NEW primary crashes and recovers with Log1
+    from repro.core import recover, recovered_state
+    img2 = new_primary.crash()
+    db2, _ = recover(img2, Strategy.LOG1)
+    assert db2.dc.read("t", b"k00009") == b"new-era"
+
+
+def test_promote_interleaved_losers_match_crash_recovery():
+    """Undo order matters when in-flight losers interleave on one key:
+    promote() must converge to the same state recover() produces."""
+    rng = random.Random(12)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    v0 = base[make_key("t", b"k00004")]
+    a, b = primary.tc.begin(), primary.tc.begin()
+    primary.tc.update(a, "t", b"k00004", b"A")      # before = v0
+    primary.tc.update(b, "t", b"k00004", b"B")      # before = A
+    primary.log.flush()
+    image = primary.crash()
+    new_primary = rs.promote(image=image)
+    from repro.core import recover
+    recovered, _ = recover(image, Strategy.LOG1)
+    assert new_primary.dc.read("t", b"k00004") \
+        == recovered.dc.read("t", b"k00004") == v0
+
+
+def test_promote_picks_most_caught_up_replica():
+    rng = random.Random(6)
+    primary, rows, base = make_primary(rng)
+    r1, r2 = make_replica(rows, "r1"), make_replica(rows, "r2", page_size=8192)
+    rs = ReplicaSet(primary, [r1, r2])
+    drive(primary, rng, 20)
+    rs.shipper.drain("r2", r2.apply_batch)   # only r2 catches up
+    assert r2.applied_lsn > r1.applied_lsn
+    rs.promote(image=primary.crash())
+    assert r2.promoted and not r1.promoted
+
+
+# ------------------------------------------------------------- read routing
+def test_staleness_bounded_reads_never_stale():
+    rng = random.Random(7)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    for i in range(30):
+        key = f"k{rng.randrange(N_ROWS):05d}".encode()
+        val = f"v{i}".encode()
+        tok = rs.write([("update", "t", key, val)])
+        # read-your-writes with the token must see the write, synced or not
+        res = rs.read("t", key, min_lsn=tok)
+        assert res.value == val
+        assert res.applied_lsn >= tok
+        if i % 3 == 0:
+            rs.sync()
+    # un-synced replica with a fresh token -> primary must serve
+    key, val = b"k00011", b"freshest"
+    tok = rs.write([("update", "t", key, val)])
+    res = rs.read("t", key, min_lsn=tok)
+    assert res.source == "primary" and res.value == val
+    rs.sync()
+    res = rs.read("t", key, min_lsn=tok)
+    assert res.source == "r1" and res.value == val
+
+
+def test_max_lag_bound_and_round_robin():
+    rng = random.Random(8)
+    primary, rows, _ = make_primary(rng)
+    r1, r2 = make_replica(rows, "r1"), make_replica(rows, "r2")
+    rs = ReplicaSet(primary, [r1, r2])
+    drive(primary, rng, 10, abort_frac=0.0)
+    rs.sync()
+    sources = {rs.read("t", b"k00001").source for _ in range(4)}
+    assert sources == {"r1", "r2"}           # round-robin across replicas
+    drive(primary, rng, 10, abort_frac=0.0)  # both replicas now lag
+    res = rs.read("t", b"k00001", max_lag=0)
+    assert res.source == "primary"
+    rs.sync()
+    assert rs.read("t", b"k00001", max_lag=0).source in ("r1", "r2")
+
+
+def test_primary_fallback_serves_committed_only():
+    """The primary fallback must honor the replica path's committed-only
+    visibility: in-flight (dirty) primary writes never reach routed reads."""
+    rng = random.Random(13)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    tok = rs.write([("update", "t", b"k00015", b"committed")])
+    txn = primary.tc.begin()                 # dirty write on the primary
+    primary.tc.update(txn, "t", b"k00015", b"DIRTY")
+    res = rs.read("t", b"k00015", min_lsn=tok)   # replica lags -> primary
+    assert res.source == "primary" and res.value == b"committed"
+    primary.tc.commit(txn)
+    res = rs.read("t", b"k00015", min_lsn=tok)
+    assert res.value == b"DIRTY"             # committed now -> visible
+
+
+def test_auto_sync_commit_hook():
+    rng = random.Random(9)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep], auto_sync=True)
+    tok = rs.write([("update", "t", b"k00013", b"pushed")])
+    # the commit hook pumped shipping: no explicit sync() call needed
+    assert rep.applied_lsn >= tok
+    assert rep.read("t", b"k00013") == b"pushed"
+
+
+def test_oversized_record_fails_atomically():
+    """A record that fits the primary's 8 KiB pages but not the replica's
+    4 KiB geometry must fail loudly WITHOUT leaving a half-applied local
+    transaction or advancing the watermark."""
+    import pytest
+    rng = random.Random(14)
+    primary, rows, base = make_primary(rng, page_size=8192)
+    rep = make_replica(rows, page_size=4096)
+    rs = ReplicaSet(primary, [rep])
+    tok = rs.write([("update", "t", b"k00001", b"small")])
+    rs.sync()
+    wm_before = rep.applied_lsn
+    # one txn: a small op first, then the oversized one (tests prefix undo)
+    rs.write([("update", "t", b"k00002", b"prefix"),
+              ("update", "t", b"k00003", rng.randbytes(5000))])
+    with pytest.raises(ValueError, match="exceeds page size"):
+        rs.sync()
+    assert rep.applied_lsn == wm_before          # watermark did not move
+    assert not rep.db.tc.active                  # no dangling local txn
+    # the partially applied prefix was undone: committed-only state intact
+    assert rep.read("t", b"k00002") == base[make_key("t", b"k00002")]
+    assert rep.read("t", b"k00001") == b"small"
+
+
+def test_stale_cursor_after_recovery_fails_loudly():
+    """Forgetting resubscribe() after a local recovery must raise, not
+    silently lose the buffered prefix of straddling transactions."""
+    import pytest
+    rng = random.Random(11)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    rs.write([("update", "t", b"k00001", b"X")])
+    txn = primary.tc.begin()                 # straddler: ships pre-crash,
+    primary.tc.update(txn, "t", b"k00002", b"STRADDLE")
+    primary.log.flush()
+    rs.sync()
+    rep.recover_local()                      # pending buffer lost
+    primary.tc.commit(txn)                   # ... commits post-crash
+    with pytest.raises(RuntimeError, match="re-subscribe"):
+        rs.sync()
+    rep.resubscribe(rs.shipper)
+    rs.sync()
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert rep.user_state() == oracle
+
+
+# --------------------------------------------------------- max_txn tracking
+def test_recovered_txn_ids_do_not_collide():
+    rng = random.Random(10)
+    primary, rows, _ = make_primary(rng)
+    drive(primary, rng, 10)
+    image = primary.crash()
+    assert image.log.max_txn == max(
+        getattr(r, "txn", 0) or 0 for r in image.log.scan(1))
+    from repro.core import recover
+    db, _ = recover(image, Strategy.LOG1)
+    assert db.tc._next_txn > image.log.max_txn
