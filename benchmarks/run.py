@@ -18,13 +18,13 @@ ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 def main() -> None:
     fast = "--full" not in sys.argv
     from . import (appendix_d_variants, fig2_cache_sweep, fig3_ckpt_interval,
-                   kernel_bench, replication_bench, roofline_table,
-                   trainstore_bench)
+                   kernel_bench, parallel_apply_bench, replication_bench,
+                   roofline_table, trainstore_bench)
     ART.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for mod in (fig2_cache_sweep, fig3_ckpt_interval, appendix_d_variants,
-                replication_bench, trainstore_bench, kernel_bench,
-                roofline_table):
+                replication_bench, parallel_apply_bench, trainstore_bench,
+                kernel_bench, roofline_table):
         out = mod.run(fast=fast)
         (ART / f"{out['name']}.json").write_text(json.dumps(out, indent=1))
         for row in out["rows"]:

@@ -37,6 +37,12 @@ class LogManager:
         self.forced_flushes = 0
         self.max_txn: int = 0              # largest txn id ever logged
         self.last_commit_lsn: LSN = NULL_LSN   # newest CommitRec appended
+        # Newest CommitRec at or below the stable point.  This — not
+        # last_commit_lsn, which may sit in the unforced tail — is the
+        # reference for commit-relative staleness: a committed-only consumer
+        # can never have applied past it, so lag measured against anything
+        # newer is phantom lag.
+        self.last_stable_commit_lsn: LSN = NULL_LSN
 
     # ---------------------------------------------------------------- append
     def append(self, rec: LogRec) -> LSN:
@@ -53,6 +59,13 @@ class LogManager:
         """Force the log to stable storage up to ``upto`` (default: all)."""
         tgt = len(self._recs) if upto is None else min(upto, len(self._recs))
         if tgt > self._stable_idx:
+            if self.last_commit_lsn <= tgt:
+                self.last_stable_commit_lsn = self.last_commit_lsn
+            else:   # a commit past tgt exists: scan just the flushed range
+                for i in range(tgt - 1, self._stable_idx - 1, -1):
+                    if isinstance(self._recs[i], CommitRec):
+                        self.last_stable_commit_lsn = self._recs[i].lsn
+                        break
             self._stable_idx = tgt
             self.forced_flushes += 1
         return self.stable_lsn
@@ -124,6 +137,8 @@ class LogManager:
             survivor.last_commit_lsn = next(
                 (r.lsn for r in reversed(survivor._recs)
                  if isinstance(r, CommitRec)), NULL_LSN)
+        # every surviving record is stable, so the two notions coincide
+        survivor.last_stable_commit_lsn = survivor.last_commit_lsn
         return survivor
 
     def n_log_pages(self, from_lsn: LSN) -> int:

@@ -5,19 +5,28 @@ maintains any number of standby DCs, each with its own physical layout.
 
 Public surface:
   LogShipper / ShipBatch      cursor-based stable-log streaming
-  Replica                     continuous committed-only logical redo; local
-                              crash recovery via Strategy.LOG1/LOG2
+  ApplyEngine                 shared shipped-stream semantics (gap / overlap
+                              / duplicate handling, commit-granular buffers)
+  Replica                     serial continuous committed-only logical redo;
+                              local crash recovery via Strategy.LOG1/LOG2
+  ShardedApplier              key-range parallel apply: per-shard queues and
+                              sub-transactions, epoch-barrier watermark
+  hash_partitioner /          (table, key) -> shard maps for ShardedApplier
+  range_partitioner
   ReplicaSet / ReadResult     staleness-bounded read routing + failover
   promote                     standby -> writable primary
 """
 from .failover import promote
-from .replica import (REPL_KEY, REPL_TABLE, Replica, pack_watermark,
-                      unpack_watermark)
+from .parallel import (ShardedApplier, ShardState, hash_partitioner,
+                       range_partitioner)
+from .replica import (REPL_KEY, REPL_TABLE, ApplyEngine, Replica,
+                      pack_watermark, unpack_watermark)
 from .router import ReadResult, ReplicaSet
 from .shipper import SHIPPED_KINDS, LogShipper, ShipBatch
 
 __all__ = [
-    "LogShipper", "ShipBatch", "SHIPPED_KINDS", "Replica", "REPL_TABLE",
-    "REPL_KEY", "pack_watermark", "unpack_watermark", "ReplicaSet",
-    "ReadResult", "promote",
+    "LogShipper", "ShipBatch", "SHIPPED_KINDS", "ApplyEngine", "Replica",
+    "ShardedApplier", "ShardState", "hash_partitioner", "range_partitioner",
+    "REPL_TABLE", "REPL_KEY", "pack_watermark", "unpack_watermark",
+    "ReplicaSet", "ReadResult", "promote",
 ]

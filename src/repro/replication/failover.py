@@ -36,24 +36,28 @@ def promote(replica: Replica, shipper: LogShipper) -> Database:
     if replica.promoted:
         raise RuntimeError(f"replica {replica.replica_id} already promoted")
 
-    # 1. drain the shipped tail
+    # 1. drain the shipped tail, then whatever of it is still queued behind
+    # the apply pipeline (the sharded path dispatches to per-range queues;
+    # every committed slice must land before undo decides what "lost")
     shipper.drain(replica.replica_id, replica.apply_batch)
+    replica.finish_apply()
 
-    # 2. repeat history for ALL in-flight losers in primary-LSN order, then
-    # undo newest-first — recover()'s exact discipline.  Ordering matters
-    # when losers interleave on a key: undo restores original before-images,
-    # which only compose back to the committed value newest-first.
+    # 2. merge the in-flight loser buffers — per-shard slices on the sharded
+    # path, the buffers themselves on the serial one — and repeat history
+    # for ALL losers in primary-LSN order, then undo newest-first —
+    # recover()'s exact discipline.  Ordering matters when losers interleave
+    # on a key: undo restores original before-images, which only compose
+    # back to the committed value newest-first.
+    losers = replica.take_losers()
     local: dict[int, int] = {}
-    for rec in sorted((r for buf in replica.pending.values() for r in buf),
+    for rec in sorted((r for buf in losers.values() for r in buf),
                       key=lambda r: r.lsn):
         txn = local.get(rec.txn)
         if txn is None:
             txn = local[rec.txn] = replica.db.tc.begin()
         replica.db.tc.apply_shipped(txn, rec)
-    for src_txn in sorted(replica.pending,
-                          key=lambda t: -replica.pending[t][-1].lsn):
+    for src_txn in sorted(losers, key=lambda t: -losers[t][-1].lsn):
         replica.db.tc.abort(local[src_txn])   # logical undo, CLRs + AbortRec
-    replica.pending = {}
 
     # 3. retire the old-LSN-space watermark row
     if replica.db.dc.read(REPL_TABLE, REPL_KEY) is not None:

@@ -1,0 +1,299 @@
+"""Key-range parallel apply for hot standbys (the ROADMAP's Wu et al.
+"Fast Failure Recovery for Main-Memory DBMSs on Multicores" item).
+
+Why sharding is legal here at all: the apply stream is *committed-only*
+(``ApplyEngine`` buffers in-flight work and releases a transaction's ops
+only at its commit record), and the shipped records carry absolute logical
+after-images.  Below commit granularity, ops on disjoint key ranges
+therefore commute — two shards may apply their slices of the stream in any
+relative order and still converge, because every key's final value is
+decided by the last committed after-image on that key's own shard.
+
+Shape of the pipeline:
+
+  shipped batch ─► ApplyEngine (gap / overlap / dup / buffering semantics,
+                   shared verbatim with the serial ``Replica``)
+        commit ─► dispatch: the transaction's buffered records are sliced by
+                   ``partitioner(table, key)`` into per-shard apply queues
+         pump  ─► each shard applies its queued slices in commit-LSN order,
+                   one local sub-transaction per (source txn, shard)
+       barrier ─► every ``epoch_txns`` dispatched commits (and at end of
+                   stream): all shards drain through the newest dispatched
+                   commit LSN, then ONE local transaction commits the durable
+                   ``(applied, resume)`` watermark row
+
+The durable watermark moves only at barriers, so a standby crash at any
+point lands local recovery on a single consistent resume point: re-shipping
+from ``resume`` re-delivers the whole partial epoch, and re-applying slices
+that had already landed is idempotent (absolute after-images).  Between
+barriers, read-your-writes routing uses per-shard *volatile* watermarks —
+a shard whose queue is empty has applied every dispatched commit that
+touches it, so it can serve tokens the conservative min-over-shards barrier
+cannot yet.
+
+What the epoch batching buys over the serial path (and what the benchmark
+measures): one watermark-row read-modify-write and one background page-flush
+budget per *epoch* instead of per *source transaction*, while per-shard
+queues expose the dispatch parallelism a multicore applier would exploit.
+"""
+from __future__ import annotations
+
+import bisect
+import zlib
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Union
+
+from ..core.dc import make_key
+from ..core.records import LSN, NULL_LSN, UpdateRec
+from .replica import REPL_KEY, REPL_TABLE, Replica, pack_watermark
+
+Partitioner = Callable[[str, bytes], int]
+
+
+def hash_partitioner(n_shards: int) -> Partitioner:
+    """Uniform hash partitioning of (table, key).  crc32, not ``hash()``:
+    the shard map must be stable across processes so a recovered standby
+    re-applies every slice onto the same shard that first applied it."""
+    def part(table: str, key: bytes) -> int:
+        return zlib.crc32(make_key(table, key)) % n_shards
+    return part
+
+
+def range_partitioner(boundaries: list[tuple[str, bytes]]) -> Partitioner:
+    """Range partitioning over composite (table, key) order: each boundary
+    is the first key of the next shard, so shard i serves
+    ``boundaries[i-1] <= key < boundaries[i]`` and there are
+    ``len(boundaries) + 1`` shards.  Boundaries must be sorted."""
+    splits = [make_key(t, k) for t, k in boundaries]
+    if splits != sorted(splits):
+        raise ValueError("range_partitioner boundaries must be sorted")
+
+    def part(table: str, key: bytes) -> int:
+        return bisect.bisect_right(splits, make_key(table, key))
+    return part
+
+
+@dataclass
+class ShardState:
+    """One key range's slice of the apply pipeline."""
+    idx: int
+    # in-flight slices: source txn -> its records for this range (LSN order)
+    pending: dict[int, list[UpdateRec]] = field(default_factory=dict)
+    # committed, not yet applied: (commit_lsn, source txn, records)
+    queue: deque = field(default_factory=deque)
+    dispatched_ops: int = 0
+    applied_ops: int = 0
+    applied_subtxns: int = 0
+
+
+class ShardedApplier(Replica):
+    """A ``Replica`` whose redo is sharded by key range.
+
+    Same durable contract as the serial path — a single ``(applied, resume)``
+    watermark row committed atomically with the data, local crash recovery
+    via the paper's own machinery, idempotent re-apply after re-subscribe —
+    but the watermark advances at epoch barriers instead of per source
+    transaction, and between barriers each shard exposes its own volatile
+    watermark for read routing.
+    """
+
+    def __init__(self, replica_id: str, *, n_shards: int = 4,
+                 partitioner: Union[str, Partitioner] = "hash",
+                 epoch_txns: int = 32, auto_pump: bool = True, **db_kwargs):
+        """``partitioner``: "hash" (uniform over (table, key)) or a callable
+        ``(table, key) -> shard index`` such as ``range_partitioner(...)``;
+        ``epoch_txns``: dispatched source commits per durable barrier;
+        ``auto_pump``: apply dispatched slices at the end of every batch
+        (disable to drive ``pump``/``barrier`` by hand, e.g. in tests that
+        stage per-shard progress)."""
+        super().__init__(replica_id, **db_kwargs)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if epoch_txns < 1:
+            raise ValueError(f"epoch_txns must be >= 1, got {epoch_txns}")
+        self.n_shards = n_shards
+        self.partition = hash_partitioner(n_shards) \
+            if partitioner == "hash" else partitioner
+        if not callable(self.partition):
+            raise ValueError(f"unknown partitioner {partitioner!r}: "
+                             "pass 'hash' or a callable (table, key) -> int")
+        self.epoch_txns = epoch_txns
+        self.auto_pump = auto_pump
+        self.shards = [ShardState(i) for i in range(n_shards)]
+        self._touched: dict[int, set[int]] = {}   # src txn -> shard indices
+        self._dispatched_lsn: LSN = NULL_LSN      # newest dispatched commit
+        self._since_barrier = 0
+        self.barriers = 0
+
+    # --------------------------------------------------------- engine hooks
+    def _shard_of(self, table: str, key: bytes) -> int:
+        idx = self.partition(table, key)
+        if not 0 <= idx < self.n_shards:
+            raise ValueError(f"partitioner mapped ({table!r}, {key!r}) to "
+                             f"shard {idx}, outside 0..{self.n_shards - 1}")
+        return idx
+
+    def _buffer(self, rec: UpdateRec) -> None:
+        idx = self._shard_of(rec.table, rec.key)
+        self.shards[idx].pending.setdefault(rec.txn, []).append(rec)
+        self._touched.setdefault(rec.txn, set()).add(idx)
+
+    def _discard(self, txn: int) -> None:
+        for idx in self._touched.pop(txn, ()):
+            self.shards[idx].pending.pop(txn, None)
+
+    def _commit(self, txn: int, commit_lsn: LSN) -> int:
+        # committed: irrevocably not in-flight.  Even if the epoch barrier
+        # below fails mid-apply, the txn's slices stay queued (committed
+        # work to retry), and it must not pin resume_floor or appear in
+        # take_losers as if it could still abort.
+        self._first_lsn.pop(txn, None)
+        n = 0
+        for idx in sorted(self._touched.pop(txn, ())):
+            shard = self.shards[idx]
+            ops = shard.pending.pop(txn)
+            shard.queue.append((commit_lsn, txn, ops))
+            shard.dispatched_ops += len(ops)
+            n += len(ops)
+        if commit_lsn > self._dispatched_lsn:
+            # first delivery; a commit re-delivered after a failed barrier
+            # dispatches nothing (slices are still queued) and must not
+            # bump the counters again — only retry the barrier below
+            self._dispatched_lsn = commit_lsn
+            self._since_barrier += 1
+            self.applied_txns += 1
+        if self._since_barrier >= self.epoch_txns:
+            self.barrier()
+        return n
+
+    def apply_batch(self, batch) -> int:
+        n = super().apply_batch(batch)
+        if self.auto_pump:
+            self.pump()
+            if not batch.has_more and self._since_barrier:
+                self.barrier()      # end of stream closes the open epoch
+        return n
+
+    # ------------------------------------------------------- pump / barrier
+    def pump(self, shard: Optional[int] = None,
+             upto_lsn: Optional[LSN] = None) -> int:
+        """Apply queued committed slices in commit-LSN order, one local
+        sub-transaction per (source txn, shard); returns ops applied.
+        ``shard``/``upto_lsn`` restrict the work (tests, staged progress)."""
+        targets = self.shards if shard is None else [self.shards[shard]]
+        n = 0
+        for s in targets:
+            while s.queue and (upto_lsn is None or s.queue[0][0] <= upto_lsn):
+                commit_lsn, src_txn, ops = s.queue[0]
+                self._apply_slice(s, ops)
+                s.queue.popleft()
+                n += len(ops)
+        return n
+
+    def _apply_slice(self, s: ShardState, ops: list[UpdateRec]) -> None:
+        txn = self.db.tc.begin()
+        try:
+            for rec in ops:
+                self.db.tc.apply_shipped(txn, rec)
+                self.db.note_update()
+        except Exception:
+            # undo the partial slice; the queue still holds it, and the
+            # durable watermark (last barrier) re-ships it after recovery
+            self.db.tc.abort(txn)
+            raise
+        self.db.tc.commit(txn)
+        s.applied_subtxns += 1
+        s.applied_ops += len(ops)
+        self.applied_ops += len(ops)
+
+    def barrier(self) -> LSN:
+        """Epoch barrier: drain every shard through the newest dispatched
+        commit, then commit the durable ``(applied, resume)`` watermark in
+        one local transaction.  Standby crash recovery therefore always
+        lands on this single consistent resume point, never inside an
+        epoch."""
+        self.pump()
+        self._since_barrier = 0
+        b = self._dispatched_lsn
+        if b <= self.applied_lsn:
+            return self.applied_lsn
+        resume = self.resume_floor(b)
+        txn = self.db.tc.begin()
+        self.db.tc.update(txn, REPL_TABLE, REPL_KEY, pack_watermark(b, resume))
+        self.db.tc.commit(txn)
+        self.db.post_commit_flush()     # page-flush budget, once per epoch
+        self.applied_lsn, self.resume_lsn = b, resume
+        self.barriers += 1
+        return b
+
+    def finish_apply(self) -> None:
+        self.pump()
+
+    # ---------------------------------------------------------- watermarks
+    def shard_watermark(self, idx: int) -> LSN:
+        """Volatile per-range watermark: every dispatched commit at or below
+        it whose slice touches this shard has been applied.  Empty queue
+        means the shard is current through the newest dispatched commit;
+        otherwise everything older than the queue head is in (commits are
+        dispatched in LSN order)."""
+        s = self.shards[idx]
+        base = self._dispatched_lsn if not s.queue else s.queue[0][0] - 1
+        return max(base, self.applied_lsn)
+
+    def catchup_lsn(self) -> LSN:
+        return min(self.shard_watermark(i) for i in range(self.n_shards))
+
+    def watermark_for(self, table: str, key: bytes) -> LSN:
+        """Read-your-writes eligibility: the serving shard's volatile
+        watermark, falling back to the conservative min-over-shards barrier
+        when the key does not map cleanly onto a shard."""
+        try:
+            idx = self._shard_of(table, key)
+        except LookupError:
+            # "does not map cleanly" only (e.g. a table-map partitioner that
+            # has no entry for this key) — anything else, including the
+            # out-of-range ValueError, is a partitioner bug and fails as
+            # loudly here as it does on the apply path
+            return self.catchup_lsn()
+        return self.shard_watermark(idx)
+
+    # ------------------------------------------------------ buffered state
+    @property
+    def pending(self) -> dict[int, list[UpdateRec]]:
+        merged: dict[int, list[UpdateRec]] = {}
+        for s in self.shards:
+            for txn, ops in s.pending.items():
+                merged.setdefault(txn, []).extend(ops)
+        return {txn: sorted(ops, key=lambda r: r.lsn)
+                for txn, ops in merged.items()}
+
+    def take_losers(self) -> dict[int, list[UpdateRec]]:
+        losers = self.pending
+        for s in self.shards:
+            s.pending.clear()
+        self._touched.clear()
+        self._first_lsn.clear()
+        return losers
+
+    def _reset_volatile(self) -> None:
+        super()._reset_volatile()
+        for s in self.shards:
+            s.pending.clear()
+            s.queue.clear()
+        self._touched.clear()
+        self._dispatched_lsn = NULL_LSN
+        self._since_barrier = 0
+
+    # ----------------------------------------------------------- inspection
+    def queued_slices(self) -> int:
+        return sum(len(s.queue) for s in self.shards)
+
+    def imbalance(self) -> float:
+        """Dispatch skew: max over shards of dispatched ops, relative to the
+        perfectly balanced share (1.0 = uniform; n_shards = one hot shard)."""
+        total = sum(s.dispatched_ops for s in self.shards)
+        if total == 0:
+            return 1.0
+        return max(s.dispatched_ops for s in self.shards) \
+            / (total / self.n_shards)

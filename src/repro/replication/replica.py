@@ -30,6 +30,11 @@ Because the watermark commits atomically with the data, local crash recovery
 reconstructs exactly the replication position matching the recovered state —
 re-subscribing from ``resume`` re-ships some records, and commits with
 LSN <= ``applied`` are dropped as duplicates (idempotent re-apply).
+
+The stream state machine itself lives in ``ApplyEngine`` so the serial path
+here and the key-range-sharded path (``parallel.ShardedApplier``) share one
+set of gap / overlap / duplicate / resume semantics and differ only in where
+buffered ops live and when they are applied.
 """
 from __future__ import annotations
 
@@ -55,14 +60,157 @@ def unpack_watermark(raw: bytes) -> tuple[LSN, LSN]:
     return struct.unpack("<QQ", raw)
 
 
-class Replica:
+class ApplyEngine:
+    """Shipped-stream state machine shared by serial and sharded apply.
+
+    Owns everything about *stream position and transaction boundaries*:
+
+      * gap detection — a batch that starts past the consumed position means
+        records were shipped elsewhere and is rejected;
+      * overlap dedup — records below the consumed position are batch
+        re-deliveries (an overlapping poll, a rewound shipper cursor) and are
+        skipped, never re-buffered;
+      * commit dedup — a commit at or below the durable ``applied`` watermark
+        was already applied (re-subscription rescan) and is dropped whole;
+      * in-flight bookkeeping — which source transactions are open and the
+        LSN of each one's first record, which is exactly what the durable
+        ``resume`` computation needs.
+
+    Storage of the buffered ops and their application are delegated to the
+    subclass through three hooks:
+
+      _buffer(rec)               stash one in-flight update record
+      _discard(txn)              drop a buffered transaction (abort / dup)
+      _commit(txn, commit_lsn)   apply a committed transaction; returns the
+                                 number of ops applied
+    """
+
+    def __init__(self, replica_id: str):
+        self.replica_id = replica_id
+        self.applied_lsn: LSN = NULL_LSN       # durable primary commit watermark
+        self.resume_lsn: LSN = 1               # durable shipping resume point
+        self._ship_pos: LSN = 1                # next primary LSN expected
+        self._first_lsn: dict[int, LSN] = {}   # in-flight txn -> first rec LSN
+        self.applied_txns = 0
+        self.applied_ops = 0
+        self.dropped_dup_txns = 0
+        self.skipped_dup_recs = 0
+        self.promoted = False
+
+    # ----------------------------------------------------------- ingestion
+    def apply_batch(self, batch: ShipBatch) -> int:
+        """Continuous redo of one shipped batch; returns ops applied.
+
+        Rejects a batch that skips ahead of the last position this replica
+        consumed: a gap means records were shipped elsewhere (e.g. the
+        shipper cursor is stale after a local recovery without
+        ``resubscribe``), and applying past it would silently lose the
+        buffered prefix of straddling transactions.  The opposite overlap —
+        a batch that starts *below* the consumed position — is benign
+        re-delivery; already-consumed records are skipped so straddling
+        transactions are not double-buffered."""
+        if batch.from_lsn > self._ship_pos:
+            raise RuntimeError(
+                f"replica {self.replica_id}: shipped batch starts at LSN "
+                f"{batch.from_lsn} but {self._ship_pos} was expected — "
+                f"re-subscribe from resume_lsn={self.resume_lsn}")
+        n = 0
+        for rec in batch.records:
+            if rec.lsn < self._ship_pos:
+                self.skipped_dup_recs += 1
+                continue
+            n += self.apply_record(rec)
+            self._ship_pos = rec.lsn + 1
+        self._ship_pos = max(self._ship_pos, batch.next_lsn)
+        return n
+
+    def apply_record(self, rec: LogRec) -> int:
+        if self.promoted:
+            raise RuntimeError(
+                f"replica {self.replica_id} was promoted; applying shipped "
+                "records from the old primary would corrupt the new one")
+        if isinstance(rec, UpdateRec):
+            self._first_lsn.setdefault(rec.txn, rec.lsn)
+            self._buffer(rec)
+        elif isinstance(rec, AbortRec):
+            self._first_lsn.pop(rec.txn, None)
+            self._discard(rec.txn)
+        elif isinstance(rec, CommitRec):
+            if rec.lsn <= self.applied_lsn:
+                # duplicate from a re-subscription rescan: already applied
+                self._first_lsn.pop(rec.txn, None)
+                self._discard(rec.txn)
+                self.dropped_dup_txns += 1
+                return 0
+            # the hook owns the txn's in-flight -> committed transition of
+            # _first_lsn: the serial path restores it when apply fails (the
+            # ops go back in the buffer, the commit will be re-delivered);
+            # the sharded path drops it at dispatch irrevocably — a
+            # committed transaction is not a loser and must never pin the
+            # resume watermark, no matter what later pump/barrier work does
+            return self._commit(rec.txn, rec.lsn)
+        return 0
+
+    def resume_floor(self, commit_lsn: LSN) -> LSN:
+        """Durable resume point as of ``commit_lsn``: shipping may restart
+        here without missing any record of a still-in-flight transaction."""
+        return min(min(self._first_lsn.values(), default=commit_lsn + 1),
+                   commit_lsn + 1)
+
+    # ------------------------------------------------------- subclass hooks
+    def _buffer(self, rec: UpdateRec) -> None:
+        raise NotImplementedError
+
+    def _discard(self, txn: int) -> None:
+        raise NotImplementedError
+
+    def _commit(self, txn: int, commit_lsn: LSN) -> int:
+        raise NotImplementedError
+
+    # ------------------------------------------------------- shared surface
+    @property
+    def pending(self) -> dict[int, list[UpdateRec]]:
+        """In-flight buffers as {source txn: [records in LSN order]} — a
+        merged view for the sharded path, the buffers themselves here."""
+        raise NotImplementedError
+
+    def take_losers(self) -> dict[int, list[UpdateRec]]:
+        """Hand every in-flight buffer (merged across shards, LSN-ordered)
+        to the caller — failover's loser set — and forget them."""
+        raise NotImplementedError
+
+    def finish_apply(self) -> None:
+        """Apply everything already ingested but not yet executed (sharded
+        queues); a no-op on the serial path, which applies at ingest."""
+
+    def catchup_lsn(self) -> LSN:
+        """Highest primary commit LSN whose effects are fully applied to the
+        local database — the durable watermark on the serial path, the
+        min-over-shards volatile watermark on the sharded path."""
+        return self.applied_lsn
+
+    def watermark_for(self, table: str, key: bytes) -> LSN:
+        """Read-your-writes eligibility for one key: the highest token this
+        node can serve for it.  Serial apply is totally ordered, so this is
+        the global watermark; the sharded path answers per key range."""
+        return self.applied_lsn
+
+    def lag(self, primary_log) -> int:
+        """Staleness in primary-LSN units: distance from the primary's last
+        *stable commit* (non-commit tail records — in-flight work, abort
+        trails — cannot make a committed-only replica stale, and neither can
+        a commit record sitting past the stable point: it never shipped)."""
+        return max(0, primary_log.last_stable_commit_lsn - self.catchup_lsn())
+
+
+class Replica(ApplyEngine):
     def __init__(self, replica_id: str, *, page_size: Optional[int] = None,
                  cache_pages: int = 4096, tracker_interval: int = 100,
                  bg_flush_per_txn: int = 0, delta_mode: str = "paper",
                  seed_tables: Optional[dict[str, list]] = None):
         """``seed_tables``: table -> [(key, value)] initial load, which must
         match the primary's state at the LSN the subscription starts from."""
-        self.replica_id = replica_id
+        super().__init__(replica_id)
         self.page_size = page_size
         self.cache_pages = cache_pages
         self.delta_mode = delta_mode
@@ -79,57 +227,36 @@ class Replica:
             self.db.tc.checkpoint()
         else:
             self.db.bootstrap_empty()
-        self.applied_lsn: LSN = NULL_LSN       # primary commit watermark
-        self.resume_lsn: LSN = 1               # durable shipping resume point
-        self._ship_pos: LSN = 1                # next primary LSN expected
-        self.pending: dict[int, list[UpdateRec]] = {}
-        self.applied_txns = 0
-        self.applied_ops = 0
-        self.dropped_dup_txns = 0
-        self.promoted = False
+        self._bufs: dict[int, list[UpdateRec]] = {}
 
     # ------------------------------------------------------------ apply path
-    def apply_batch(self, batch: ShipBatch) -> int:
-        """Continuous redo of one shipped batch; returns ops applied.
+    def _buffer(self, rec: UpdateRec) -> None:
+        self._bufs.setdefault(rec.txn, []).append(rec)
 
-        Rejects a batch that skips ahead of the last position this replica
-        consumed: a gap means records were shipped elsewhere (e.g. the
-        shipper cursor is stale after a local recovery without
-        ``resubscribe``), and applying past it would silently lose the
-        buffered prefix of straddling transactions."""
-        if batch.from_lsn > self._ship_pos:
-            raise RuntimeError(
-                f"replica {self.replica_id}: shipped batch starts at LSN "
-                f"{batch.from_lsn} but {self._ship_pos} was expected — "
-                f"re-subscribe from resume_lsn={self.resume_lsn}")
-        n = 0
-        for rec in batch.records:
-            n += self.apply_record(rec)
-        self._ship_pos = max(self._ship_pos, batch.next_lsn)
-        return n
+    def _discard(self, txn: int) -> None:
+        self._bufs.pop(txn, None)
 
-    def apply_record(self, rec: LogRec) -> int:
-        if self.promoted:
-            raise RuntimeError(
-                f"replica {self.replica_id} was promoted; applying shipped "
-                "records from the old primary would corrupt the new one")
-        if isinstance(rec, UpdateRec):
-            self.pending.setdefault(rec.txn, []).append(rec)
-        elif isinstance(rec, AbortRec):
-            self.pending.pop(rec.txn, None)
-        elif isinstance(rec, CommitRec):
-            ops = self.pending.pop(rec.txn, [])
-            if rec.lsn <= self.applied_lsn:
-                # duplicate from a re-subscription rescan: already applied
-                self.dropped_dup_txns += 1
-                return 0
-            return self._apply_commit(rec.txn, rec.lsn, ops)
-        return 0
+    def _commit(self, txn: int, commit_lsn: LSN) -> int:
+        first = self._first_lsn.pop(txn, None)
+        try:
+            return self._apply_commit(txn, commit_lsn, self._bufs.pop(txn, []))
+        except Exception:
+            if first is not None:    # ops are back in the buffer: still
+                self._first_lsn[txn] = first    # in-flight for resume/losers
+            raise
+
+    @property
+    def pending(self) -> dict[int, list[UpdateRec]]:
+        return self._bufs
+
+    def take_losers(self) -> dict[int, list[UpdateRec]]:
+        losers, self._bufs = self._bufs, {}
+        self._first_lsn.clear()
+        return losers
 
     def _apply_commit(self, src_txn: int, commit_lsn: LSN,
                       ops: list[UpdateRec]) -> int:
-        resume = min([buf[0].lsn for buf in self.pending.values()]
-                     + [commit_lsn + 1])
+        resume = self.resume_floor(commit_lsn)
         txn = self.db.tc.begin()
         try:
             for rec in ops:
@@ -143,7 +270,7 @@ class Replica:
             # put the buffer back, and surface the failure — e.g. a record
             # that fits the primary's page size but not this geometry
             self.db.tc.abort(txn)
-            self.pending[src_txn] = ops
+            self._bufs[src_txn] = ops
             raise
         self.db.tc.commit(txn)
         self.db.post_commit_flush()
@@ -152,14 +279,7 @@ class Replica:
         self.applied_ops += len(ops)
         return len(ops)
 
-    # ------------------------------------------------------------- lag / reads
-    def lag(self, primary_log) -> int:
-        """Staleness in primary-LSN units: distance from the primary's last
-        *stable commit* (non-commit tail records — in-flight work, abort
-        trails — cannot make a committed-only replica stale)."""
-        lc = min(primary_log.last_commit_lsn, primary_log.stable_lsn)
-        return max(0, lc - self.applied_lsn)
-
+    # --------------------------------------------------------------- reads
     def read(self, table: str, key: bytes) -> Optional[bytes]:
         return self.db.dc.read(table, key)
 
@@ -172,6 +292,13 @@ class Replica:
     # ------------------------------------------------------- crash / recovery
     def crash(self) -> CrashImage:
         return self.db.crash()
+
+    def _reset_volatile(self) -> None:
+        """Forget every buffer that does not survive a crash and rewind the
+        stream position to the durable resume point."""
+        self._bufs = {}
+        self._first_lsn.clear()
+        self._ship_pos = self.resume_lsn
 
     def recover_local(self, strategy: Strategy = Strategy.LOG1,
                       image: Optional[CrashImage] = None) -> RecoveryStats:
@@ -187,11 +314,10 @@ class Replica:
                                  page_size=self.page_size,
                                  tracker_interval=self.tracker_interval,
                                  bg_flush_per_txn=self.bg_flush_per_txn)
-        self.pending = {}
         raw = self.db.dc.read(REPL_TABLE, REPL_KEY)
         self.applied_lsn, self.resume_lsn = \
             unpack_watermark(raw) if raw is not None else (NULL_LSN, 1)
-        self._ship_pos = self.resume_lsn
+        self._reset_volatile()
         return stats
 
     def resubscribe(self, shipper: LogShipper) -> None:
@@ -199,6 +325,5 @@ class Replica:
         rewinds the in-flight buffers: everything from ``resume_lsn`` on is
         about to be re-shipped, and keeping stale buffers would double-apply
         straddling transactions."""
-        self.pending = {}
-        self._ship_pos = self.resume_lsn
+        self._reset_volatile()
         shipper.subscribe(self.replica_id, self.resume_lsn)

@@ -67,9 +67,14 @@ class ReplicaSet:
 
     def sync(self, max_records: Optional[int] = None) -> int:
         """Pump shipping: one bounded poll per replica (or full drain when
-        ``max_records`` is None).  Returns ops applied across the set."""
+        ``max_records`` is None).  Returns ops applied across the set.
+        Detached replicas (no shipping cursor — e.g. unsubscribed pending a
+        re-seed) are skipped cleanly; they can still serve bounded reads
+        from whatever they last applied."""
         applied = 0
         for r in self.replicas.values():
+            if not self.shipper.is_subscribed(r.replica_id):
+                continue
             if max_records is None:
                 before = r.applied_ops
                 self.shipper.drain(r.replica_id, r.apply_batch)
@@ -84,18 +89,26 @@ class ReplicaSet:
         reps = list(self.replicas.values())
         for i in range(len(reps)):
             r = reps[(self._rr + i) % len(reps)]
-            if r.applied_lsn < min_lsn:
+            # per-key watermark: the serial path answers with its global
+            # applied watermark, the sharded path with the serving key
+            # range's volatile watermark (commits applied per shard in
+            # primary-LSN order, so shard watermark >= t implies every
+            # commit <= t touching this key is visible)
+            wm = r.watermark_for(table, key)
+            if wm < min_lsn:
                 continue
             if max_lag is not None and r.lag(self.primary.log) > max_lag:
                 continue
             self._rr = (self._rr + i + 1) % max(len(reps), 1)
             self.reads_replica += 1
-            return ReadResult(r.read(table, key), r.replica_id, r.applied_lsn)
+            return ReadResult(r.read(table, key), r.replica_id, wm)
         self.reads_primary += 1
         # committed_read, not dc.read: the fallback must honor the same
-        # committed-only visibility the replica path enforces
+        # committed-only visibility the replica path enforces — and the
+        # token it hands back is the last *stable* commit, the newest
+        # position a committed-only consumer can ever be asked to reach
         return ReadResult(self.primary.tc.committed_read(table, key),
-                          "primary", self.primary.log.last_commit_lsn)
+                          "primary", self.primary.log.last_stable_commit_lsn)
 
     # -------------------------------------------------------------- failover
     def max_lag(self) -> int:
@@ -112,11 +125,20 @@ class ReplicaSet:
             raise RuntimeError("no replicas to promote (a prior failover "
                                "detaches survivors; re-seed standbys first)")
         if replica_id is None:
+            # catchup_lsn, not applied_lsn: a sharded standby mid-epoch has
+            # applied past its durable barrier, and that work counts
             replica_id = max(self.replicas,
-                             key=lambda rid: self.replicas[rid].applied_lsn)
+                             key=lambda rid: self.replicas[rid].catchup_lsn())
         chosen = self.replicas.pop(replica_id)
         shipper = self.shipper if image is None \
             else self._shipper_for_image(image, chosen)
+        # (Re-)attach the drain at the exact position the replica consumed
+        # through, unconditionally: a detached standby has no cursor at all,
+        # and a live cursor can sit AHEAD of _ship_pos when a poll's apply
+        # failed mid-batch — draining from either would trip the gap guard
+        # after the replica was already popped from the set.  Re-delivery
+        # below _ship_pos is skipped, so rewinding is always safe.
+        shipper.subscribe(chosen.replica_id, chosen._ship_pos)
         new_primary = promote(chosen, shipper)
         self.primary = new_primary
         self.shipper = LogShipper(new_primary.log,
@@ -129,7 +151,9 @@ class ReplicaSet:
     def _shipper_for_image(self, image: CrashImage,
                            replica: Replica) -> LogShipper:
         s = LogShipper(image.log, batch_records=self.shipper.batch_records)
-        s.subscribe(replica.replica_id,
-                    self.shipper.cursors.get(replica.replica_id,
-                                             replica.resume_lsn))
+        # _ship_pos, not the live cursor: a poll whose apply failed leaves
+        # the cursor ahead of what the replica consumed, and the drain must
+        # restart from the consumed position (re-delivery below it is
+        # skipped, a gap above it would abort the promotion)
+        s.subscribe(replica.replica_id, replica._ship_pos)
         return s

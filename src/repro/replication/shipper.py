@@ -76,9 +76,22 @@ class LogShipper:
     def unsubscribe(self, replica_id: str) -> None:
         self.cursors.pop(replica_id, None)
 
+    def is_subscribed(self, replica_id: str) -> bool:
+        return replica_id in self.cursors
+
+    def _cursor(self, replica_id: str) -> LSN:
+        try:
+            return self.cursors[replica_id]
+        except KeyError:
+            raise KeyError(
+                f"no shipping cursor for {replica_id!r}: the subscriber is "
+                "detached (never subscribed, or unsubscribed) — call "
+                "subscribe(replica_id, from_lsn) first, typically from the "
+                "replica's durable resume_lsn") from None
+
     def backlog(self, replica_id: str) -> int:
         """Stable records not yet shipped to this subscriber."""
-        return max(0, self.log.stable_lsn - (self.cursors[replica_id] - 1))
+        return max(0, self.log.stable_lsn - (self._cursor(replica_id) - 1))
 
     # ---------------------------------------------------------------- polling
     def poll(self, replica_id: str,
@@ -89,7 +102,7 @@ class LogShipper:
         filtered physical records are skipped over for free, so a bounded
         poll always makes logical progress when logical backlog exists —
         a checkpoint burst on the primary can't starve a small batch."""
-        cur = self.cursors[replica_id]
+        cur = self._cursor(replica_id)
         budget = max_records if max_records is not None else self.batch_records
         shipped: List[LogRec] = []
         nxt = cur

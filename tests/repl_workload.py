@@ -1,0 +1,50 @@
+"""Shared workload generator for the replication test suites.
+
+One definition of the primary fixture and the randomized op mix
+(update/insert/delete with occasional aborted transactions) so
+test_replication.py and test_parallel_apply.py exercise the same workload
+shape at their own scales — change the mix here, and both suites move
+together."""
+from repro.core import Database, make_key
+
+
+def make_primary(rng, *, n_rows, val, page_size=8192):
+    rows = [(f"k{i:05d}".encode(), rng.randbytes(val)) for i in range(n_rows)]
+    db = Database(page_size=page_size, cache_pages=256, tracker_interval=25,
+                  bg_flush_per_txn=2)
+    db.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+    return db, rows, base
+
+
+def random_ops(rng, n, *, n_rows, val):
+    ops = []
+    for _ in range(n):
+        roll = rng.random()
+        if roll < 0.7:
+            ops.append(("update", "t", f"k{rng.randrange(n_rows):05d}".encode(),
+                        rng.randbytes(val)))
+        elif roll < 0.9:
+            ops.append(("insert", "t", f"x{rng.randrange(10**6):07d}".encode(),
+                        rng.randbytes(val)))
+        else:
+            ops.append(("delete", "t", f"k{rng.randrange(n_rows):05d}".encode(),
+                        None))
+    return ops
+
+
+def drive(db, rng, n_txns, *, n_rows, val, abort_frac=0.15):
+    for _ in range(n_txns):
+        ops = random_ops(rng, rng.randrange(1, 6), n_rows=n_rows, val=val)
+        if rng.random() < abort_frac:
+            txn = db.tc.begin()
+            for verb, table, key, value in ops:
+                if verb == "update":
+                    db.tc.update(txn, table, key, value)
+                elif verb == "insert":
+                    db.tc.insert(txn, table, key, value)
+                else:
+                    db.tc.delete(txn, table, key)
+            db.tc.abort(txn)
+        else:
+            db.run_txn(ops)

@@ -1,0 +1,356 @@
+"""Key-range parallel apply tests: sharded redo vs the committed-state
+oracle, per-shard read-your-writes watermarks, epoch-barrier crash
+consistency, failover with sharded in-flight buffers, and serial-vs-sharded
+convergence under randomized fault schedules."""
+import random
+
+import pytest
+
+import repl_workload
+from repro.core import (Strategy, committed_state_oracle, make_key)
+from repro.replication import (LogShipper, Replica, ReplicaSet,
+                               ShardedApplier, hash_partitioner,
+                               range_partitioner)
+
+N_ROWS = 300
+VAL = 32
+
+
+def make_primary(rng, page_size=8192):
+    return repl_workload.make_primary(rng, n_rows=N_ROWS, val=VAL,
+                                      page_size=page_size)
+
+
+def make_sharded(rows, rid="s1", page_size=4096, **kw):
+    kw.setdefault("n_shards", 4)
+    kw.setdefault("epoch_txns", 8)
+    return ShardedApplier(rid, page_size=page_size, cache_pages=512,
+                          tracker_interval=25, bg_flush_per_txn=2,
+                          seed_tables={"t": rows}, **kw)
+
+
+def make_serial(rows, rid="r1", page_size=4096):
+    return Replica(rid, page_size=page_size, cache_pages=512,
+                   tracker_interval=25, bg_flush_per_txn=2,
+                   seed_tables={"t": rows})
+
+
+def drive(db, rng, n_txns, abort_frac=0.15):
+    repl_workload.drive(db, rng, n_txns, n_rows=N_ROWS, val=VAL,
+                        abort_frac=abort_frac)
+
+
+# ---------------------------------------------------------------- partitioners
+def test_hash_partitioner_is_stable_and_in_range():
+    part = hash_partitioner(5)
+    seen = set()
+    for i in range(200):
+        idx = part("t", f"k{i}".encode())
+        assert 0 <= idx < 5
+        assert idx == part("t", f"k{i}".encode())     # deterministic
+        seen.add(idx)
+    assert seen == set(range(5))                      # all shards used
+
+
+def test_range_partitioner_maps_by_boundaries():
+    part = range_partitioner([("t", b"k1"), ("t", b"k2")])
+    assert part("t", b"k0") == 0
+    assert part("t", b"k1") == 1         # boundary starts the next shard
+    assert part("t", b"k15") == 1
+    assert part("t", b"k2") == 2
+    assert part("t", b"k3") == 2
+    with pytest.raises(ValueError, match="sorted"):
+        range_partitioner([("t", b"k2"), ("t", b"k1")])
+
+
+def test_sharded_applier_validates_config():
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedApplier("bad", n_shards=0)
+    with pytest.raises(ValueError, match="epoch_txns"):
+        ShardedApplier("bad", epoch_txns=0)
+    with pytest.raises(ValueError, match="partitioner"):
+        ShardedApplier("bad", partitioner="zorp")
+    rep = ShardedApplier("oob", n_shards=2,
+                         partitioner=lambda table, key: 7)
+    with pytest.raises(ValueError, match="outside"):
+        rep._shard_of("t", b"k")
+
+
+# ------------------------------------------------------------ oracle equality
+def test_sharded_matches_oracle_heterogeneous():
+    rng = random.Random(1)
+    primary, rows, base = make_primary(rng, page_size=8192)
+    rep = make_sharded(rows, page_size=4096)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 60)
+    rs.sync(max_records=50)                  # interleave partial syncs
+    drive(primary, rng, 40)
+    rs.sync()
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert rep.user_state() == oracle
+    assert rep.db.dc.page_size != primary.dc.page_size
+    assert rep.barriers > 1                  # epochs actually closed
+    assert rep.applied_lsn == primary.log.last_stable_commit_lsn
+    assert rep.lag(primary.log) == 0
+
+
+def test_sharded_commit_buffering_hides_inflight_work():
+    rng = random.Random(2)
+    primary, rows, base = make_primary(rng)
+    rep = make_sharded(rows)
+    rs = ReplicaSet(primary, [rep])
+    txn = primary.tc.begin()
+    primary.tc.update(txn, "t", b"k00000", b"UNCOMMITTED")
+    primary.tc.update(txn, "t", b"k00001", b"UNCOMMITTED2")
+    primary.log.flush()
+    rs.sync()
+    assert rep.read("t", b"k00000") == base[make_key("t", b"k00000")]
+    assert txn in rep.pending                # merged per-shard slices
+    assert len(rep.pending[txn]) == 2
+    primary.tc.commit(txn)
+    rs.sync()
+    assert rep.read("t", b"k00000") == b"UNCOMMITTED"
+    assert rep.read("t", b"k00001") == b"UNCOMMITTED2"
+
+
+def test_sharded_overlapping_redelivery_skips_consumed_records():
+    rng = random.Random(3)
+    primary, rows, base = make_primary(rng)
+    rep = make_sharded(rows)
+    rs = ReplicaSet(primary, [rep])
+    rs.write([("update", "t", b"k00001", b"A")])
+    txn = primary.tc.begin()                 # straddler across the rewind
+    primary.tc.update(txn, "t", b"k00002", b"S1")
+    primary.tc.update(txn, "t", b"k00007", b"S2")
+    primary.log.flush()
+    rs.sync()
+    assert len(rep.pending[txn]) == 2
+    rs.shipper.subscribe("s1", 1)            # re-poll already-shipped range
+    rs.sync()
+    assert len(rep.pending[txn]) == 2        # per-shard slices not doubled
+    assert rep.skipped_dup_recs > 0
+    primary.tc.commit(txn)
+    rs.sync()
+    assert rep.user_state() == committed_state_oracle(primary.crash(), base)
+
+
+# ----------------------------------------------------- per-shard watermarks
+def test_shard_watermark_routing_mid_epoch():
+    """Between barriers, a drained shard serves read-your-writes tokens the
+    conservative min-over-shards barrier cannot."""
+    rng = random.Random(4)
+    primary, rows, base = make_primary(rng)
+    part = range_partitioner([("t", b"k00150")])       # 2 ranges
+    rep = make_sharded(rows, n_shards=2, partitioner=part,
+                       epoch_txns=100, auto_pump=False)
+    rs = ReplicaSet(primary, [rep])
+    tok_a = rs.write([("update", "t", b"k00010", b"A")])   # shard 0
+    tok_b = rs.write([("update", "t", b"k00200", b"B")])   # shard 1
+    rs.sync()                                # ingests + dispatches, no pump
+    assert rep.queued_slices() == 2
+    rep.pump(shard=0)                        # only shard 0 applies
+    assert rep.applied_lsn == 0              # durable barrier untouched
+    assert rep.watermark_for("t", b"k00010") >= tok_a
+    assert rep.watermark_for("t", b"k00200") < tok_b
+    assert rep.catchup_lsn() < tok_b         # conservative min-over-shards
+    res = rs.read("t", b"k00010", min_lsn=tok_a)
+    assert res.source == "s1" and res.value == b"A"
+    res = rs.read("t", b"k00200", min_lsn=tok_b)
+    assert res.source == "primary" and res.value == b"B"
+    rep.pump()
+    res = rs.read("t", b"k00200", min_lsn=tok_b)
+    assert res.source == "s1" and res.value == b"B"
+    rep.barrier()                            # close the epoch durably
+    assert rep.applied_lsn >= tok_b
+    assert rep.resume_lsn == rep.applied_lsn + 1
+
+
+# ------------------------------------------------- epoch-barrier crash safety
+def test_sharded_crash_mid_epoch_recovers_to_barrier():
+    rng = random.Random(5)
+    primary, rows, base = make_primary(rng)
+    rep = make_sharded(rows, n_shards=3, epoch_txns=16)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 50)
+    rs.sync(max_records=77)                  # stop partway through the stream
+    while rep._dispatched_lsn <= rep.applied_lsn:    # nudge off a barrier
+        rs.sync(max_records=3)
+    barrier_applied, barrier_resume = rep.applied_lsn, rep.resume_lsn
+    assert rep._dispatched_lsn > rep.applied_lsn     # genuinely mid-epoch
+    stats = rep.recover_local(Strategy.LOG1)
+    assert stats.strategy == "Log1"
+    # recovery lands on the single consistent pre-epoch resume point
+    assert (rep.applied_lsn, rep.resume_lsn) == (barrier_applied,
+                                                 barrier_resume)
+    assert rep.resume_lsn <= rep.applied_lsn + 1
+    assert rep.queued_slices() == 0 and not rep.pending
+    fresh = LogShipper(primary)              # shipper restart: soft cursors
+    rep.resubscribe(fresh)
+    fresh.drain("s1", rep.apply_batch)
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert rep.user_state() == oracle
+
+
+def test_sharded_crash_recovery_via_log2_also_works():
+    rng = random.Random(6)
+    primary, rows, base = make_primary(rng)
+    rep = make_sharded(rows)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 30)
+    rs.sync()
+    rep.recover_local(Strategy.LOG2)
+    rep.resubscribe(rs.shipper)
+    drive(primary, rng, 10)
+    rs.sync()
+    assert rep.user_state() == committed_state_oracle(primary.crash(), base)
+
+
+# ------------------------------------------------------------------ failover
+def test_sharded_promote_merges_shard_buffers_before_undo():
+    """An in-flight loser whose records straddle shards must be undone as
+    ONE transaction: promote merges the per-shard slices, repeats history
+    in LSN order, and undoes newest-first."""
+    rng = random.Random(7)
+    primary, rows, base = make_primary(rng)
+    part = range_partitioner([("t", b"k00150")])
+    rep = make_sharded(rows, rid="s1", n_shards=2, partitioner=part)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 30)
+    rs.sync(max_records=40)                  # promote must drain the rest
+    loser = primary.tc.begin()               # straddles both shards
+    primary.tc.update(loser, "t", b"k00010", b"LOSER-LO")
+    primary.tc.update(loser, "t", b"k00200", b"LOSER-HI")
+    primary.tc.insert(loser, "t", b"k00150x", b"LOSER-NEW")
+    primary.log.flush()
+    image = primary.crash()
+    new_primary = rs.promote(image=image)
+    oracle = committed_state_oracle(image, base)
+    assert dict(new_primary.scan_all()) == oracle
+    assert new_primary.dc.read("t", b"k00150x") is None
+    tok = new_primary.run_txn([("update", "t", b"k00009", b"new-era")])
+    assert tok > 0 and new_primary.dc.read("t", b"k00009") == b"new-era"
+
+
+def test_promote_picks_sharded_replica_that_applied_past_its_barrier():
+    """Mid-epoch work counts toward promotion choice: catchup_lsn, not the
+    durable barrier watermark."""
+    rng = random.Random(8)
+    primary, rows, _ = make_primary(rng)
+    serial = make_serial(rows, "r1")
+    sharded = make_sharded(rows, "s1", epoch_txns=10_000, auto_pump=False)
+    rs = ReplicaSet(primary, [serial, sharded])
+    drive(primary, rng, 20, abort_frac=0.0)
+    rs.shipper.drain("s1", sharded.apply_batch)  # only the sharded one syncs
+    sharded.pump()                               # applied, but no barrier yet
+    assert sharded.applied_lsn < sharded.catchup_lsn()
+    rs.promote(image=primary.crash())
+    assert sharded.promoted and not serial.promoted
+
+
+def test_promote_auto_selects_detached_replica_and_reattaches():
+    """A detached (unsubscribed) standby can still be the most caught-up
+    promotion target; promote must re-attach it instead of raising after
+    having popped it from the set."""
+    rng = random.Random(9)
+    primary, rows, base = make_primary(rng)
+    r1 = make_serial(rows, "r1")
+    s1 = make_sharded(rows, "s1")
+    rs = ReplicaSet(primary, [r1, s1])
+    drive(primary, rng, 20, abort_frac=0.0)
+    rs.sync()
+    drive(primary, rng, 5, abort_frac=0.0)
+    rs.shipper.drain("s1", s1.apply_batch)   # only s1 catches up ...
+    rs.shipper.unsubscribe("s1")             # ... and is then detached
+    new_primary = rs.promote()               # live-shipper path
+    assert s1.promoted and not r1.promoted
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert dict(new_primary.scan_all()) == oracle
+
+
+def test_sharded_commit_survives_barrier_failure_without_phantom_inflight():
+    """A committed transaction whose slice fails to apply (oversized record
+    for this geometry) must not reappear as in-flight: it cannot pin the
+    resume watermark or be undone as a loser — its slice stays queued as
+    committed work."""
+    rng = random.Random(10)
+    primary, rows, base = make_primary(rng, page_size=8192)
+    rep = make_sharded(rows, epoch_txns=1)   # barrier fires inside _commit
+    rs = ReplicaSet(primary, [rep])
+    rs.write([("update", "t", b"k00001", b"ok")])
+    rs.sync()
+    wm = rep.applied_lsn
+    rs.write([("update", "t", b"k00002", rng.randbytes(5000))])  # > 4 KiB page
+    with pytest.raises(ValueError, match="exceeds page size"):
+        rs.sync()
+    assert not rep._first_lsn                # no phantom in-flight txn
+    assert not rep.pending
+    assert rep.queued_slices() == 1          # committed work stays queued
+    assert rep.applied_lsn == wm             # durable watermark unmoved
+    assert not rep.db.tc.active              # no dangling local sub-txn
+
+
+def test_sharded_barrier_retries_after_transient_failure(monkeypatch):
+    """A transiently failing slice leaves committed work queued; an
+    overlapping re-delivery of the commit retries the barrier WITHOUT
+    re-dispatching or double-counting the source transaction."""
+    rng = random.Random(11)
+    primary, rows, base = make_primary(rng)
+    rep = make_sharded(rows, epoch_txns=1)
+    rs = ReplicaSet(primary, [rep])
+    tok = rs.write([("update", "t", b"k00001", b"v1")])
+    orig, calls = rep._apply_slice, {"n": 0}
+
+    def flaky(s, ops):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient apply hiccup")
+        return orig(s, ops)
+
+    monkeypatch.setattr(rep, "_apply_slice", flaky)
+    with pytest.raises(RuntimeError, match="transient"):
+        rs.sync()
+    assert rep.applied_txns == 1 and rep.queued_slices() == 1
+    rs.shipper.subscribe("s1", 1)            # overlapping re-delivery
+    rs.sync()
+    assert rep.applied_txns == 1             # not double-counted
+    assert rep.read("t", b"k00001") == b"v1"
+    assert rep.applied_lsn >= tok            # barrier finally committed
+    assert rep.user_state() == committed_state_oracle(primary.crash(), base)
+
+
+# ------------------------------------------- randomized convergence (seeded)
+def _converge_once(seed, n_shards, epoch_txns):
+    rng = random.Random(seed)
+    primary, rows, base = make_primary(rng)
+    serial = make_serial(rows, "r1")
+    sharded = make_sharded(rows, "s1", n_shards=n_shards,
+                           epoch_txns=epoch_txns)
+    rs = ReplicaSet(primary, [serial, sharded])
+    for _ in range(rng.randrange(6, 12)):
+        event = rng.random()
+        drive(primary, rng, rng.randrange(1, 8))
+        if event < 0.35:
+            rs.sync(max_records=rng.randrange(5, 60))   # partial batches
+        elif event < 0.55:
+            rs.sync()
+        elif event < 0.7:                    # overlapping re-delivery
+            rep = rng.choice([serial, sharded])
+            rs.shipper.subscribe(rep.replica_id,
+                                 rng.randrange(1, max(rep._ship_pos, 2)))
+            rs.sync(max_records=rng.randrange(5, 60))
+        else:                                # crash + local recovery
+            rep = rng.choice([serial, sharded])
+            rep.recover_local(rng.choice([Strategy.LOG1, Strategy.LOG2]))
+            rep.resubscribe(rs.shipper)
+    rs.sync()
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert serial.user_state() == oracle, f"serial diverged (seed={seed})"
+    assert sharded.user_state() == oracle, f"sharded diverged (seed={seed})"
+    assert sharded.applied_lsn == serial.applied_lsn
+
+
+@pytest.mark.parametrize("seed,n_shards,epoch_txns", [
+    (101, 1, 1), (102, 2, 3), (103, 4, 8), (104, 7, 64),
+])
+def test_serial_and_sharded_converge_randomized(seed, n_shards, epoch_txns):
+    _converge_once(seed, n_shards, epoch_txns)

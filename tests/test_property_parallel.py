@@ -1,0 +1,24 @@
+"""Hypothesis property test: serial and key-range-sharded apply both
+converge to ``committed_state_oracle`` for any shard count and epoch
+length, under randomized fault schedules — partial batches, overlapping
+re-deliveries (rewound shipper cursors), and standby crash / local
+recovery / re-subscribe at arbitrary points.
+
+Optional dependency: degrades to a skip when hypothesis is absent (the
+seeded subset of the same scenario always runs in test_parallel_apply.py).
+"""
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from test_parallel_apply import _converge_once  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 10_000), n_shards=st.integers(1, 6),
+       epoch_txns=st.integers(1, 12))
+def test_property_serial_and_sharded_converge(seed, n_shards, epoch_txns):
+    _converge_once(seed, n_shards, epoch_txns)

@@ -3,6 +3,7 @@ replica-local crash recovery + re-subscription, staleness-bounded routing,
 and failover promotion."""
 import random
 
+import repl_workload
 from repro.core import (Database, LogManager, Strategy, UpdateRec,
                         committed_state_oracle, make_key)
 from repro.core.records import CommitRec
@@ -13,12 +14,8 @@ VAL = 40
 
 
 def make_primary(rng, page_size=8192):
-    rows = [(f"k{i:05d}".encode(), rng.randbytes(VAL)) for i in range(N_ROWS)]
-    db = Database(page_size=page_size, cache_pages=256, tracker_interval=25,
-                  bg_flush_per_txn=2)
-    db.load_table("t", rows)
-    base = {make_key("t", k): v for k, v in rows}
-    return db, rows, base
+    return repl_workload.make_primary(rng, n_rows=N_ROWS, val=VAL,
+                                      page_size=page_size)
 
 
 def make_replica(rows, rid="r1", page_size=4096):
@@ -28,36 +25,12 @@ def make_replica(rows, rid="r1", page_size=4096):
 
 
 def random_ops(rng, n):
-    ops = []
-    for _ in range(n):
-        roll = rng.random()
-        if roll < 0.7:
-            ops.append(("update", "t", f"k{rng.randrange(N_ROWS):05d}".encode(),
-                        rng.randbytes(VAL)))
-        elif roll < 0.9:
-            ops.append(("insert", "t", f"x{rng.randrange(10**6):07d}".encode(),
-                        rng.randbytes(VAL)))
-        else:
-            ops.append(("delete", "t", f"k{rng.randrange(N_ROWS):05d}".encode(),
-                        None))
-    return ops
+    return repl_workload.random_ops(rng, n, n_rows=N_ROWS, val=VAL)
 
 
 def drive(db, rng, n_txns, abort_frac=0.15):
-    for _ in range(n_txns):
-        ops = random_ops(rng, rng.randrange(1, 6))
-        if rng.random() < abort_frac:
-            txn = db.tc.begin()
-            for verb, table, key, value in ops:
-                if verb == "update":
-                    db.tc.update(txn, table, key, value)
-                elif verb == "insert":
-                    db.tc.insert(txn, table, key, value)
-                else:
-                    db.tc.delete(txn, table, key)
-            db.tc.abort(txn)
-        else:
-            db.run_txn(ops)
+    repl_workload.drive(db, rng, n_txns, n_rows=N_ROWS, val=VAL,
+                        abort_frac=abort_frac)
 
 
 # ---------------------------------------------------------------- scan_stable
@@ -372,6 +345,106 @@ def test_stale_cursor_after_recovery_fails_loudly():
     rs.sync()
     oracle = committed_state_oracle(primary.crash(), base)
     assert rep.user_state() == oracle
+
+
+# ------------------------------------------------- apply-path regressions
+def test_overlapping_redelivery_skips_consumed_records():
+    """Regression: a batch overlapping already-consumed LSNs passes the gap
+    check (from_lsn < _ship_pos), and re-delivered records of a straddling
+    transaction used to be appended to the buffer AGAIN — double-applying
+    its ops at commit.  Re-polling an already-shipped range must skip
+    everything below the consumed position."""
+    rng = random.Random(20)
+    primary, rows, base = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    rs.write([("update", "t", b"k00001", b"A")])
+    txn = primary.tc.begin()                 # straddler: in-flight, stable
+    primary.tc.update(txn, "t", b"k00002", b"S1")
+    primary.tc.insert(txn, "t", b"xstraddle", b"S2")
+    primary.log.flush()
+    rs.sync()
+    assert len(rep.pending[txn]) == 2
+    rs.shipper.subscribe("r1", 1)            # re-poll already-shipped range
+    rs.sync()
+    assert len(rep.pending[txn]) == 2        # NOT double-buffered
+    assert rep.skipped_dup_recs > 0
+    primary.tc.commit(txn)
+    rs.sync()
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert rep.user_state() == oracle
+    assert rep.read("t", b"xstraddle") == b"S2"
+
+
+def test_lag_ignores_unforced_commit_past_stable_point():
+    """Regression: lag() claimed distance from the last stable commit but
+    computed min(last_commit_lsn, stable_lsn), which is not a commit LSN
+    when an unforced commit sits past the stable point — a fully caught-up
+    replica reported phantom lag and max_lag routing spuriously fell back
+    to the primary."""
+    rng = random.Random(21)
+    primary, rows, _ = make_primary(rng)
+    rep = make_replica(rows)
+    rs = ReplicaSet(primary, [rep])
+    drive(primary, rng, 10, abort_frac=0.0)
+    rs.sync()
+    assert rep.lag(primary.log) == 0
+    txn = primary.tc.begin()                 # stable in-flight work ...
+    primary.tc.update(txn, "t", b"k00003", b"inflight")
+    primary.log.flush()                      # ... pushes stable past the
+    primary.log.append(CommitRec(txn=txn))   # last commit; commit unforced
+    assert primary.log.last_commit_lsn > primary.log.stable_lsn
+    assert rep.lag(primary.log) == 0         # was: phantom lag
+    res = rs.read("t", b"k00001", max_lag=0)
+    assert res.source == "r1"                # was: spurious primary fallback
+
+
+def test_last_stable_commit_lsn_tracking():
+    log = LogManager()
+    assert log.last_stable_commit_lsn == 0
+    log.append(UpdateRec(txn=1, table="t", key=b"k", after=b"v"))   # lsn 1
+    log.append(CommitRec(txn=1))                                    # lsn 2
+    log.append(UpdateRec(txn=2, table="t", key=b"k", after=b"w"))   # lsn 3
+    log.append(CommitRec(txn=2))                                    # lsn 4
+    log.append(UpdateRec(txn=3, table="t", key=b"k", after=b"x"))   # lsn 5
+    log.flush(upto=3)                        # commit 4 still unforced
+    assert log.last_stable_commit_lsn == 2
+    log.flush(upto=5)
+    assert log.last_stable_commit_lsn == 4
+    log.append(CommitRec(txn=3))                                    # lsn 6
+    assert log.last_stable_commit_lsn == 4   # appended, not forced
+    survivor = log.crash()                   # tail commit lost
+    assert survivor.last_stable_commit_lsn == survivor.last_commit_lsn == 4
+    log.flush()
+    assert log.last_stable_commit_lsn == 6
+
+
+def test_shipper_unknown_subscriber_raises_descriptive_error():
+    import pytest
+    rng = random.Random(22)
+    primary, _, _ = make_primary(rng)
+    shipper = LogShipper(primary)
+    with pytest.raises(KeyError, match="subscribe"):
+        shipper.poll("ghost")
+    with pytest.raises(KeyError, match="subscribe"):
+        shipper.backlog("ghost")
+
+
+def test_sync_skips_detached_replicas():
+    """A replica without a shipping cursor (unsubscribed, e.g. pending a
+    re-seed) must not break the whole set's sync."""
+    rng = random.Random(23)
+    primary, rows, base = make_primary(rng)
+    r1, r2 = make_replica(rows, "r1"), make_replica(rows, "r2")
+    rs = ReplicaSet(primary, [r1, r2])
+    rs.shipper.unsubscribe("r2")
+    drive(primary, rng, 10, abort_frac=0.0)
+    rs.sync()                                # must not raise
+    oracle = committed_state_oracle(primary.crash(), base)
+    assert r1.user_state() == oracle
+    assert r2.applied_lsn == 0               # untouched, served nothing new
+    rs.sync(max_records=16)                  # bounded-poll path too
+    assert r2.applied_lsn == 0
 
 
 # --------------------------------------------------------- max_txn tracking
