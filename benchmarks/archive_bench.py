@@ -1,0 +1,194 @@
+"""Archive benchmark: the three costs that decide whether logical
+snapshots + log archival earn their keep.
+
+  1. restore time vs snapshot cadence — point-in-time restore replays
+     committed redo from the newest covering snapshot; more frequent
+     snapshots mean a shorter replay and a faster restore, at the cost of
+     more scans;
+  2. live-log memory bound under truncation — with an Archiver running at
+     the snapshot cadence, the in-memory record count stays bounded by the
+     inter-snapshot distance while the sealed archive absorbs history (and
+     crash recovery still works through the splice cursor);
+  3. re-seed vs full replay — a standby joining late from a snapshot
+     (restore_replica + catch-up shipping) against one replaying the whole
+     history from LSN 1; the speedup is what makes promote() able to
+     re-seed failover survivors instead of detaching them.
+
+Every row cross-checks against ``committed_state_oracle`` (point-in-time
+form for restores).
+"""
+from __future__ import annotations
+
+import json
+import random
+import time
+
+from repro.archive import Archiver, LogArchive, SnapshotStore
+from repro.core import Database, committed_state_oracle, make_key
+from repro.replication import Replica, ReplicaSet
+
+PAGE_PRIMARY, PAGE_REPLICA = 8192, 4096
+
+
+def _setup(rng, n_rows, value_size=60):
+    rows = [(f"k{i:07d}".encode(), rng.randbytes(value_size))
+            for i in range(n_rows)]
+    primary = Database(page_size=PAGE_PRIMARY, cache_pages=512,
+                       tracker_interval=100, bg_flush_per_txn=4)
+    primary.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+    return primary, rows, base
+
+
+def _drive(primary, rng, n_rows, n_txns, ops_per_txn=8):
+    for _ in range(n_txns):
+        primary.run_txn([("update", "t",
+                          f"k{rng.randrange(n_rows):07d}".encode(),
+                          rng.randbytes(60)) for _ in range(ops_per_txn)])
+
+
+def bench_restore_vs_cadence(fast: bool) -> list[dict]:
+    """Restore-to-tip wall time as the snapshot cadence varies: from one
+    snapshot at load time (full redo replay) down to one every total/8
+    transactions (short replay)."""
+    n_rows = 2_000 if fast else 10_000
+    total_txns = 400 if fast else 2_000
+    rows_out = []
+    for n_snaps in (1, 4, 8):
+        rng = random.Random(21)
+        primary, _, base = _setup(rng, n_rows)
+        store = SnapshotStore()
+        per_gap = total_txns // n_snaps
+        for _ in range(n_snaps):
+            store.take(primary, chunk_keys=512,
+                       on_chunk=lambda: _drive(primary, rng, n_rows, 1))
+            _drive(primary, rng, n_rows, per_gap)
+        target = primary.log.stable_lsn
+        t0 = time.perf_counter()
+        restored, stats = store.restore(target, primary,
+                                        page_size=PAGE_REPLICA)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        ok = dict(restored.scan_all()) == committed_state_oracle(
+            primary.crash(), base, upto_lsn=target)
+        assert ok, f"restore diverged at n_snaps={n_snaps}"
+        rows_out.append({
+            "name": f"archive_restore/snapshots={n_snaps}",
+            "snapshots": n_snaps,
+            "cadence_txns": per_gap,
+            "replayed_txns": stats.replayed_txns,
+            "replayed_ops": stats.replayed_ops,
+            "restore_ms": round(wall_ms, 2),
+            "us_per_call": wall_ms * 1e3,
+            "derived": f"replay={stats.replayed_txns}txns "
+                       f"restore={wall_ms:.0f}ms ok={ok}",
+        })
+    return rows_out
+
+
+def bench_memory_bound(fast: bool) -> list[dict]:
+    """Live LogManager record count under an Archiver running at the
+    snapshot cadence, vs the ever-growing total history; ends with a crash
+    + LOG1 recovery through the splice cursor."""
+    from repro.core import Strategy, recover
+    n_rows = 2_000 if fast else 10_000
+    rounds, per_round = (8, 50) if fast else (20, 100)
+    rows_out = []
+    for cadence_rounds in (0, 1, 4):         # snapshots every N rounds; 0=off
+        rng = random.Random(22)
+        primary, _, base = _setup(rng, n_rows)
+        store = SnapshotStore()
+        archiver = Archiver(primary, archive=LogArchive(segment_records=512),
+                            snapshots=store)
+        peak = 0
+        t0 = time.perf_counter()
+        for i in range(rounds):
+            _drive(primary, rng, n_rows, per_round)
+            # high-water mark: just before the archiver gets to run
+            peak = max(peak, primary.log.in_memory_records)
+            if cadence_rounds and (i + 1) % cadence_rounds == 0:
+                store.take(primary, chunk_keys=1024)
+                archiver.run_once()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        image = primary.crash()
+        recovered, _ = recover(image, Strategy.LOG1, page_size=PAGE_PRIMARY)
+        ok = dict(recovered.scan_all()) == committed_state_oracle(image, base)
+        assert ok, f"post-truncation recovery diverged " \
+                   f"(cadence={cadence_rounds})"
+        total = primary.log.end_lsn
+        rows_out.append({
+            "name": f"archive_memory/cadence={cadence_rounds or 'off'}",
+            "cadence_rounds": cadence_rounds,
+            "peak_in_memory_records": peak,
+            "total_log_records": total,
+            "bound_frac": round(peak / total, 3),
+            "us_per_call": wall_ms / rounds * 1e3,
+            "derived": f"peak={peak} total={total} "
+                       f"frac={peak / total:.2f} recover_ok={ok}",
+        })
+    # the point of the exercise: truncation bounds memory well below history
+    assert rows_out[1]["peak_in_memory_records"] < \
+        rows_out[0]["peak_in_memory_records"] / 2, \
+        "truncation did not bound the live log"
+    return rows_out
+
+
+def bench_reseed_vs_full_replay(fast: bool) -> list[dict]:
+    """A standby joining a long-lived primary: snapshot re-seed + catch-up
+    vs full replay from LSN 1.  The speedup is the promote()-survivor
+    story in benchmark form."""
+    n_rows = 2_000 if fast else 10_000
+    history_txns = 600 if fast else 3_000
+    tail_txns = 25 if fast else 100
+    rng = random.Random(23)
+    primary, rows, base = _setup(rng, n_rows)
+    store = SnapshotStore()
+    _drive(primary, rng, n_rows, history_txns)
+    store.take(primary, chunk_keys=1024,
+               on_chunk=lambda: _drive(primary, rng, n_rows, 1))
+    _drive(primary, rng, n_rows, tail_txns)   # snapshot slightly stale
+    oracle = committed_state_oracle(primary.crash(), base)
+
+    # full replay: seeded as of the initial load, ships the whole history
+    rs = ReplicaSet(primary)
+    full = Replica("full", page_size=PAGE_REPLICA, cache_pages=1024,
+                   seed_tables={"t": rows})
+    t0 = time.perf_counter()
+    rs.add_replica(full)
+    rs.sync()
+    t_full = time.perf_counter() - t0
+    assert full.user_state() == oracle, "full-replay standby diverged"
+
+    # re-seed: newest snapshot + catch-up from its redo point
+    rs2 = ReplicaSet(primary, snapshots=store)
+    t0 = time.perf_counter()
+    seeded = store.restore_replica("seeded", page_size=PAGE_REPLICA,
+                                   cache_pages=1024)
+    rs2.add_replica(seeded)
+    rs2.sync()
+    t_seed = time.perf_counter() - t0
+    assert seeded.user_state() == oracle, "re-seeded standby diverged"
+
+    speedup = t_full / max(t_seed, 1e-9)
+    assert speedup >= 2.0, \
+        f"re-seed speedup {speedup:.1f}x below the 2x acceptance bound"
+    return [{
+        "name": "archive_reseed/vs_full_replay",
+        "history_txns": history_txns,
+        "tail_txns": tail_txns,
+        "full_replay_ms": round(t_full * 1e3, 1),
+        "reseed_ms": round(t_seed * 1e3, 1),
+        "speedup": round(speedup, 2),
+        "us_per_call": t_seed * 1e6,
+        "derived": f"reseed={t_seed * 1e3:.0f}ms "
+                   f"full={t_full * 1e3:.0f}ms {speedup:.1f}x ok=True",
+    }]
+
+
+def run(fast: bool = False) -> dict:
+    rows = (bench_restore_vs_cadence(fast) + bench_memory_bound(fast)
+            + bench_reseed_vs_full_replay(fast))
+    return {"name": "archive", "rows": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(fast=True), indent=1))

@@ -5,11 +5,17 @@
 Prints ``name,us_per_call,derived`` CSV lines per benchmark row, and writes
 full JSON to artifacts/bench/.  --full uses the paper-scaled setup (slower);
 the default "fast" mode keeps the whole suite under ~3 minutes.
+
+Failure discipline: each module runs to completion independently (one
+broken table must not hide the others' numbers), but any failure — an
+oracle assertion inside a sub-benchmark most importantly — makes the
+runner exit non-zero, so CI cannot greenlight a diverging benchmark.
 """
 from __future__ import annotations
 
 import json
 import sys
+import traceback
 from pathlib import Path
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
@@ -17,15 +23,22 @@ ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
 def main() -> None:
     fast = "--full" not in sys.argv
-    from . import (appendix_d_variants, fig2_cache_sweep, fig3_ckpt_interval,
-                   kernel_bench, parallel_apply_bench, replication_bench,
-                   roofline_table, trainstore_bench)
+    from . import (appendix_d_variants, archive_bench, fig2_cache_sweep,
+                   fig3_ckpt_interval, kernel_bench, parallel_apply_bench,
+                   replication_bench, roofline_table, trainstore_bench)
     ART.mkdir(parents=True, exist_ok=True)
+    failures: list[str] = []
     print("name,us_per_call,derived")
     for mod in (fig2_cache_sweep, fig3_ckpt_interval, appendix_d_variants,
-                replication_bench, parallel_apply_bench, trainstore_bench,
-                kernel_bench, roofline_table):
-        out = mod.run(fast=fast)
+                replication_bench, parallel_apply_bench, archive_bench,
+                trainstore_bench, kernel_bench, roofline_table):
+        try:
+            out = mod.run(fast=fast)
+        except Exception:
+            failures.append(mod.__name__)
+            print(f"# FAILED {mod.__name__}:", file=sys.stderr)
+            traceback.print_exc()
+            continue
         (ART / f"{out['name']}.json").write_text(json.dumps(out, indent=1))
         for row in out["rows"]:
             if "us_per_call" in row:
@@ -57,6 +70,10 @@ def main() -> None:
                       f"{row.get('compute_s', 0)*1e6:.0f},"
                       f"\"dom={row.get('dominant','')}\"")
     print("# full JSON written to artifacts/bench/", file=sys.stderr)
+    if failures:
+        print(f"# {len(failures)} benchmark module(s) FAILED: "
+              f"{', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Logical snapshots, log archival & point-in-time restore.
+
+The backup/restore face of logical recovery: because the log carries no
+PIDs, a fuzzy snapshot of committed rows plus committed-only logical redo
+rebuilds state onto any geometry — which is what lets standbys join, lag,
+and recover without replaying history from LSN 1, and lets the in-memory
+log stay bounded while sealed segments hold the cold prefix.
+
+Public surface:
+  LogArchive / Segment        sealed-segment cold tier; LogManager splices
+                              it with the live tail on every read path
+  SnapshotStore / Snapshot    fuzzy committed-only snapshots of a live
+                              Database; point-in-time restore(target_lsn)
+                              and restore_replica (pre-seeded standby)
+  RestoreStats                what a restore replayed
+  Archiver                    retention policy: seal, truncate below
+                              min(snapshot horizon, slowest subscriber),
+                              prune below what retained snapshots need
+  SnapshotRequired            raised when a subscriber falls below the
+                              retention horizon; the ReplicaSet auto-
+                              re-seeds when a SnapshotStore is attached
+"""
+from .errors import SnapshotRequired
+from .log_archive import LogArchive, Segment
+from .manager import Archiver
+from .snapshot import (DEFAULT_EXCLUDE_TABLES, RestoreStats, Snapshot,
+                       SnapshotStore)
+
+__all__ = [
+    "LogArchive", "Segment", "Archiver", "Snapshot", "SnapshotStore",
+    "RestoreStats", "SnapshotRequired", "DEFAULT_EXCLUDE_TABLES",
+]

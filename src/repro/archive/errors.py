@@ -1,0 +1,29 @@
+"""Errors shared across the archive subsystem (kept import-light: the log
+shipper raises ``SnapshotRequired`` without pulling in the snapshot/restore
+machinery)."""
+from __future__ import annotations
+
+from ..core.records import LSN
+
+
+class SnapshotRequired(RuntimeError):
+    """A subscriber asked for log records below what the primary still
+    retains (in memory or in un-pruned archive segments).  The log cannot
+    serve it — silent empty batches would strand the subscriber forever —
+    so the remedy is stated instead: re-seed from a logical snapshot and
+    resume shipping from that snapshot's ``redo_lsn``.
+
+    ``ReplicaSet`` with a ``SnapshotStore`` attached performs that re-seed
+    automatically; without one, this error reaches the operator."""
+
+    def __init__(self, replica_id: str, requested_lsn: LSN, retained_lsn: LSN):
+        self.replica_id = replica_id
+        self.requested_lsn = requested_lsn
+        self.retained_lsn = retained_lsn
+        super().__init__(
+            f"subscriber {replica_id!r} needs the log from LSN "
+            f"{requested_lsn}, but records below {retained_lsn} are no "
+            "longer retained — re-seed the subscriber from a logical "
+            "snapshot (SnapshotStore.restore_replica / Replica.reseed_from) "
+            "and re-subscribe from its redo_lsn, or attach a SnapshotStore "
+            "to the ReplicaSet to have this happen automatically")

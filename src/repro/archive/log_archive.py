@@ -1,0 +1,144 @@
+"""Sealed-segment archive of the stable logical log.
+
+``LogManager`` keeps every record in memory, which is exactly right for the
+paper's recovery study and exactly wrong for a long-lived primary: the log
+grows without bound while only a suffix is ever hot (shipping to live
+subscribers, redo above the last snapshot).  ``LogArchive`` is the cold
+tier: the stable prefix is copied into immutable, LSN-contiguous segments,
+after which ``LogManager.truncate`` may drop it from memory.  Every log
+read path splices archive segments with the live tail (one dense LSN
+space), so recovery, analysis and shipping never know where a record lives.
+
+Only the *stable* prefix can be sealed — an unforced record can still be
+disowned by a crash, and an archive holding disowned work would resurrect
+it at restore time.  Sealing copies references, never mutates; pruning
+drops whole segments from the cold end (the unit a real deployment would
+delete as a file), and is the single place in the system where log history
+is genuinely lost — everything below ``retained_from`` is gone, which is
+why pruning must stay below the snapshot horizon (see ``Archiver``).
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+from ..core.log import LogManager, TruncatedLogError
+from ..core.records import LSN, LogRec
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One sealed, immutable run of consecutive LSNs [lo, hi]."""
+    lo: LSN
+    hi: LSN
+    records: tuple
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+class LogArchive:
+    def __init__(self, segment_records: int = 1024):
+        self.segment_records = segment_records
+        self.segments: list[Segment] = []
+        self._seg_los: list[LSN] = []    # segments[i].lo, kept in lockstep
+        self._archived_upto: LSN = 0     # newest sealed LSN (contiguous from lo)
+        self._retained_from: LSN = 1     # oldest LSN still held (prune floor)
+        self.pruned_records = 0
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def archived_upto(self) -> LSN:
+        return self._archived_upto
+
+    @property
+    def retained_from(self) -> LSN:
+        return self._retained_from
+
+    @property
+    def archived_records(self) -> int:
+        return sum(len(s) for s in self.segments)
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+    # ----------------------------------------------------------------- seal
+    def seal(self, log: LogManager, upto: Optional[LSN] = None) -> int:
+        """Copy the not-yet-archived stable prefix of ``log`` (through
+        ``upto`` when given) into sealed segments; returns records sealed.
+        Idempotent and incremental: the next call resumes where this one
+        stopped.  A short tail segment is extended in place up to the
+        segment size before a new one is opened."""
+        hi = log.stable_lsn if upto is None else min(upto, log.stable_lsn)
+        lo = self._archived_upto + 1
+        if hi < lo:
+            return 0
+        recs = list(log.scan(lo, hi))
+        sealed = len(recs)
+        if self.segments and len(self.segments[-1]) < self.segment_records:
+            last = self.segments[-1]
+            head = recs[: self.segment_records - len(last)]
+            recs = recs[len(head):]
+            if head:
+                self.segments[-1] = Segment(last.lo, last.hi + len(head),
+                                            last.records + tuple(head))
+        while recs:
+            chunk, recs = (recs[: self.segment_records],
+                           recs[self.segment_records:])
+            self.segments.append(
+                Segment(chunk[0].lsn, chunk[-1].lsn, tuple(chunk)))
+            self._seg_los.append(chunk[0].lsn)
+        self._archived_upto = hi
+        return sealed
+
+    # ----------------------------------------------------------------- read
+    def _seg_index(self, lsn: LSN) -> int:
+        """Index of the segment containing ``lsn``; -1 when absent."""
+        i = bisect.bisect_right(self._seg_los, lsn) - 1
+        if i >= 0 and self.segments[i].hi >= lsn:
+            return i
+        return -1
+
+    def record(self, lsn: LSN) -> LogRec:
+        i = self._seg_index(lsn)
+        if i < 0:
+            raise TruncatedLogError(
+                f"LSN {lsn} is not in the archive (retains "
+                f"[{self._retained_from}, {self._archived_upto}])")
+        seg = self.segments[i]
+        return seg.records[lsn - seg.lo]
+
+    def scan(self, from_lsn: LSN, to_lsn: LSN) -> Iterator[LogRec]:
+        """Yield archived records with from_lsn <= lsn <= to_lsn (capped at
+        the sealed frontier); raises if the range reaches below the prune
+        floor — a reader missing records must fail loudly."""
+        lo = max(from_lsn, 1)
+        hi = min(to_lsn, self._archived_upto)
+        if lo > hi:
+            return
+        if lo < self._retained_from:
+            raise TruncatedLogError(
+                f"archive scan from LSN {lo} reaches below the prune floor "
+                f"{self._retained_from}")
+        i = self._seg_index(lo)
+        for seg in self.segments[i:]:
+            if seg.lo > hi:
+                return
+            yield from seg.records[max(0, lo - seg.lo): hi - seg.lo + 1]
+
+    # ---------------------------------------------------------------- prune
+    def prune(self, below_lsn: LSN) -> int:
+        """Drop whole segments wholly below ``below_lsn`` (the deletion
+        unit); returns records dropped.  This is the only real data loss in
+        the system — callers bound ``below_lsn`` by the snapshot horizon
+        and the slowest subscriber (``Archiver.prune``)."""
+        dropped = 0
+        while self.segments and self.segments[0].hi < below_lsn:
+            dropped += len(self.segments.pop(0))
+            self._seg_los.pop(0)
+        floor = self.segments[0].lo if self.segments \
+            else min(below_lsn, self._archived_upto + 1)
+        self._retained_from = max(self._retained_from, floor)
+        self.pruned_records += dropped
+        return dropped

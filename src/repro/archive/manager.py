@@ -1,0 +1,93 @@
+"""Retention coordinator: decides *where* the log may be cut.
+
+Two different cuts with two different stakes:
+
+  truncate — drop the in-memory prefix of ``LogManager``.  Information-
+      preserving (the prefix is sealed in the archive first; every reader
+      splices), so its watermark is pure policy: keep the *hot* ranges in
+      memory.  Hot means (a) at or above the snapshot horizon — the redo
+      range a restore from the current snapshot replays — and (b) at or
+      above the slowest live subscriber's cursor — the range shipping will
+      read next.  Hence ``min(snapshot horizon, slowest subscriber)``.
+
+  prune — delete sealed segments.  Destroys history, so its watermark is a
+      correctness bound: never at or above what a *retained* snapshot's
+      restore needs (``min_redo_lsn``), never at or above a live cursor.
+
+Run ``run_once`` at whatever cadence taste dictates (the archive benchmark
+sweeps it); the live record count then stays bounded by the snapshot
+cadence instead of growing with history.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.records import LSN
+from ..core.tc import Database
+from .log_archive import LogArchive
+from .snapshot import SnapshotStore
+
+
+class Archiver:
+    """Binds one primary's log to its archive (attaching the splice) and
+    applies the watermark policy above.  ``shippers`` is any iterable of
+    objects with ``min_cursor()`` — in practice ``LogShipper``s — whose
+    subscribers truncation must not push into the cold tier."""
+
+    def __init__(self, db: Database, archive: Optional[LogArchive] = None,
+                 snapshots: Optional[SnapshotStore] = None, shippers=()):
+        self.db = db
+        self.archive = archive if archive is not None else LogArchive()
+        self.snapshots = snapshots
+        self.shippers = list(shippers)
+        db.log.attach_archive(self.archive)
+        if snapshots is not None and snapshots.archive is None:
+            snapshots.archive = self.archive
+
+    def watermark(self) -> LSN:
+        """Highest LSN through which the in-memory tail may be dropped:
+        ``min(snapshot horizon, slowest subscriber) - 1``, capped at the
+        stable point.  No snapshot yet means no truncation — there is
+        nothing to re-seed laggards from, so the whole log is hot."""
+        wm = self.db.log.stable_lsn
+        if self.snapshots is not None:
+            horizon = self.snapshots.horizon()
+            wm = min(wm, (horizon or 1) - 1)
+        for shipper in self.shippers:
+            cursor = shipper.min_cursor()
+            if cursor is not None:
+                wm = min(wm, cursor - 1)
+        return max(wm, 0)
+
+    def run_once(self) -> dict:
+        """Seal the stable prefix, then truncate memory to the watermark.
+        Returns counters for inspection/benchmarks."""
+        sealed = self.archive.seal(self.db.log)
+        truncated = self.db.log.truncate(self.watermark())
+        return {
+            "sealed": sealed,
+            "truncated": truncated,
+            "archived_upto": self.archive.archived_upto,
+            "in_memory_records": self.db.log.in_memory_records,
+        }
+
+    def prune(self, keep_snapshots: int = 1) -> dict:
+        """Retire old snapshots, then drop archive segments nothing needs:
+        below ``min(min_redo_lsn of retained snapshots, slowest
+        subscriber)``.  After this, a subscriber appearing below the floor
+        gets ``SnapshotRequired`` — the horizon is real."""
+        dropped_snaps = 0
+        bound: Optional[LSN] = None
+        if self.snapshots is not None:
+            dropped_snaps = self.snapshots.prune_snapshots(keep_snapshots)
+            bound = self.snapshots.min_redo_lsn()
+        if bound is None:
+            return {"snapshots_dropped": dropped_snaps, "records_pruned": 0,
+                    "retained_from": self.archive.retained_from}
+        for shipper in self.shippers:
+            cursor = shipper.min_cursor()
+            if cursor is not None:
+                bound = min(bound, cursor)
+        pruned = self.archive.prune(bound)
+        return {"snapshots_dropped": dropped_snaps, "records_pruned": pruned,
+                "retained_from": self.archive.retained_from}

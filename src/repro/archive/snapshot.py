@@ -1,0 +1,262 @@
+"""Fuzzy logical snapshots + point-in-time restore.
+
+The logical log (no PIDs, pure ``(table, key, before, after)``) makes
+backups geometry-independent: a snapshot is just committed rows, and a
+snapshot plus committed-only logical redo rebuilds state onto *any* page
+layout — a different page size, a different B-tree shape, a sharded
+standby.  This module is the missing re-seed path of the replication
+subsystem: nodes can join, lag, and recover without replaying history from
+LSN 1.
+
+Snapshot protocol (``SnapshotStore.take``):
+
+  1. ``tc.snapshot_begin()`` logs and forces a ``SnapshotRec``; its LSN is
+     ``begin_lsn``.  The record also captures ``oldest_active_lsn`` — the
+     first-write LSN of the oldest in-flight transaction — from which the
+     snapshot's ``redo_lsn`` derives.
+  2. The scan walks the tree in key order, one chunk at a time, patching
+     each chunk to *committed* values via the active transactions'
+     first-write before-images (``tc.committed_chunk``).  Writers are never
+     blocked: between chunks the workload keeps committing (``on_chunk`` in
+     tests/benchmarks drives exactly that), so different chunks observe
+     different commit points — the snapshot is *fuzzy*.
+  3. ``end_lsn`` is the stable LSN when the scan finishes; ``(begin_lsn,
+     end_lsn]`` is the fuzz window.
+
+What makes fuzziness harmless: every chunk is committed-only (in-flight
+work is patched out), and any transaction committing *inside* the window
+was observed by some chunks and missed by others — so restore replays ALL
+transactions with ``begin_lsn < commit <= target`` over the snapshot, and
+absolute after-images make re-applying the observed ones idempotent.
+Transactions with ``commit <= begin_lsn`` committed before the scan
+started and are fully present in every chunk; transactions in flight at
+begin may have records *below* ``begin_lsn``, which is why redo starts at
+``redo_lsn = min(oldest_active, begin+1)`` rather than at the window edge.
+
+Restore (``SnapshotStore.restore``): newest snapshot with
+``end_lsn <= target``, committed-only redo from its ``redo_lsn`` up to
+exactly ``target_lsn``, oracle-equal to the committed prefix <= target.
+With no eligible snapshot it degrades to a full replay from LSN 1 — the
+baseline the re-seed benchmark measures against.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Union
+
+from ..core.dc import split_key
+from ..core.log import LogManager
+from ..core.records import (LSN, NULL_LSN, CommitRec, SnapshotRec, UpdateRec)
+from ..core.tc import CrashImage, Database
+from .log_archive import LogArchive
+
+# the replication watermark row is position metadata in its owner's LSN
+# space — never part of a snapshot (a reseeded consumer writes its own)
+DEFAULT_EXCLUDE_TABLES = ("__repl",)
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """One fuzzy logical snapshot: committed rows + its LSN window."""
+    snapshot_id: int
+    begin_lsn: LSN            # SnapshotRec LSN: commits <= this fully present
+    end_lsn: LSN              # stable LSN at scan end (fuzz window closes)
+    redo_lsn: LSN             # committed redo replays from here
+    rows: tuple               # (composite key, value), committed-only, fuzzy
+    chunks: int = 0           # scan chunks (fuzz opportunities)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.rows)
+
+
+@dataclass
+class RestoreStats:
+    target_lsn: LSN = NULL_LSN
+    snapshot_id: Optional[int] = None
+    snapshot_rows: int = 0
+    redo_from: LSN = NULL_LSN
+    replayed_txns: int = 0
+    replayed_ops: int = 0
+    wall_ms: float = 0.0
+
+
+def _log_of(source) -> LogManager:
+    """Accept a Database, CrashImage, or bare LogManager as the redo
+    source (mirrors ``LogShipper``)."""
+    return source if isinstance(source, LogManager) else source.log
+
+
+class SnapshotStore:
+    """Holds logical snapshots of one primary (one LSN space) and restores
+    databases / standbys from them.  ``archive`` is optional and only
+    advisory here — the redo scan reads through the log's own splice — but
+    wiring it lets ``restore`` run from a bare archive with no live log."""
+
+    def __init__(self, archive: Optional[LogArchive] = None,
+                 exclude_tables: tuple = DEFAULT_EXCLUDE_TABLES):
+        self.archive = archive
+        self.exclude_tables = set(exclude_tables)
+        self.snapshots: list[Snapshot] = []
+        self._next_id = 1
+
+    # ------------------------------------------------------------------ take
+    def take(self, db: Database, *, chunk_keys: int = 256,
+             on_chunk: Optional[Callable[[], None]] = None) -> Snapshot:
+        """Fuzzy snapshot of a live database (see module docstring).
+        ``on_chunk`` runs between scan chunks — the hook concurrent writers
+        ride in this single-threaded harness."""
+        rec = db.tc.snapshot_begin(self._next_id)
+        begin = rec.lsn
+        redo = begin + 1 if rec.oldest_active_lsn == NULL_LSN \
+            else min(rec.oldest_active_lsn, begin + 1)
+        rows: list = []
+        cursor, more, chunks = None, True, 0
+        while more:
+            items, cursor, more = db.tc.committed_chunk(cursor, chunk_keys)
+            rows.extend((k, v) for k, v in items
+                        if split_key(k)[0] not in self.exclude_tables)
+            chunks += 1
+            if more and on_chunk is not None:
+                on_chunk()
+        snap = Snapshot(snapshot_id=rec.snapshot_id, begin_lsn=begin,
+                        end_lsn=db.log.stable_lsn, redo_lsn=redo,
+                        rows=tuple(rows), chunks=chunks)
+        self.snapshots.append(snap)
+        self._next_id += 1
+        return snap
+
+    # ------------------------------------------------------------- retention
+    def latest(self) -> Optional[Snapshot]:
+        return self.snapshots[-1] if self.snapshots else None
+
+    def latest_for(self, target_lsn: LSN) -> Optional[Snapshot]:
+        """Newest snapshot usable for ``target_lsn``: its fuzz window must
+        have closed at or before the target (chunks may hold state as new
+        as ``end_lsn``, which absolute-image redo can extend but never
+        rewind)."""
+        for snap in reversed(self.snapshots):
+            if snap.end_lsn <= target_lsn:
+                return snap
+        return None
+
+    def horizon(self) -> Optional[LSN]:
+        """Snapshot horizon: the newest snapshot's ``redo_lsn``.  Live-log
+        records below it are cold — any restore from the current snapshot,
+        and any re-seed, starts at or above it — so the in-memory tail may
+        be truncated up to ``horizon - 1`` (subscribers permitting)."""
+        snap = self.latest()
+        return snap.redo_lsn if snap else None
+
+    def min_redo_lsn(self) -> Optional[LSN]:
+        """Oldest redo point any *retained* snapshot still needs; pruning
+        archive segments at or above this would brick those snapshots."""
+        return min((s.redo_lsn for s in self.snapshots), default=None)
+
+    def prune_snapshots(self, keep_last: int = 1) -> int:
+        """Retire old snapshots (they pin the archive via min_redo_lsn);
+        returns how many were dropped."""
+        keep_last = max(keep_last, 0)
+        dropped = len(self.snapshots) - keep_last
+        if dropped > 0:
+            self.snapshots = self.snapshots[-keep_last:] if keep_last else []
+            return dropped
+        return 0
+
+    # --------------------------------------------------------------- restore
+    def restore(self, target_lsn: LSN,
+                source: Union[Database, CrashImage, LogManager, None] = None,
+                base_rows=None, **db_kwargs) -> tuple[Database, RestoreStats]:
+        """Point-in-time restore: a writable ``Database`` whose state is
+        exactly the committed prefix <= ``target_lsn``.
+
+        Loads the newest snapshot whose window closed at or before the
+        target, then replays every transaction with ``begin_lsn < commit
+        <= target_lsn`` through a fresh TC (one local transaction per
+        source transaction, LSN order — the replica apply discipline).
+        ``source`` is the log to replay from (``Database`` / ``CrashImage``
+        / ``LogManager``); omitted, the attached archive serves alone,
+        which is the dead-primary story: sealed segments + a snapshot are
+        enough.  ``db_kwargs`` pick the new geometry (page_size, ...) —
+        restore is relayout.
+
+        ``base_rows``: composite-key rows present *before* LSN 1 — the
+        initial ``bulk_build`` load, which is unlogged by design.  Only the
+        no-eligible-snapshot full-replay path needs it (a snapshot taken at
+        load time is the cleaner equivalent and makes it moot)."""
+        t0 = time.perf_counter()
+        if source is not None:
+            log = _log_of(source)
+            if target_lsn > log.stable_lsn:
+                raise ValueError(
+                    f"cannot restore to LSN {target_lsn}: only "
+                    f"{log.stable_lsn} is stable (the unforced tail is not "
+                    "restorable — it can still be disowned)")
+            scan = log.scan
+        elif self.archive is not None:
+            if target_lsn > self.archive.archived_upto:
+                raise ValueError(
+                    f"cannot restore to LSN {target_lsn} from the archive "
+                    f"alone: sealed only through "
+                    f"{self.archive.archived_upto} (pass the live log or "
+                    "crash image as source)")
+            scan = self.archive.scan
+        else:
+            raise ValueError("restore needs a log source: pass a Database/"
+                             "CrashImage/LogManager, or attach a LogArchive")
+
+        snap = self.latest_for(target_lsn)
+        begin = snap.begin_lsn if snap else 0
+        redo_from = snap.redo_lsn if snap else 1
+        stats = RestoreStats(target_lsn=target_lsn,
+                             snapshot_id=snap.snapshot_id if snap else None,
+                             snapshot_rows=snap.n_rows if snap else 0,
+                             redo_from=redo_from)
+
+        updates: dict[int, list[UpdateRec]] = {}
+        commits: list[tuple[LSN, int]] = []       # LSN order by construction
+        for rec in scan(redo_from, target_lsn):
+            if isinstance(rec, UpdateRec):
+                updates.setdefault(rec.txn, []).append(rec)
+            elif isinstance(rec, CommitRec) and rec.lsn > begin:
+                commits.append((rec.lsn, rec.txn))
+
+        db = Database(**db_kwargs)
+        seed = list(snap.rows) if snap else \
+            sorted(dict(base_rows or {}).items())
+        db.dc.bulk_build(seed)
+        db.tc.checkpoint()
+        for _lsn, txn in commits:
+            ops = updates.get(txn, ())
+            local = db.tc.begin()
+            for rec in ops:
+                db.tc.apply_shipped(local, rec)
+            db.tc.commit(local)
+            stats.replayed_txns += 1
+            stats.replayed_ops += len(ops)
+        stats.wall_ms = (time.perf_counter() - t0) * 1e3
+        return db, stats
+
+    def restore_replica(self, replica_id: str, *,
+                        target_lsn: Optional[LSN] = None,
+                        replica_cls=None, **replica_kwargs):
+        """The standby form of restore: a ``Replica`` (or ``replica_cls``,
+        e.g. ``ShardedApplier``) pre-seeded from the newest snapshot (<=
+        ``target_lsn`` when given), its durable ``(applied, resume)``
+        watermark set to the snapshot window.  Subscribing it at
+        ``resume_lsn`` replays the fuzz window and everything after through
+        the ordinary shipping path — catch-up, not history-from-LSN-1."""
+        # local import: replication builds on archive's errors, so the
+        # class dependency must point this way only at call time
+        from ..replication.replica import Replica
+        snap = self.latest() if target_lsn is None else \
+            self.latest_for(target_lsn)
+        if snap is None:
+            raise ValueError(
+                "no usable snapshot to seed from"
+                + (f" at or below LSN {target_lsn}" if target_lsn else "")
+                + " — take one first (SnapshotStore.take)")
+        replica = (replica_cls or Replica)(replica_id, **replica_kwargs)
+        replica.reseed_from(snap)
+        return replica

@@ -7,23 +7,25 @@ Public surface:
 """
 from .btree import BTree
 from .bufferpool import BufferPool
-from .dc import DataComponent, make_key, split_key
+from .dc import DataComponent, make_key, split_key, table_bounds, table_range
 from .dpt import DPT, build_dpt_logical, build_dpt_sql
-from .log import LogManager
+from .log import LogManager, TruncatedLogError
 from .pages import PAGE_SIZE, Page
 from .records import (LSN, NULL_LSN, NULL_PID, PID, BWRec, CLRRec, CommitRec,
-                      DeltaRec, RecKind, SMORec, UpdateRec)
+                      DeltaRec, RecKind, SMORec, SnapshotRec, UpdateRec)
 from .recovery import (RecoveryStats, Strategy, committed_state_oracle,
                        recover, recovered_state)
 from .storage import DiskModel, IOSim, IOStats, PageStore
 from .tc import CrashImage, Database, TransactionalComponent
 
 __all__ = [
-    "BTree", "BufferPool", "DataComponent", "make_key", "split_key", "DPT",
-    "build_dpt_logical", "build_dpt_sql", "LogManager", "PAGE_SIZE", "Page",
+    "BTree", "BufferPool", "DataComponent", "make_key", "split_key",
+    "table_bounds", "table_range", "DPT", "build_dpt_logical",
+    "build_dpt_sql",
+    "LogManager", "TruncatedLogError", "PAGE_SIZE", "Page",
     "LSN", "NULL_LSN", "NULL_PID", "PID", "BWRec", "CLRRec", "CommitRec",
-    "DeltaRec", "RecKind", "SMORec", "UpdateRec", "RecoveryStats", "Strategy",
-    "committed_state_oracle", "recover", "recovered_state", "DiskModel",
-    "IOSim", "IOStats", "PageStore", "CrashImage", "Database",
-    "TransactionalComponent",
+    "DeltaRec", "RecKind", "SMORec", "SnapshotRec", "UpdateRec",
+    "RecoveryStats", "Strategy", "committed_state_oracle", "recover",
+    "recovered_state", "DiskModel", "IOSim", "IOStats", "PageStore",
+    "CrashImage", "Database", "TransactionalComponent",
 ]

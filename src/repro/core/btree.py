@@ -133,6 +133,38 @@ class BTree:
             rec(self.root_pid)
         return out
 
+    def range_items(self, lo: Optional[bytes] = None,
+                    hi: Optional[bytes] = None,
+                    limit: Optional[int] = None) -> list[tuple[bytes, bytes]]:
+        """Ordered scan of keys in [lo, hi) (None = unbounded), stopping
+        after ``limit`` records.  Internal nodes are pruned by their
+        separator keys, so a narrow range touches only the pages it spans —
+        this is the index path under ranged replica reads and the chunked
+        fuzzy-snapshot scan."""
+        out: list[tuple[bytes, bytes]] = []
+        if self.root_pid == NULL_PID:
+            return out
+
+        def walk(pid: PID) -> bool:          # True = stop the whole scan
+            node = self.pool.get(pid)
+            if node.is_leaf:
+                for k, v in sorted(node.records.items()):
+                    if hi is not None and k >= hi:
+                        return True
+                    if lo is None or k >= lo:
+                        out.append((k, v))
+                        if limit is not None and len(out) >= limit:
+                            return True
+                return False
+            # child i owns (keys[i-1], keys[i]] — visit those intersecting
+            i0 = 0 if lo is None else bisect.bisect_left(node.keys, lo)
+            i1 = len(node.children) - 1 if hi is None else \
+                min(bisect.bisect_left(node.keys, hi), len(node.children) - 1)
+            return any(walk(node.children[i]) for i in range(i0, i1 + 1))
+
+        walk(self.root_pid)
+        return out
+
     # ------------------------------------------------------------------ SMO
     def _split(self, path: list[PID], key: bytes) -> tuple[SMORec, dict[PID, Page]]:
         """Split the leaf on ``path`` (and ancestors as needed).  Returns the

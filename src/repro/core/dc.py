@@ -34,6 +34,30 @@ def split_key(composite: bytes) -> tuple[str, bytes]:
     return composite[2:2 + tlen].decode(), composite[2 + tlen:]
 
 
+def table_bounds(table: str) -> tuple[bytes, Optional[bytes]]:
+    """Composite-key interval [lo, hi) covering every key of ``table``
+    (hi None = end of key space).  hi is the prefix incremented with
+    carry: the smallest byte string sorting after every prefix extension."""
+    prefix = make_key(table, b"")
+    hi = bytearray(prefix)
+    while hi and hi[-1] == 0xFF:
+        hi.pop()
+    if not hi:
+        return prefix, None
+    hi[-1] += 1
+    return prefix, bytes(hi)
+
+
+def table_range(table: str, lo: Optional[bytes] = None,
+                hi: Optional[bytes] = None) -> tuple[bytes, Optional[bytes]]:
+    """Composite-key interval [lo_c, hi_c) for ``table`` keys in [lo, hi),
+    where None means the table edge on that side."""
+    t_lo, t_hi = table_bounds(table)
+    lo_c = make_key(table, lo) if lo is not None else t_lo
+    hi_c = make_key(table, hi) if hi is not None else t_hi
+    return lo_c, hi_c
+
+
 @dataclass
 class RedoStats:
     submitted: int = 0
@@ -148,6 +172,14 @@ class DataComponent:
 
     def read(self, table: str, key: bytes) -> Optional[bytes]:
         return self.btree.get(make_key(table, key))
+
+    def scan_range(self, table: str, lo: Optional[bytes] = None,
+                   hi: Optional[bytes] = None,
+                   limit: Optional[int] = None) -> list[tuple[bytes, bytes]]:
+        """Ordered read of ``table`` keys in [lo, hi) (None = table edge)."""
+        lo_c, hi_c = table_range(table, lo, hi)
+        return [(split_key(k)[1], v)
+                for k, v in self.btree.range_items(lo_c, hi_c, limit)]
 
     # --------------------------------------------------------- control ops
     def eosl(self, elsn: LSN) -> None:

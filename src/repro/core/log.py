@@ -7,7 +7,20 @@ records the paper's "tail of the log" analysis concerns itself with.
 
 The master pointer (ARIES' master record) remembers the last complete
 checkpoint and the DC's last RSSP record so recovery knows where to start
-without scanning from the beginning of time.
+without scanning from the beginning of time.  Master LSNs may point *below*
+the truncation base (an old checkpoint whose records have moved to the
+archive): ``record``/``scan`` splice transparently, so the pointer stays
+valid across truncation.
+
+Truncation: once a stable prefix has been sealed into an attached
+``LogArchive``, ``truncate(upto)`` drops it from memory and remembers only
+the base LSN.  Every read path (``record``, ``scan``, ``scan_stable``)
+splices archive segments and the live tail into one dense LSN sequence, so
+recovery, analysis, DPT construction and log shipping are oblivious to
+where a record physically lives.  Only records *pruned from the archive*
+are gone for good — reading below ``retained_lsn`` raises
+``TruncatedLogError`` (never a silent skip), which the shipper surfaces as
+``SnapshotRequired``.
 """
 from __future__ import annotations
 
@@ -21,6 +34,13 @@ from .records import (LSN, NULL_LSN, BeginCkptRec, CommitRec, EndCkptRec,
 LOG_RECS_PER_PAGE = 64
 
 
+class TruncatedLogError(LookupError):
+    """A read touched LSNs that are neither in memory nor in the archive
+    (truncated without an archive, or pruned from it).  Raised instead of
+    silently skipping: a recovery or shipping pass that misses records
+    would corrupt state, so the hole must be loud."""
+
+
 @dataclass
 class Master:
     """Stable master pointer (updated atomically, survives crash)."""
@@ -32,7 +52,9 @@ class Master:
 class LogManager:
     def __init__(self):
         self._recs: List[LogRec] = []
-        self._stable_idx: int = 0          # records [0, _stable_idx) are stable
+        self._base: LSN = 0                # records [1, _base] truncated away
+        self._stable_lsn: LSN = 0          # records [1, _stable_lsn] are stable
+        self.archive = None                # LogArchive holding the sealed prefix
         self.master = Master()
         self.forced_flushes = 0
         self.max_txn: int = 0              # largest txn id ever logged
@@ -46,7 +68,7 @@ class LogManager:
 
     # ---------------------------------------------------------------- append
     def append(self, rec: LogRec) -> LSN:
-        rec.lsn = len(self._recs) + 1      # dense LSNs starting at 1
+        rec.lsn = self._base + len(self._recs) + 1   # dense LSNs starting at 1
         self._recs.append(rec)
         txn = getattr(rec, "txn", None)
         if txn is not None and txn > self.max_txn:
@@ -57,34 +79,100 @@ class LogManager:
 
     def flush(self, upto: Optional[LSN] = None) -> LSN:
         """Force the log to stable storage up to ``upto`` (default: all)."""
-        tgt = len(self._recs) if upto is None else min(upto, len(self._recs))
-        if tgt > self._stable_idx:
+        tgt = self.end_lsn if upto is None else min(upto, self.end_lsn)
+        if tgt > self._stable_lsn:
             if self.last_commit_lsn <= tgt:
                 self.last_stable_commit_lsn = self.last_commit_lsn
             else:   # a commit past tgt exists: scan just the flushed range
-                for i in range(tgt - 1, self._stable_idx - 1, -1):
-                    if isinstance(self._recs[i], CommitRec):
-                        self.last_stable_commit_lsn = self._recs[i].lsn
+                for lsn in range(tgt, self._stable_lsn, -1):
+                    if isinstance(self._recs[lsn - self._base - 1], CommitRec):
+                        self.last_stable_commit_lsn = lsn
                         break
-            self._stable_idx = tgt
+            self._stable_lsn = tgt
             self.forced_flushes += 1
         return self.stable_lsn
 
     @property
     def stable_lsn(self) -> LSN:
-        return self._stable_idx            # LSN of last stable record
+        return self._stable_lsn            # LSN of last stable record
 
     @property
     def end_lsn(self) -> LSN:
+        return self._base + len(self._recs)
+
+    # -------------------------------------------------------------- archive
+    def attach_archive(self, archive) -> None:
+        """Wire a ``LogArchive`` in as the home of the sealed prefix; the
+        read paths below splice it with the live tail from then on."""
+        self.archive = archive
+
+    @property
+    def retained_lsn(self) -> LSN:
+        """First LSN still obtainable (from the archive or from memory).
+        Everything below it has been truncated-without-archive or pruned."""
+        mem_from = self._base + 1
+        a = self.archive
+        if a is not None and a.retained_from < mem_from \
+                and a.archived_upto >= self._base:   # contiguous splice
+            return a.retained_from
+        return mem_from
+
+    @property
+    def in_memory_records(self) -> int:
+        """Live tail size — what truncation bounds (``end_lsn`` keeps
+        counting every record ever appended)."""
         return len(self._recs)
 
+    def truncate(self, upto: LSN) -> int:
+        """Drop the in-memory prefix [1, upto]; returns records dropped.
+
+        Never loses information: the prefix must already be sealed in the
+        attached archive (and be stable — the unforced tail cannot be
+        archived, it can still be disowned by a crash).  Callers pick
+        ``upto`` below the ``min(snapshot horizon, slowest subscriber)``
+        watermark (see ``archive.Archiver``) so the *hot* paths — shipping
+        to live subscribers, restore to recent targets — stay in memory and
+        only cold readers ever touch archive segments."""
+        upto = min(upto, self._stable_lsn)
+        if upto <= self._base:
+            return 0
+        if self.archive is None or self.archive.archived_upto < upto:
+            have = "no archive attached" if self.archive is None else \
+                f"archive sealed only through LSN {self.archive.archived_upto}"
+            raise ValueError(
+                f"cannot truncate through LSN {upto}: {have} — seal the "
+                "prefix into a LogArchive first (truncation moves records, "
+                "it never deletes them)")
+        dropped = upto - self._base
+        self._recs = self._recs[dropped:]
+        self._base = upto
+        return dropped
+
+    # ----------------------------------------------------------------- read
     def record(self, lsn: LSN) -> LogRec:
-        return self._recs[lsn - 1]
+        if lsn > self._base:
+            return self._recs[lsn - self._base - 1]
+        if self.archive is not None:
+            return self.archive.record(lsn)     # raises TruncatedLogError
+        raise TruncatedLogError(
+            f"LSN {lsn} was truncated (base={self._base}) and no archive "
+            "is attached")
 
     def scan(self, from_lsn: LSN, to_lsn: Optional[LSN] = None) -> Iterator[LogRec]:
-        """Yield stable records with lsn >= from_lsn (inclusive)."""
-        hi = self._stable_idx if to_lsn is None else min(to_lsn, self._stable_idx)
-        for i in range(max(from_lsn, 1) - 1, hi):
+        """Yield stable records with lsn >= from_lsn (inclusive), splicing
+        archive segments below the truncation base with the live tail."""
+        hi = self._stable_lsn if to_lsn is None else min(to_lsn, self._stable_lsn)
+        lo = max(from_lsn, 1)
+        if lo > hi:
+            return
+        if lo <= self._base:
+            if lo < self.retained_lsn:
+                raise TruncatedLogError(
+                    f"scan from LSN {lo} reaches below retained_lsn="
+                    f"{self.retained_lsn}: those records were pruned")
+            yield from self.archive.scan(lo, min(hi, self._base))
+            lo = self._base + 1
+        for i in range(lo - self._base - 1, hi - self._base):
             yield self._recs[i]
 
     def scan_stable(self, from_lsn: LSN,
@@ -99,12 +187,17 @@ class LogManager:
         reconstructed from the consumer's durable resume point.  Only the
         stable prefix is visible; the unforced tail is never shipped (it can
         still be lost, and a replica must never apply work its primary could
-        disown)."""
+        disown).  Truncation is invisible here too: a cursor below the base
+        reads spliced archive segments.  Below ``retained_lsn`` there is
+        nothing to splice and ``TruncatedLogError`` propagates (the shipper
+        turns it into ``SnapshotRequired``)."""
         lo = max(from_lsn, 1)
-        hi = self._stable_idx
+        hi = self._stable_lsn
         if max_records is not None:
             hi = min(hi, lo - 1 + max_records)
-        recs = self._recs[lo - 1: hi]
+        if lo > hi:
+            return [], lo
+        recs = list(self.scan(lo, hi))
         return recs, lo + len(recs)
 
     # ------------------------------------------------------------ checkpoint
@@ -120,10 +213,15 @@ class LogManager:
 
     # ---------------------------------------------------------------- crash
     def crash(self) -> "LogManager":
-        """Return the stable image of this log (tail beyond stable point lost)."""
+        """Return the stable image of this log (tail beyond stable point
+        lost).  The archive is stable storage: the survivor keeps the same
+        sealed segments, so a post-truncation crash image still reads the
+        full history through the splice."""
         survivor = LogManager()
-        survivor._recs = self._recs[: self._stable_idx]
-        survivor._stable_idx = self._stable_idx
+        survivor._recs = self._recs[: self._stable_lsn - self._base]
+        survivor._base = self._base
+        survivor._stable_lsn = self._stable_lsn
+        survivor.archive = self.archive
         survivor.master = Master(self.master.end_ckpt_lsn,
                                  self.master.bckpt_lsn,
                                  self.master.rssp_rec_lsn)
@@ -131,19 +229,18 @@ class LogManager:
         # safe: recovery only needs fresh txn ids to be strictly larger than
         # any id that can appear in the surviving log.
         survivor.max_txn = self.max_txn
-        if self.last_commit_lsn <= self._stable_idx:
-            survivor.last_commit_lsn = self.last_commit_lsn
-        else:   # a commit appended but not yet forced was lost in the crash
-            survivor.last_commit_lsn = next(
-                (r.lsn for r in reversed(survivor._recs)
-                 if isinstance(r, CommitRec)), NULL_LSN)
-        # every surviving record is stable, so the two notions coincide
-        survivor.last_stable_commit_lsn = survivor.last_commit_lsn
+        # last_stable_commit_lsn is maintained at every flush and is by
+        # definition the newest commit that survives, so both notions
+        # coincide on the survivor (a commit in the unforced tail is lost).
+        survivor.last_commit_lsn = self.last_stable_commit_lsn
+        survivor.last_stable_commit_lsn = self.last_stable_commit_lsn
         return survivor
 
     def n_log_pages(self, from_lsn: LSN) -> int:
-        n = max(0, self._stable_idx - (from_lsn - 1))
+        n = max(0, self._stable_lsn - (from_lsn - 1))
         return (n + LOG_RECS_PER_PAGE - 1) // LOG_RECS_PER_PAGE
 
     def __len__(self) -> int:
-        return len(self._recs)
+        """Total records ever appended (dense LSN space, unaffected by
+        truncation) — callers diff this across operations to count writes."""
+        return self.end_lsn

@@ -34,6 +34,7 @@ class RecKind(enum.IntEnum):
     DELTA = 10          # DC Delta-log record (Section 4.1)
     SMO = 11            # DC structure-modification (B-tree split / root change)
     RSSP = 12           # DC acknowledgment of redo-scan-start-point (checkpoint)
+    SNAPSHOT = 13       # logical snapshot begin (fuzz-window anchor)
 
 
 @dataclass(slots=True)
@@ -201,6 +202,28 @@ class RSSPRec(LogRec):
     @property
     def kind(self) -> RecKind:
         return RecKind.RSSP
+
+
+@dataclass(slots=True)
+class SnapshotRec(LogRec):
+    """Anchor of a fuzzy logical snapshot's window.
+
+    Its own LSN is the snapshot's ``begin_lsn``: every transaction that
+    committed at or below it is fully visible to the snapshot scan.
+    ``oldest_active_lsn`` is the first-write LSN of the oldest transaction
+    still in flight at begin (NULL when none) — the redo scan of a restore
+    from this snapshot must start there, because such a transaction's
+    records precede the window but its commit may land inside or after it.
+
+    Purely logical (no PIDs, no geometry): a snapshot taken on one layout
+    restores onto any other, same as the update stream itself.
+    """
+    snapshot_id: int = 0
+    oldest_active_lsn: LSN = NULL_LSN
+
+    @property
+    def kind(self) -> RecKind:
+        return RecKind.SNAPSHOT
 
 
 UPDATE_KINDS = (RecKind.UPDATE, RecKind.INSERT, RecKind.DELETE)

@@ -139,6 +139,10 @@ def recover(image: CrashImage, strategy: Strategy, *,
     stats = RecoveryStats(strategy=strategy.value)
 
     m = log.master
+    # May start below the in-memory truncation base: every log read here
+    # (analysis, DPT build, redo, the EndCkpt/RSSP record fetches) goes
+    # through the archive splice, so a truncated-and-archived prefix
+    # recovers identically to an all-in-memory one.
     scan_from = m.bckpt_lsn if m.bckpt_lsn != NULL_LSN else 1
     stats.scan_from = scan_from
 
@@ -231,22 +235,33 @@ def recover(image: CrashImage, strategy: Strategy, *,
 
 # --------------------------------------------------------------------------
 def committed_state_oracle(image: CrashImage,
-                           base: Optional[dict[bytes, bytes]] = None
+                           base: Optional[dict[bytes, bytes]] = None,
+                           upto_lsn: Optional[LSN] = None
                            ) -> dict[bytes, bytes]:
     """Ground truth: the database state recovery must reproduce — all
     committed transactions' effects (in LSN order) applied over the
     bulk-loaded ``base`` rows (composite keys), nothing else.
 
+    ``upto_lsn`` is the point-in-time form: only transactions whose commit
+    record lands at or below it count (their updates apply wholly, wherever
+    their LSNs fall) — the reference for ``restore(target_lsn)``.
+
     Aborted transactions and losers contribute nothing: their updates are
     compensated (aborts) or undone (losers) by recovery, and with the
-    serializable workloads our harness generates, net effect is absence."""
+    serializable workloads our harness generates, net effect is absence.
+
+    Reads the log through the truncation splice (``LogManager.scan`` from
+    LSN 1 spans archive segments and the live tail transparently), so the
+    oracle stays valid on truncated logs as long as nothing was pruned."""
     log = image.log
     committed: set[int] = set()
-    for rec in log.scan(1):
+    for rec in log.scan(1, upto_lsn):
         if isinstance(rec, CommitRec):
             committed.add(rec.txn)
     state: dict[bytes, bytes] = dict(base or {})
-    for rec in log.scan(1):
+    # a committed txn's updates all precede its commit record, so this
+    # pass needs nothing past upto_lsn either
+    for rec in log.scan(1, upto_lsn):
         if isinstance(rec, UpdateRec) and rec.txn in committed:
             k = make_key(rec.table, rec.key)
             if rec.op == RecKind.DELETE:

@@ -16,10 +16,11 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .dc import DataComponent
+from .dc import DataComponent, make_key, table_range
 from .log import LogManager
 from .records import (LSN, NULL_LSN, AbortRec, BeginCkptRec, CLRRec,
-                      CommitRec, EndCkptRec, RecKind, TxnId, UpdateRec)
+                      CommitRec, EndCkptRec, RecKind, SnapshotRec, TxnId,
+                      UpdateRec)
 from .storage import PageStore
 
 
@@ -80,6 +81,68 @@ class TransactionalComponent:
         if best is not None:
             return best[1]
         return self.dc.read(table, key)
+
+    def _committed_overlay(self) -> dict:
+        """Composite key -> (first-write LSN, committed before-image) for
+        every key touched by an in-flight transaction.  The DC executes
+        updates at log time, so the tree holds uncommitted values; the
+        earliest first-writer's before-image is the committed value (same
+        reasoning as ``committed_read``, materialized for a batch)."""
+        overlay: dict[bytes, tuple[LSN, Optional[bytes]]] = {}
+        for txn in self.active:
+            for (table, key), (lsn, before) in \
+                    self._first_writes.get(txn, {}).items():
+                ck = make_key(table, key)
+                if ck not in overlay or lsn < overlay[ck][0]:
+                    overlay[ck] = (lsn, before)
+        return overlay
+
+    def committed_chunk(self, after: Optional[bytes], n: int
+                        ) -> tuple[list[tuple[bytes, bytes]],
+                                   Optional[bytes], bool]:
+        """One chunk of a committed-only full scan in composite-key order:
+        up to ``n`` raw tree records with key > ``after``, patched to
+        committed values.  Returns ``(items, cursor, more)`` — feed
+        ``cursor`` back as the next ``after``.  This is the fuzzy-snapshot
+        scan step: it never blocks writers (the patch is O(active txns'
+        write sets), not a lock), so state observed by different chunks may
+        come from different commit points — the snapshot's (begin, end)
+        window plus committed redo replay absorbs exactly that.
+
+        Patching handles all three in-flight shapes: an uncommitted UPDATE
+        reverts to the before-image, an uncommitted INSERT (before None) is
+        dropped, and an uncommitted DELETE — whose key is *absent* from the
+        raw chunk — is re-added at its before-image."""
+        lo = after + b"\x00" if after is not None else None   # key > after
+        raw = self.dc.btree.range_items(lo, None, n)
+        more = len(raw) == n
+        # the chunk covers (after, upper]; overlay keys past upper belong
+        # to a later chunk, keys inside it merge in sorted position
+        upper = raw[-1][0] if more else None
+        overlay = self._committed_overlay()
+        patched: dict[bytes, Optional[bytes]] = dict(raw)
+        for ck, (_, before) in overlay.items():
+            if (after is None or ck > after) and (upper is None or ck <= upper):
+                patched[ck] = before                 # None = drop (insert)
+        items = [(k, v) for k, v in sorted(patched.items()) if v is not None]
+        return items, upper, more
+
+    def committed_scan_range(self, table: str, lo: Optional[bytes] = None,
+                             hi: Optional[bytes] = None
+                             ) -> list[tuple[bytes, bytes]]:
+        """Ranged ``committed_read``: ``table`` keys in [lo, hi) at their
+        last-committed values.  The primary-fallback path of routed ranged
+        scans must honor the same committed-only visibility the replica
+        path enforces."""
+        lo_c, hi_c = table_range(table, lo, hi)
+        patched: dict[bytes, Optional[bytes]] = \
+            dict(self.dc.btree.range_items(lo_c, hi_c))
+        for ck, (_, before) in self._committed_overlay().items():
+            if ck >= lo_c and (hi_c is None or ck < hi_c):
+                patched[ck] = before
+        from .dc import split_key
+        return [(split_key(k)[1], v)
+                for k, v in sorted(patched.items()) if v is not None]
 
     def apply_shipped(self, txn: TxnId, shipped: UpdateRec) -> None:
         """Re-log and re-execute a logical record shipped from another TC.
@@ -148,6 +211,21 @@ class TransactionalComponent:
         self.log.flush()
         self.log.set_master(end_ckpt=e.lsn, bckpt=b.lsn)
         return b.lsn
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot_begin(self, snapshot_id: int = 0) -> SnapshotRec:
+        """Anchor a fuzzy logical snapshot: log (and force) a SnapshotRec
+        carrying the oldest in-flight first-write LSN.  The record's own LSN
+        is the snapshot's ``begin_lsn`` — every commit at or below it is
+        fully visible to the scan that follows; redo at restore time starts
+        at ``oldest_active_lsn`` (when set) so transactions straddling the
+        begin point re-deliver completely."""
+        oldest = min((lsn for fw in self._first_writes.values()
+                      for lsn, _ in fw.values()), default=NULL_LSN)
+        rec = SnapshotRec(snapshot_id=snapshot_id, oldest_active_lsn=oldest)
+        self.log.append(rec)
+        self.log.flush()
+        return rec
 
 
 @dataclass

@@ -16,17 +16,19 @@ Public surface:
   ReplicaSet / ReadResult     staleness-bounded read routing + failover
   promote                     standby -> writable primary
 """
+from ..archive import SnapshotRequired
 from .failover import promote
-from .parallel import (ShardedApplier, ShardState, hash_partitioner,
-                       range_partitioner)
+from .parallel import (RangePartitioner, ShardedApplier, ShardState,
+                       hash_partitioner, range_partitioner)
 from .replica import (REPL_KEY, REPL_TABLE, ApplyEngine, Replica,
                       pack_watermark, unpack_watermark)
-from .router import ReadResult, ReplicaSet
+from .router import RangeReadResult, ReadResult, ReplicaSet
 from .shipper import SHIPPED_KINDS, LogShipper, ShipBatch
 
 __all__ = [
     "LogShipper", "ShipBatch", "SHIPPED_KINDS", "ApplyEngine", "Replica",
     "ShardedApplier", "ShardState", "hash_partitioner", "range_partitioner",
-    "REPL_TABLE", "REPL_KEY", "pack_watermark", "unpack_watermark",
-    "ReplicaSet", "ReadResult", "promote",
+    "RangePartitioner", "REPL_TABLE", "REPL_KEY", "pack_watermark",
+    "unpack_watermark", "ReplicaSet", "ReadResult", "RangeReadResult",
+    "promote", "SnapshotRequired",
 ]

@@ -44,7 +44,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Union
 
-from ..core.dc import make_key
+from ..core.dc import make_key, table_range
 from ..core.records import LSN, NULL_LSN, UpdateRec
 from .replica import REPL_KEY, REPL_TABLE, Replica, pack_watermark
 
@@ -60,18 +60,39 @@ def hash_partitioner(n_shards: int) -> Partitioner:
     return part
 
 
-def range_partitioner(boundaries: list[tuple[str, bytes]]) -> Partitioner:
+class RangePartitioner:
     """Range partitioning over composite (table, key) order: each boundary
     is the first key of the next shard, so shard i serves
     ``boundaries[i-1] <= key < boundaries[i]`` and there are
-    ``len(boundaries) + 1`` shards.  Boundaries must be sorted."""
-    splits = [make_key(t, k) for t, k in boundaries]
-    if splits != sorted(splits):
-        raise ValueError("range_partitioner boundaries must be sorted")
+    ``len(boundaries) + 1`` shards.  Boundaries must be sorted.
 
-    def part(table: str, key: bytes) -> int:
-        return bisect.bisect_right(splits, make_key(table, key))
-    return part
+    Unlike a hash map, contiguous key ranges land on contiguous shards, so
+    this partitioner can also *enumerate* the shards a scan range spans —
+    which is what lets a ranged read over a sharded standby take the min
+    volatile watermark across only the spanned shards instead of all of
+    them (``ShardedApplier.watermark_for_range``)."""
+
+    def __init__(self, boundaries: list[tuple[str, bytes]]):
+        self.splits = [make_key(t, k) for t, k in boundaries]
+        if self.splits != sorted(self.splits):
+            raise ValueError("range_partitioner boundaries must be sorted")
+        self.n_shards = len(self.splits) + 1
+
+    def __call__(self, table: str, key: bytes) -> int:
+        return bisect.bisect_right(self.splits, make_key(table, key))
+
+    def shards_for_range(self, lo_comp: bytes,
+                         hi_comp: Optional[bytes]) -> range:
+        """Shard indices the composite range [lo_comp, hi_comp) can touch
+        (hi None = unbounded above)."""
+        i0 = bisect.bisect_right(self.splits, lo_comp)
+        i1 = len(self.splits) if hi_comp is None \
+            else bisect.bisect_left(self.splits, hi_comp)
+        return range(i0, i1 + 1)
+
+
+def range_partitioner(boundaries: list[tuple[str, bytes]]) -> Partitioner:
+    return RangePartitioner(boundaries)
 
 
 @dataclass
@@ -257,6 +278,22 @@ class ShardedApplier(Replica):
             # loudly here as it does on the apply path
             return self.catchup_lsn()
         return self.shard_watermark(idx)
+
+    def watermark_for_range(self, table: str, lo: Optional[bytes] = None,
+                            hi: Optional[bytes] = None) -> LSN:
+        """Ranged staleness token: the min volatile watermark across the
+        shards [lo, hi) spans — the ROADMAP rule that a scan over a sharded
+        standby is only as fresh as its laggiest spanned shard.  Range
+        partitioners enumerate the spanned shards; opaque maps (hash) smear
+        any range over every shard, so they fall back to the global min."""
+        part = self.partition
+        if hasattr(part, "shards_for_range"):
+            lo_c, hi_c = table_range(table, lo, hi)
+            idxs = [i for i in part.shards_for_range(lo_c, hi_c)
+                    if 0 <= i < self.n_shards]
+            if idxs:
+                return min(self.shard_watermark(i) for i in idxs)
+        return self.catchup_lsn()
 
     # ------------------------------------------------------ buffered state
     @property

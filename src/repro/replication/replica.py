@@ -195,6 +195,14 @@ class ApplyEngine:
         the global watermark; the sharded path answers per key range."""
         return self.applied_lsn
 
+    def watermark_for_range(self, table: str, lo: Optional[bytes] = None,
+                            hi: Optional[bytes] = None) -> LSN:
+        """Staleness token a ranged scan over [lo, hi) can be served under:
+        a scan is only as fresh as the laggiest key range it spans, so the
+        sharded path takes the min volatile watermark across the spanned
+        shards; serial apply is totally ordered and answers globally."""
+        return self.applied_lsn
+
     def lag(self, primary_log) -> int:
         """Staleness in primary-LSN units: distance from the primary's last
         *stable commit* (non-commit tail records — in-flight work, abort
@@ -283,6 +291,13 @@ class Replica(ApplyEngine):
     def read(self, table: str, key: bytes) -> Optional[bytes]:
         return self.db.dc.read(table, key)
 
+    def scan_range(self, table: str, lo: Optional[bytes] = None,
+                   hi: Optional[bytes] = None) -> list[tuple[bytes, bytes]]:
+        """Ranged read of [lo, hi) (None = table edge).  The replica holds
+        committed state only (in-flight work buffers outside the tree), so
+        the raw tree scan already has the right visibility."""
+        return self.db.dc.scan_range(table, lo, hi)
+
     def user_state(self) -> dict[bytes, bytes]:
         """Replica state minus the ``__repl`` system table — directly
         comparable against ``committed_state_oracle``."""
@@ -327,3 +342,39 @@ class Replica(ApplyEngine):
         straddling transactions."""
         self._reset_volatile()
         shipper.subscribe(self.replica_id, self.resume_lsn)
+
+    # --------------------------------------------------------------- reseed
+    def reseed_from(self, snapshot) -> None:
+        """Replace this standby's entire local database with a fuzzy
+        logical ``Snapshot`` (``archive.SnapshotStore``), keeping the
+        replica's identity and physical configuration — the snapshot is
+        geometry-free, so a 4 KiB-page standby reseeds from an 8 KiB-page
+        primary unchanged.
+
+        The durable ``(applied, resume)`` watermark is set to the snapshot
+        window: ``applied = begin_lsn`` (every commit at or below begin is
+        fully present; commits inside the fuzz window re-deliver and
+        re-apply idempotently via absolute after-images) and ``resume =
+        redo_lsn`` (covers transactions straddling the snapshot begin).
+        Subscribing at ``resume_lsn`` afterwards is plain catch-up through
+        the ordinary shipping path.
+
+        This is the re-seed that failover survivors and below-horizon
+        laggards take instead of being detached: new LSN space, new primary,
+        same standby object."""
+        self.db = Database(cache_pages=self.cache_pages,
+                           delta_mode=self.delta_mode,
+                           tracker_interval=self.tracker_interval,
+                           bg_flush_per_txn=self.bg_flush_per_txn,
+                           page_size=self.page_size)
+        self.db.dc.bulk_build(list(snapshot.rows))
+        self.db.tc.checkpoint()
+        txn = self.db.tc.begin()
+        self.db.tc.insert(txn, REPL_TABLE, REPL_KEY,
+                          pack_watermark(snapshot.begin_lsn,
+                                         snapshot.redo_lsn))
+        self.db.tc.commit(txn)
+        self.applied_lsn = snapshot.begin_lsn
+        self.resume_lsn = snapshot.redo_lsn
+        self.promoted = False
+        self._reset_volatile()

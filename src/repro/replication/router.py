@@ -12,19 +12,31 @@ Consistency contract: every read carries an optional staleness bound —
 
 A read no replica can serve within its bound falls back to the primary,
 which is always current.  Eligible replicas are balanced round-robin.
+Ranged scans follow the same contract with one extra rule: over a sharded
+standby the eligibility watermark is the *min* across the shards the range
+spans (``watermark_for_range``), and that min is returned as the per-scan
+staleness token.
+
+Re-seeding: with a ``SnapshotStore`` attached, a subscriber that falls
+below the log's retention horizon (``SnapshotRequired`` from the shipper)
+is automatically re-seeded from the newest snapshot — taking a fresh one
+if none covers the retained log — and re-subscribed at its ``redo_lsn``.
 
 Failover: ``promote`` drains and promotes the most caught-up replica (see
 ``failover.promote``) and re-points the set's shipper at the new primary's
 log.  The remaining replicas hold watermarks in the *old* primary's LSN
-space, which does not map onto the new log, so they are detached; re-seeding
-survivors against a new primary (and parallel per-key-range apply) is the
-ROADMAP's open item.
+space, which does not map onto the new log; with a ``SnapshotStore``
+attached they are re-seeded from a fresh snapshot of the new primary and
+re-subscribed — no survivor is left permanently detached.  Without one,
+the pre-archive behavior remains: survivors detach and wait for a manual
+re-seed.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional
 
+from ..archive import SnapshotRequired, SnapshotStore
 from ..core.records import LSN, NULL_LSN
 from ..core.tc import CrashImage, Database
 from .failover import promote
@@ -39,11 +51,25 @@ class ReadResult:
     applied_lsn: LSN            # position the serving node had reached
 
 
+@dataclass
+class RangeReadResult:
+    """A routed ranged scan.  ``watermark`` is the per-scan staleness
+    token: every commit <= watermark touching the range is reflected (a
+    sharded server may additionally show newer work on its faster shards,
+    same as its point reads between epoch barriers)."""
+    rows: list
+    source: str
+    watermark: LSN
+
+
 class ReplicaSet:
     def __init__(self, primary: Database, replicas: list[Replica] = (),
-                 *, batch_records: int = 256, auto_sync: bool = False):
+                 *, batch_records: int = 256, auto_sync: bool = False,
+                 snapshots: Optional[SnapshotStore] = None):
         self.primary = primary
         self.shipper = LogShipper(primary.log, batch_records=batch_records)
+        self.snapshots = snapshots
+        self.reseeds = 0
         self.replicas: dict[str, Replica] = {}
         for r in replicas:
             self.add_replica(r)
@@ -57,7 +83,23 @@ class ReplicaSet:
 
     def add_replica(self, replica: Replica) -> None:
         self.replicas[replica.replica_id] = replica
-        replica.resubscribe(self.shipper)
+        try:
+            replica.resubscribe(self.shipper)
+        except SnapshotRequired:
+            if self.snapshots is None:
+                raise
+            self._reseed(replica)
+
+    def _reseed(self, replica: Replica) -> None:
+        """Re-seed one standby from the newest snapshot and re-subscribe it
+        at the snapshot's redo point.  A snapshot whose redo range was
+        already pruned can't be caught up from — take a fresh one."""
+        snap = self.snapshots.latest()
+        if snap is None or snap.redo_lsn < self.primary.log.retained_lsn:
+            snap = self.snapshots.take(self.primary)
+        replica.reseed_from(snap)
+        self.shipper.subscribe(replica.replica_id, replica.resume_lsn)
+        self.reseeds += 1
 
     # -------------------------------------------------------------- traffic
     def write(self, ops) -> LSN:
@@ -70,18 +112,34 @@ class ReplicaSet:
         ``max_records`` is None).  Returns ops applied across the set.
         Detached replicas (no shipping cursor — e.g. unsubscribed pending a
         re-seed) are skipped cleanly; they can still serve bounded reads
-        from whatever they last applied."""
+        from whatever they last applied.  A subscriber whose cursor fell
+        below the retention horizon is re-seeded in place when a
+        ``SnapshotStore`` is attached."""
         applied = 0
         for r in self.replicas.values():
             if not self.shipper.is_subscribed(r.replica_id):
                 continue
-            if max_records is None:
-                before = r.applied_ops
-                self.shipper.drain(r.replica_id, r.apply_batch)
-                applied += r.applied_ops - before
-            else:
-                applied += r.apply_batch(
-                    self.shipper.poll(r.replica_id, max_records))
+            try:
+                if max_records is None:
+                    before = r.applied_ops
+                    self.shipper.drain(r.replica_id, r.apply_batch)
+                    applied += r.applied_ops - before
+                else:
+                    applied += r.apply_batch(
+                        self.shipper.poll(r.replica_id, max_records))
+            except SnapshotRequired:
+                if self.snapshots is None:
+                    raise
+                self._reseed(r)
+                # retry under the caller's pacing contract: a full drain
+                # only when one was asked for, one bounded poll otherwise
+                if max_records is None:
+                    before = r.applied_ops
+                    self.shipper.drain(r.replica_id, r.apply_batch)
+                    applied += r.applied_ops - before
+                else:
+                    applied += r.apply_batch(
+                        self.shipper.poll(r.replica_id, max_records))
         return applied
 
     def read(self, table: str, key: bytes, *, min_lsn: LSN = NULL_LSN,
@@ -110,6 +168,33 @@ class ReplicaSet:
         return ReadResult(self.primary.tc.committed_read(table, key),
                           "primary", self.primary.log.last_stable_commit_lsn)
 
+    def read_range(self, table: str, lo: Optional[bytes] = None,
+                   hi: Optional[bytes] = None, *, min_lsn: LSN = NULL_LSN,
+                   max_lag: Optional[int] = None) -> RangeReadResult:
+        """Routed ranged scan of ``table`` keys in [lo, hi) (None = table
+        edge).  Eligibility uses ``watermark_for_range`` — over a sharded
+        standby that is the min volatile watermark across the shards the
+        range spans, so a token t is only served once *every* spanned shard
+        has applied commit t, no matter how far ahead the others are.  The
+        serving watermark comes back as the scan's staleness token."""
+        reps = list(self.replicas.values())
+        for i in range(len(reps)):
+            r = reps[(self._rr + i) % len(reps)]
+            wm = r.watermark_for_range(table, lo, hi)
+            if wm < min_lsn:
+                continue
+            if max_lag is not None and r.lag(self.primary.log) > max_lag:
+                continue
+            self._rr = (self._rr + i + 1) % max(len(reps), 1)
+            self.reads_replica += 1
+            return RangeReadResult(r.scan_range(table, lo, hi),
+                                   r.replica_id, wm)
+        self.reads_primary += 1
+        # same committed-only visibility as the point-read fallback
+        return RangeReadResult(
+            self.primary.tc.committed_scan_range(table, lo, hi),
+            "primary", self.primary.log.last_stable_commit_lsn)
+
     # -------------------------------------------------------------- failover
     def max_lag(self) -> int:
         return max((r.lag(self.primary.log) for r in self.replicas.values()),
@@ -123,7 +208,8 @@ class ReplicaSet:
         the live primary's."""
         if not self.replicas:
             raise RuntimeError("no replicas to promote (a prior failover "
-                               "detaches survivors; re-seed standbys first)")
+                               "without a SnapshotStore detaches survivors; "
+                               "re-seed standbys first)")
         if replica_id is None:
             # catchup_lsn, not applied_lsn: a sharded standby mid-epoch has
             # applied past its durable barrier, and that work counts
@@ -140,10 +226,26 @@ class ReplicaSet:
         # below _ship_pos is skipped, so rewinding is always safe.
         shipper.subscribe(chosen.replica_id, chosen._ship_pos)
         new_primary = promote(chosen, shipper)
+        survivors = self.replicas
         self.primary = new_primary
         self.shipper = LogShipper(new_primary.log,
                                   batch_records=self.shipper.batch_records)
-        self.replicas = {}          # old-LSN-space survivors: see module doc
+        self.replicas = {}
+        if self.snapshots is not None:
+            # snapshots are positions in one LSN space; the old store dies
+            # with the old primary and a fresh one serves the new log
+            self.snapshots = SnapshotStore(
+                exclude_tables=tuple(self.snapshots.exclude_tables))
+            if survivors:
+                # one fresh snapshot of the new primary re-seeds every
+                # survivor: same rows, each keeps its own geometry
+                snap = self.snapshots.take(new_primary)
+                for r in survivors.values():
+                    r.reseed_from(snap)
+                    self.replicas[r.replica_id] = r
+                    self.shipper.subscribe(r.replica_id, r.resume_lsn)
+        # without a SnapshotStore, survivors hold old-LSN-space watermarks
+        # that do not map onto the new log and stay detached (module doc)
         if self.auto_sync:          # the contract survives the failover
             new_primary.tc.on_commit.append(lambda _txn, _lsn: self.sync())
         return new_primary

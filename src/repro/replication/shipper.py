@@ -21,7 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional, Union
 
-from ..core.log import LogManager
+from ..archive.errors import SnapshotRequired
+from ..core.log import LogManager, TruncatedLogError
 from ..core.records import LSN, AbortRec, CommitRec, LogRec, UpdateRec
 
 # What crosses the wire: the TC-logical records a committed-only consumer
@@ -70,8 +71,18 @@ class LogShipper:
     # --------------------------------------------------------- subscriptions
     def subscribe(self, replica_id: str, from_lsn: LSN = 1) -> None:
         """(Re-)register a subscriber; ``from_lsn`` is typically the
-        replica's durable resume point."""
-        self.cursors[replica_id] = max(from_lsn, 1)
+        replica's durable resume point.
+
+        A resume point below the log's retention horizon (records pruned
+        from the archive, or truncated with no archive) can never be
+        served — raising ``SnapshotRequired`` here, at subscribe time,
+        beats handing out silent empty batches that would strand the
+        subscriber forever."""
+        from_lsn = max(from_lsn, 1)
+        retained = getattr(self.log, "retained_lsn", 1)
+        if from_lsn < retained:
+            raise SnapshotRequired(replica_id, from_lsn, retained)
+        self.cursors[replica_id] = from_lsn
 
     def unsubscribe(self, replica_id: str) -> None:
         self.cursors.pop(replica_id, None)
@@ -93,6 +104,12 @@ class LogShipper:
         """Stable records not yet shipped to this subscriber."""
         return max(0, self.log.stable_lsn - (self._cursor(replica_id) - 1))
 
+    def min_cursor(self) -> Optional[LSN]:
+        """Slowest subscriber's position — the shipping half of the
+        ``min(snapshot horizon, slowest subscriber)`` truncation watermark
+        (``archive.Archiver``).  None when nobody subscribes."""
+        return min(self.cursors.values(), default=None)
+
     # ---------------------------------------------------------------- polling
     def poll(self, replica_id: str,
              max_records: Optional[int] = None) -> ShipBatch:
@@ -108,7 +125,15 @@ class LogShipper:
         nxt = cur
         done = False
         while not done:
-            chunk, _ = self.log.scan_stable(nxt, 64)
+            try:
+                chunk, _ = self.log.scan_stable(nxt, 64)
+            except TruncatedLogError:
+                # the cursor fell below the retention horizon (segments
+                # pruned underneath a stalled subscriber): shipping cannot
+                # resume from here, only a re-seed can
+                raise SnapshotRequired(
+                    replica_id, nxt,
+                    getattr(self.log, "retained_lsn", 1)) from None
             if not chunk:
                 break
             for rec in chunk:
