@@ -184,9 +184,24 @@ def bench_reseed_vs_full_replay(fast: bool) -> list[dict]:
     }]
 
 
+def bench_prune_guard(fast: bool) -> list[dict]:
+    """Regression guard for the prune index scheme: dropping segments one
+    at a time from a long archive must cost the same per segment as from
+    a short one (the old ``pop(0)``-per-segment implementation grew
+    per-segment cost with archive length — quadratic in total).  The
+    guard itself lives in ``media_bench`` (the layer that owns the
+    scheme); delegating keeps one implementation and one bound, relabeled
+    into this table so an archive-side regression is still reported
+    here."""
+    from .media_bench import bench_prune_scaling
+    return [{**row, "name": row["name"].replace("media_prune",
+                                                "archive_prune")}
+            for row in bench_prune_scaling(fast)]
+
+
 def run(fast: bool = False) -> dict:
     rows = (bench_restore_vs_cadence(fast) + bench_memory_bound(fast)
-            + bench_reseed_vs_full_replay(fast))
+            + bench_reseed_vs_full_replay(fast) + bench_prune_guard(fast))
     return {"name": "archive", "rows": rows}
 
 

@@ -1,0 +1,301 @@
+"""Media-layer benchmark: what the byte boundary costs and what it buys.
+
+  1. seal/encode throughput — records/s through the codec into a
+     MemoryBackend vs a DirectoryBackend (fsync'd files), plus the
+     encoded bytes per record;
+  2. cold restore vs in-process restore — the acceptance bound: a fresh
+     ``cold_restore`` from a DirectoryBackend (index rebuild + snapshot
+     decode + segment decode + redo) must land within 3x of the same
+     restore using live in-process objects at the default cadence;
+  3. decode-LRU effect — hot point reads against an archived segment
+     with the decoded-segment cache on vs off;
+  4. prune scaling — per-segment prune cost on a ~N-segment vs ~4N-
+     segment archive; the index/offset scheme keeps the ratio flat where
+     the old pop(0) shuffle grew it linearly with archive length
+     (quadratic total).
+
+Restore rows cross-check against ``committed_state_oracle``.
+"""
+from __future__ import annotations
+
+import contextlib
+import gc
+import json
+import random
+import tempfile
+import time
+from pathlib import Path
+
+from repro.archive import Archiver, LogArchive, SnapshotStore
+from repro.core import Database, committed_state_oracle, make_key
+from repro.core.log import LogManager
+from repro.core.records import CommitRec, UpdateRec
+from repro.media import DirectoryBackend, MemoryBackend, cold_restore
+
+PAGE_PRIMARY, PAGE_RESTORE = 8192, 4096
+
+
+def _setup(rng, n_rows, value_size=60):
+    rows = [(f"k{i:07d}".encode(), rng.randbytes(value_size))
+            for i in range(n_rows)]
+    primary = Database(page_size=PAGE_PRIMARY, cache_pages=512,
+                       tracker_interval=100, bg_flush_per_txn=4)
+    primary.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+    return primary, rows, base
+
+
+def _drive(primary, rng, n_rows, n_txns, ops_per_txn=8):
+    for _ in range(n_txns):
+        primary.run_txn([("update", "t",
+                          f"k{rng.randrange(n_rows):07d}".encode(),
+                          rng.randbytes(60)) for _ in range(ops_per_txn)])
+
+
+@contextlib.contextmanager
+def _quiet_gc():
+    """Timed regions measure the algorithm, not collector sweeps over
+    whatever heap earlier benchmark modules left behind (gen-2 passes
+    scale with *total* live objects, which would make per-op costs look
+    like they grow with archive size)."""
+    gc.collect()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if was_enabled:
+            gc.enable()
+
+
+def bench_seal_throughput(fast: bool, tmp: Path) -> list[dict]:
+    n_rows = 2_000 if fast else 10_000
+    n_txns = 200 if fast else 1_000
+    rows_out = []
+    for kind in ("memory", "directory"):
+        rng = random.Random(31)
+        primary, _, _ = _setup(rng, n_rows)
+        _drive(primary, rng, n_rows, n_txns)
+        backend = MemoryBackend() if kind == "memory" \
+            else DirectoryBackend(tmp / "seal")
+        arch = LogArchive(segment_records=1024, backend=backend)
+        primary.log.attach_archive(arch)
+        with _quiet_gc():
+            t0 = time.perf_counter()
+            sealed = arch.seal(primary.log)
+            wall = time.perf_counter() - t0
+        nbytes = sum(len(backend.get(s.name)) for s in arch.segments)
+        rows_out.append({
+            "name": f"media_seal/backend={kind}",
+            "records": sealed,
+            "recs_per_s": round(sealed / wall),
+            "bytes_per_record": round(nbytes / sealed, 1),
+            "us_per_call": wall / sealed * 1e6,
+            "derived": f"{sealed} recs {sealed / wall / 1e3:.0f}k/s "
+                       f"{nbytes / sealed:.0f}B/rec",
+        })
+    return rows_out
+
+
+def bench_cold_vs_inprocess_restore(fast: bool, tmp: Path) -> list[dict]:
+    # enough redo after the snapshot that restore cost is dominated by
+    # replay on both sides — the bound compares the byte boundary's tax,
+    # and a tiny workload would instead compare fixed cold-start costs
+    # (file opens, index load) against almost nothing
+    n_rows = 2_000 if fast else 10_000
+    total_txns = 800 if fast else 2_000
+    rng = random.Random(32)
+    primary, _, base = _setup(rng, n_rows)
+    backend = DirectoryBackend(tmp / "cold")
+    store = SnapshotStore()
+    arch = Archiver(primary, archive=LogArchive(segment_records=1024,
+                                                backend=backend),
+                    snapshots=store)
+    # default cadence: snapshot at the half-way point, history after it
+    _drive(primary, rng, n_rows, total_txns // 2)
+    store.take(primary, chunk_keys=512,
+               on_chunk=lambda: _drive(primary, rng, n_rows, 1))
+    _drive(primary, rng, n_rows, total_txns // 2)
+    arch.run_once()
+    target = arch.archive.archived_upto
+    oracle = committed_state_oracle(primary.crash(), base, upto_lsn=target)
+
+    # interleaved min-of-5: filesystem/CPU latency drifts over seconds on
+    # shared machines, and measuring the two sides back-to-back per trial
+    # keeps a drifty patch from taxing only one of them
+    t_in = t_cold = float("inf")
+    for _ in range(5):
+        with _quiet_gc():
+            t0 = time.perf_counter()
+            db_in, _stats_in = store.restore(target, primary,
+                                             page_size=PAGE_RESTORE)
+            t_in = min(t_in, time.perf_counter() - t0)
+        with _quiet_gc():
+            t0 = time.perf_counter()
+            db_cold, stats_cold = cold_restore(backend, target_lsn=target,
+                                               page_size=PAGE_RESTORE)
+            t_cold = min(t_cold, time.perf_counter() - t0)
+    assert dict(db_in.scan_all()) == oracle, "in-process restore diverged"
+    assert dict(db_cold.scan_all()) == oracle, "cold restore diverged"
+    ratio = t_cold / max(t_in, 1e-9)
+    assert ratio <= 3.0, \
+        f"cold restore {ratio:.2f}x in-process exceeds the 3x bound"
+    return [{
+        "name": "media_cold_restore/vs_in_process",
+        "replayed_txns": stats_cold.replayed_txns,
+        "in_process_ms": round(t_in * 1e3, 1),
+        "cold_ms": round(t_cold * 1e3, 1),
+        "ratio": round(ratio, 2),
+        "us_per_call": t_cold * 1e6,
+        "derived": f"cold={t_cold * 1e3:.0f}ms in-proc={t_in * 1e3:.0f}ms "
+                   f"{ratio:.2f}x ok=True",
+    }]
+
+
+def bench_decode_lru(fast: bool, tmp: Path) -> list[dict]:
+    n_rows = 2_000 if fast else 10_000
+    n_txns = 150 if fast else 600
+    reads = 3_000 if fast else 20_000
+    rng = random.Random(33)
+    primary, _, _ = _setup(rng, n_rows)
+    _drive(primary, rng, n_rows, n_txns)
+    backend = MemoryBackend()
+    arch = LogArchive(segment_records=256, backend=backend)
+    primary.log.attach_archive(arch)
+    arch.seal(primary.log)
+    primary.log.truncate(primary.log.stable_lsn)
+    lsns = [rng.randrange(1, arch.archived_upto + 1) for _ in range(reads)]
+    rows_out = []
+    for cache_segments in (8, 0):
+        view = LogArchive.load(backend, segment_records=256,
+                               cache_segments=cache_segments)
+        with _quiet_gc():
+            t0 = time.perf_counter()
+            for lsn in lsns:
+                view.record(lsn)
+            wall = time.perf_counter() - t0
+        rows_out.append({
+            "name": f"media_decode_lru/cache={cache_segments}",
+            "reads": reads,
+            "segment_decodes": view.segment_decodes,
+            "cache_hits": view.cache_hits,
+            "us_per_call": wall / reads * 1e6,
+            "derived": f"{reads} reads decodes={view.segment_decodes} "
+                       f"hits={view.cache_hits}",
+        })
+    speedup = rows_out[1]["us_per_call"] / rows_out[0]["us_per_call"]
+    rows_out[0]["derived"] += f" lru_speedup={speedup:.1f}x"
+    assert speedup > 1.0, "decode LRU made hot reads slower"
+    return rows_out
+
+
+def _synthetic_sealed_archive(n_segments: int, seg_records: int,
+                              backend=None) -> LogArchive:
+    """A sealed archive of synthetic update records — prune cost is an
+    index/backend question, so the workload machinery would just be
+    noise here."""
+    log = LogManager()
+    for i in range(n_segments * seg_records - 1):
+        log.append(UpdateRec(txn=i + 1, table="t", key=b"k%06d" % i,
+                             before=b"x", after=b"y"))
+    log.append(CommitRec(txn=1))
+    log.flush()
+    arch = LogArchive(segment_records=seg_records,
+                      backend=backend if backend is not None
+                      else MemoryBackend())
+    log.attach_archive(arch)
+    arch.seal(log)
+    return arch
+
+
+_prune_rows_cache: dict[bool, list[dict]] = {}
+
+
+def bench_prune_scaling(fast: bool) -> list[dict]:
+    """Both backends: the memory rows guard the index scheme (pop(0)
+    regression), the directory rows guard the manifest discipline — a
+    full manifest rewrite per delete would make on-disk prune cost grow
+    with archive length even with a clean index (the op-log manifest
+    keeps it O(1) appends + amortized compaction).
+
+    Memoized per process: ``archive_bench.bench_prune_guard`` relabels
+    these rows into its own table, and re-running the DirectoryBackend
+    rounds (hundreds of fsync'd writes) twice per bench pass would buy
+    nothing."""
+    cached = _prune_rows_cache.get(fast)
+    if cached is not None:
+        return [dict(row) for row in cached]
+    seg_records = 16
+    rows_out = []
+    with tempfile.TemporaryDirectory(prefix="media_prune_") as tmpdir:
+        for kind, sizes in (("memory", (128, 512) if fast else (256, 1024)),
+                            ("directory", (32, 128) if fast
+                             else (64, 256))):
+            pair = []
+            for n_segments in sizes:
+                # min-of-3 full rebuild+prune rounds: the prune loop is
+                # microseconds per call in memory, where a single
+                # scheduler hiccup would otherwise dominate the ratio
+                wall, mbytes = float("inf"), 0
+                for _ in range(3 if kind == "memory" else 1):
+                    backend = MemoryBackend() if kind == "memory" else \
+                        DirectoryBackend(Path(tmpdir) / f"p{n_segments}")
+                    arch = _synthetic_sealed_archive(n_segments,
+                                                     seg_records, backend)
+                    bounds = [seg.hi + 1 for seg in arch.segments]
+                    mbytes0 = getattr(backend, "manifest_bytes_written", 0)
+                    with _quiet_gc():
+                        t0 = time.perf_counter()
+                        for below in bounds:  # one segment per call —
+                            arch.prune(below)  # the archiver's cadence
+                        wall = min(wall, time.perf_counter() - t0)
+                    assert len(arch) == 0 and arch.pruned_records == \
+                        n_segments * seg_records
+                    mbytes = getattr(backend, "manifest_bytes_written",
+                                     0) - mbytes0
+                pair.append({
+                    "name": f"media_prune/{kind}/segments={n_segments}",
+                    "segments": n_segments,
+                    "us_per_segment": wall / n_segments * 1e6,
+                    "manifest_bytes_per_segment": mbytes / n_segments,
+                    "us_per_call": wall / n_segments * 1e6,
+                    "derived": f"{n_segments} segs "
+                               f"{wall / n_segments * 1e6:.1f}us/seg",
+                })
+            # amortized-O(1) per segment: cost must not grow with archive
+            # length (the old pop(0) index scheme and a rewrite-per-delete
+            # manifest both scaled ~linearly per segment => ~4x here).
+            # The memory rows assert on wall time (stable in-process);
+            # the directory rows assert on manifest bytes — wall time
+            # there is fsync-latency-bound, which says nothing about
+            # scaling, while the I/O volume is deterministic.
+            if kind == "memory":
+                ratio = pair[1]["us_per_segment"] / \
+                    max(pair[0]["us_per_segment"], 1e-9)
+                what = "prune cost"
+            else:
+                ratio = pair[1]["manifest_bytes_per_segment"] / \
+                    max(pair[0]["manifest_bytes_per_segment"], 1e-9)
+                what = "manifest I/O per pruned segment"
+            pair[1]["derived"] += f" scale_ratio={ratio:.2f}x"
+            assert ratio < 3.0, \
+                f"{kind} {what} grew {ratio:.1f}x with a " \
+                f"{sizes[1] // sizes[0]}x longer archive — quadratic " \
+                "blowup is back"
+            rows_out.extend(pair)
+    _prune_rows_cache[fast] = [dict(row) for row in rows_out]
+    return rows_out
+
+
+def run(fast: bool = False) -> dict:
+    with tempfile.TemporaryDirectory(prefix="media_bench_") as tmpdir:
+        tmp = Path(tmpdir)
+        rows = (bench_seal_throughput(fast, tmp)
+                + bench_cold_vs_inprocess_restore(fast, tmp)
+                + bench_decode_lru(fast, tmp)
+                + bench_prune_scaling(fast))
+    return {"name": "media", "rows": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(fast=True), indent=1))

@@ -24,14 +24,15 @@ ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 def main() -> None:
     fast = "--full" not in sys.argv
     from . import (appendix_d_variants, archive_bench, fig2_cache_sweep,
-                   fig3_ckpt_interval, kernel_bench, parallel_apply_bench,
-                   replication_bench, roofline_table, trainstore_bench)
+                   fig3_ckpt_interval, kernel_bench, media_bench,
+                   parallel_apply_bench, replication_bench, roofline_table,
+                   trainstore_bench)
     ART.mkdir(parents=True, exist_ok=True)
     failures: list[str] = []
     print("name,us_per_call,derived")
     for mod in (fig2_cache_sweep, fig3_ckpt_interval, appendix_d_variants,
                 replication_bench, parallel_apply_bench, archive_bench,
-                trainstore_bench, kernel_bench, roofline_table):
+                media_bench, trainstore_bench, kernel_bench, roofline_table):
         try:
             out = mod.run(fast=fast)
         except Exception:

@@ -7,18 +7,28 @@ and recover without replaying history from LSN 1, and lets the in-memory
 log stay bounded while sealed segments hold the cold prefix.
 
 Public surface:
-  LogArchive / Segment        sealed-segment cold tier; LogManager splices
-                              it with the live tail on every read path
+  LogArchive / Segment        sealed-segment cold tier: encoded blobs on a
+                              repro.media backend (memory or directory),
+                              decoded lazily behind an LRU; LogManager
+                              splices it with the live tail on every read
+                              path; LogArchive.load rebuilds the index in
+                              a fresh process from the backend alone
   SnapshotStore / Snapshot    fuzzy committed-only snapshots of a live
-                              Database; point-in-time restore(target_lsn)
-                              and restore_replica (pre-seeded standby)
+                              Database, persisted through the same
+                              backend; point-in-time restore(target_lsn)
+                              and restore_replica (pre-seeded standby);
+                              SnapshotStore.load for cold starts
   RestoreStats                what a restore replayed
-  Archiver                    retention policy: seal, truncate below
-                              min(snapshot horizon, slowest subscriber),
-                              prune below what retained snapshots need
+  Archiver                    retention policy: seal (+ save the master
+                              pointer), truncate below min(snapshot
+                              horizon, slowest subscriber), prune below
+                              what retained snapshots need
   SnapshotRequired            raised when a subscriber falls below the
                               retention horizon; the ReplicaSet auto-
                               re-seeds when a SnapshotStore is attached
+
+The fresh-process entry points live in ``repro.media``: ``cold_restore``,
+``cold_restore_replica``, ``archive_log_view``.
 """
 from .errors import SnapshotRequired
 from .log_archive import LogArchive, Segment

@@ -1,51 +1,134 @@
-"""Sealed-segment archive of the stable logical log.
+"""Sealed-segment archive of the stable logical log — encoded bytes on a
+``MediaBackend``, not references in a heap.
 
-``LogManager`` keeps every record in memory, which is exactly right for the
-paper's recovery study and exactly wrong for a long-lived primary: the log
-grows without bound while only a suffix is ever hot (shipping to live
-subscribers, redo above the last snapshot).  ``LogArchive`` is the cold
-tier: the stable prefix is copied into immutable, LSN-contiguous segments,
-after which ``LogManager.truncate`` may drop it from memory.  Every log
-read path splices archive segments with the live tail (one dense LSN
-space), so recovery, analysis and shipping never know where a record lives.
+``LogManager`` keeps every record in memory, which is exactly right for
+the paper's recovery study and exactly wrong for a long-lived primary:
+the log grows without bound while only a suffix is ever hot (shipping to
+live subscribers, redo above the last snapshot).  ``LogArchive`` is the
+cold tier: the stable prefix is *encoded* (``media.codec``, versioned +
+CRC-framed) into immutable, LSN-contiguous segment blobs on a backend —
+a dict in memory, files on disk — after which ``LogManager.truncate``
+may drop it from memory.  Every log read path splices archive segments
+with the live tail (one dense LSN space), decoding lazily through a
+small LRU of hot segments, so recovery, analysis and shipping never know
+where (or in what representation) a record lives.
+
+Because segments are bytes on a backend, the archive is exactly what a
+dead primary leaves behind: ``LogArchive.load`` rebuilds the index in a
+fresh process from the backend listing alone (see ``media.cold_restore``).
 
 Only the *stable* prefix can be sealed — an unforced record can still be
 disowned by a crash, and an archive holding disowned work would resurrect
-it at restore time.  Sealing copies references, never mutates; pruning
-drops whole segments from the cold end (the unit a real deployment would
-delete as a file), and is the single place in the system where log history
-is genuinely lost — everything below ``retained_from`` is gone, which is
-why pruning must stay below the snapshot horizon (see ``Archiver``).
+it at restore time.  Pruning deletes whole segment blobs from the cold
+end and is the single place in the system where log history is genuinely
+lost — everything below ``retained_from`` is gone, which is why pruning
+must stay below the snapshot horizon (see ``Archiver``).
 """
 from __future__ import annotations
 
 import bisect
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Iterator, Optional
 
 from ..core.log import LogManager, TruncatedLogError
 from ..core.records import LSN, LogRec
+from ..media.backend import MediaBackend, MemoryBackend
+from ..media.codec import (decode_archive_meta, decode_segment,
+                           decode_segment_header, encode_archive_meta,
+                           encode_segment)
+from ..media.errors import CorruptSegmentError
+
+SEG_PREFIX = "seg/"
+META_NAME = "archive_meta"
+
+
+def _seg_name(lo: LSN) -> str:
+    # keyed by lo only: extending a short tail segment re-puts the same
+    # name (atomic replace), so the backend never holds two generations
+    return f"{SEG_PREFIX}{lo:012d}"
 
 
 @dataclass(frozen=True)
 class Segment:
-    """One sealed, immutable run of consecutive LSNs [lo, hi]."""
+    """Index entry for one sealed, immutable run of consecutive LSNs
+    [lo, hi]; the records themselves are encoded bytes in the backend
+    blob ``name``."""
     lo: LSN
     hi: LSN
-    records: tuple
+    name: str
 
     def __len__(self) -> int:
-        return len(self.records)
+        return self.hi - self.lo + 1
 
 
 class LogArchive:
-    def __init__(self, segment_records: int = 1024):
+    def __init__(self, segment_records: int = 1024,
+                 backend: Optional[MediaBackend] = None,
+                 cache_segments: int = 8):
         self.segment_records = segment_records
-        self.segments: list[Segment] = []
-        self._seg_los: list[LSN] = []    # segments[i].lo, kept in lockstep
+        self.backend = backend if backend is not None else MemoryBackend()
+        self.cache_segments = cache_segments
+        # index/offset scheme (the LogManager._base idiom): pruning only
+        # advances _head past dead entries — no per-prune list shuffling —
+        # and the storage compacts amortized-O(1) once half of it is dead
+        self._segs: list[Segment] = []
+        self._los: list[LSN] = []        # _segs[i].lo, kept in lockstep
+        self._head: int = 0              # _segs[:_head] are pruned
         self._archived_upto: LSN = 0     # newest sealed LSN (contiguous from lo)
         self._retained_from: LSN = 1     # oldest LSN still held (prune floor)
         self.pruned_records = 0
+        # decoded-segment LRU: name -> tuple[LogRec]; hot splice reads
+        # (recovery rescans, shipping catch-up) hit it instead of
+        # re-decoding the blob on every record
+        self._cache: OrderedDict[str, tuple] = OrderedDict()
+        self.segment_decodes = 0
+        self.cache_hits = 0
+
+    # ----------------------------------------------------------- loading
+    @classmethod
+    def load(cls, backend: MediaBackend, *, segment_records: int = 1024,
+             cache_segments: int = 8) -> "LogArchive":
+        """Rebuild the archive index from a backend alone — the fresh-
+        process path.  Reads only segment *headers*; records decode
+        lazily on first touch.  Validates that the sealed runs are
+        LSN-contiguous (a gap means blobs were lost behind the
+        manifest's back, and serving around it would be a silent hole)."""
+        arch = cls(segment_records=segment_records, backend=backend,
+                   cache_segments=cache_segments)
+        entries = []
+        for name in backend.list(SEG_PREFIX):
+            # 64 bytes cover magic + version + the framed (lo, hi, count)
+            # header; records decode lazily on first touch
+            lo, hi, _count = decode_segment_header(backend.get_head(name, 64))
+            entries.append(Segment(lo, hi, name))
+        entries.sort(key=lambda s: s.lo)
+        for prev, nxt in zip(entries, entries[1:]):
+            if nxt.lo != prev.hi + 1:
+                raise CorruptSegmentError(
+                    f"archive segments are not contiguous: [{prev.lo}, "
+                    f"{prev.hi}] is followed by [{nxt.lo}, {nxt.hi}] — "
+                    "a sealed blob is missing")
+        arch._segs = entries
+        arch._los = [s.lo for s in entries]
+        if entries:
+            arch._retained_from = entries[0].lo
+            arch._archived_upto = entries[-1].hi
+        # the meta blob carries what segments alone cannot: the frontier
+        # when retention emptied the archive, and the prune floor.  The
+        # segments win where they know more (a seal that crashed between
+        # blob and meta publication still counts its sealed records).
+        if backend.exists(META_NAME):
+            retained, upto, pruned = decode_archive_meta(
+                backend.get(META_NAME))
+            arch._retained_from = max(arch._retained_from, retained)
+            arch._archived_upto = max(arch._archived_upto, upto)
+            arch.pruned_records = pruned
+        return arch
+
+    def _save_meta(self) -> None:
+        self.backend.put(META_NAME, encode_archive_meta(
+            self._retained_from, self._archived_upto, self.pruned_records))
 
     # ------------------------------------------------------------ inspection
     @property
@@ -57,18 +140,26 @@ class LogArchive:
         return self._retained_from
 
     @property
+    def segments(self) -> list[Segment]:
+        """Live (un-pruned) segment index entries, oldest first — a
+        slice view; mutate the archive through seal/prune only."""
+        return self._segs[self._head:]
+
+    @property
     def archived_records(self) -> int:
-        return sum(len(s) for s in self.segments)
+        return sum(len(self._segs[i])
+                   for i in range(self._head, len(self._segs)))
 
     def __len__(self) -> int:
-        return len(self.segments)
+        return len(self._segs) - self._head
 
     # ----------------------------------------------------------------- seal
     def seal(self, log: LogManager, upto: Optional[LSN] = None) -> int:
-        """Copy the not-yet-archived stable prefix of ``log`` (through
-        ``upto`` when given) into sealed segments; returns records sealed.
-        Idempotent and incremental: the next call resumes where this one
-        stopped.  A short tail segment is extended in place up to the
+        """Encode the not-yet-archived stable prefix of ``log`` (through
+        ``upto`` when given) into sealed segment blobs; returns records
+        sealed.  Idempotent and incremental: the next call resumes where
+        this one stopped.  A short tail segment is re-encoded with the
+        new records appended (same blob name, atomic replace) up to the
         segment size before a new one is opened."""
         hi = log.stable_lsn if upto is None else min(upto, log.stable_lsn)
         lo = self._archived_upto + 1
@@ -76,29 +167,64 @@ class LogArchive:
             return 0
         recs = list(log.scan(lo, hi))
         sealed = len(recs)
-        if self.segments and len(self.segments[-1]) < self.segment_records:
-            last = self.segments[-1]
+        live = len(self._segs) > self._head
+        if live and len(self._segs[-1]) < self.segment_records:
+            last = self._segs[-1]
             head = recs[: self.segment_records - len(last)]
             recs = recs[len(head):]
             if head:
-                self.segments[-1] = Segment(last.lo, last.hi + len(head),
-                                            last.records + tuple(head))
+                merged = list(self._records(len(self._segs) - 1)) + head
+                grown = Segment(last.lo, last.hi + len(head), last.name)
+                self.backend.put(grown.name, encode_segment(merged))
+                self._segs[-1] = grown
+                self._cache[grown.name] = tuple(merged)
+                self._cache.move_to_end(grown.name)
+                self._shrink_cache()
         while recs:
             chunk, recs = (recs[: self.segment_records],
                            recs[self.segment_records:])
-            self.segments.append(
-                Segment(chunk[0].lsn, chunk[-1].lsn, tuple(chunk)))
-            self._seg_los.append(chunk[0].lsn)
+            seg = Segment(chunk[0].lsn, chunk[-1].lsn,
+                          _seg_name(chunk[0].lsn))
+            self.backend.put(seg.name, encode_segment(chunk))
+            self._segs.append(seg)
+            self._los.append(seg.lo)
         self._archived_upto = hi
+        self._save_meta()
         return sealed
 
     # ----------------------------------------------------------------- read
     def _seg_index(self, lsn: LSN) -> int:
-        """Index of the segment containing ``lsn``; -1 when absent."""
-        i = bisect.bisect_right(self._seg_los, lsn) - 1
-        if i >= 0 and self.segments[i].hi >= lsn:
+        """Index (into ``_segs``) of the segment containing ``lsn``;
+        -1 when absent or pruned."""
+        i = bisect.bisect_right(self._los, lsn, lo=self._head) - 1
+        if i >= self._head and self._segs[i].hi >= lsn:
             return i
         return -1
+
+    def _shrink_cache(self) -> None:
+        while len(self._cache) > max(self.cache_segments, 0):
+            self._cache.popitem(last=False)
+
+    def _records(self, i: int) -> tuple:
+        """Decoded records of ``_segs[i]``, through the LRU."""
+        seg = self._segs[i]
+        hit = self._cache.get(seg.name)
+        if hit is not None and len(hit) == len(seg):
+            self._cache.move_to_end(seg.name)
+            self.cache_hits += 1
+            return hit
+        records = tuple(decode_segment(self.backend.get(seg.name)))
+        self.segment_decodes += 1
+        if records[0].lsn != seg.lo or records[-1].lsn != seg.hi:
+            raise CorruptSegmentError(
+                f"segment blob {seg.name} covers [{records[0].lsn}, "
+                f"{records[-1].lsn}] but the index expects [{seg.lo}, "
+                f"{seg.hi}]")
+        if self.cache_segments > 0:
+            self._cache[seg.name] = records
+            self._cache.move_to_end(seg.name)
+            self._shrink_cache()
+        return records
 
     def record(self, lsn: LSN) -> LogRec:
         i = self._seg_index(lsn)
@@ -106,8 +232,7 @@ class LogArchive:
             raise TruncatedLogError(
                 f"LSN {lsn} is not in the archive (retains "
                 f"[{self._retained_from}, {self._archived_upto}])")
-        seg = self.segments[i]
-        return seg.records[lsn - seg.lo]
+        return self._records(i)[lsn - self._segs[i].lo]
 
     def scan(self, from_lsn: LSN, to_lsn: LSN) -> Iterator[LogRec]:
         """Yield archived records with from_lsn <= lsn <= to_lsn (capped at
@@ -117,28 +242,49 @@ class LogArchive:
         hi = min(to_lsn, self._archived_upto)
         if lo > hi:
             return
-        if lo < self._retained_from:
+        i = self._seg_index(lo)
+        if lo < self._retained_from or i < 0:
             raise TruncatedLogError(
                 f"archive scan from LSN {lo} reaches below the prune floor "
                 f"{self._retained_from}")
-        i = self._seg_index(lo)
-        for seg in self.segments[i:]:
+        for j in range(i, len(self._segs)):
+            seg = self._segs[j]
             if seg.lo > hi:
                 return
-            yield from seg.records[max(0, lo - seg.lo): hi - seg.lo + 1]
+            records = self._records(j)
+            yield from records[max(0, lo - seg.lo): hi - seg.lo + 1]
 
     # ---------------------------------------------------------------- prune
     def prune(self, below_lsn: LSN) -> int:
         """Drop whole segments wholly below ``below_lsn`` (the deletion
-        unit); returns records dropped.  This is the only real data loss in
-        the system — callers bound ``below_lsn`` by the snapshot horizon
-        and the slowest subscriber (``Archiver.prune``)."""
+        unit — one blob on the backend); returns records dropped.  This is
+        the only real data loss in the system — callers bound
+        ``below_lsn`` by the snapshot horizon and the slowest subscriber
+        (``Archiver.prune``).
+
+        Amortized O(1) per dropped segment beyond the blob delete itself:
+        the cut point is found by bisection, ``_head`` advances past the
+        dead entries, and the backing lists compact only when more than
+        half is dead (the ``LogManager._base`` idiom) — the old
+        ``pop(0)``-per-segment shuffle made long-archive pruning
+        quadratic."""
+        cut = bisect.bisect_right(self._los, below_lsn, lo=self._head)
+        while cut > self._head and self._segs[cut - 1].hi >= below_lsn:
+            cut -= 1
         dropped = 0
-        while self.segments and self.segments[0].hi < below_lsn:
-            dropped += len(self.segments.pop(0))
-            self._seg_los.pop(0)
-        floor = self.segments[0].lo if self.segments \
+        for i in range(self._head, cut):
+            seg = self._segs[i]
+            dropped += len(seg)
+            self.backend.delete(seg.name)
+            self._cache.pop(seg.name, None)
+        self._head = cut
+        if self._head > len(self._segs) // 2:
+            del self._segs[: self._head]
+            del self._los[: self._head]
+            self._head = 0
+        floor = self._segs[self._head].lo if self._head < len(self._segs) \
             else min(below_lsn, self._archived_upto + 1)
         self._retained_from = max(self._retained_from, floor)
         self.pruned_records += dropped
+        self._save_meta()
         return dropped

@@ -43,6 +43,13 @@ class Archiver:
         db.log.attach_archive(self.archive)
         if snapshots is not None and snapshots.archive is None:
             snapshots.archive = self.archive
+        # one backend for every durable artifact: segments, snapshot rows
+        # and the master pointer land on the same store, which is what
+        # makes the directory (or dict) self-contained for cold_restore;
+        # attach_backend also backfills snapshots taken before this
+        # Archiver existed, so in-process and cold restore see the same set
+        if snapshots is not None and snapshots.backend is None:
+            snapshots.attach_backend(self.archive.backend)
 
     def watermark(self) -> LSN:
         """Highest LSN through which the in-memory tail may be dropped:
@@ -60,9 +67,11 @@ class Archiver:
         return max(wm, 0)
 
     def run_once(self) -> dict:
-        """Seal the stable prefix, then truncate memory to the watermark.
-        Returns counters for inspection/benchmarks."""
+        """Seal the stable prefix, persist the master pointer, then
+        truncate memory to the watermark.  Returns counters for
+        inspection/benchmarks."""
         sealed = self.archive.seal(self.db.log)
+        self.db.log.save_master(self.archive.backend)
         truncated = self.db.log.truncate(self.watermark())
         return {
             "sealed": sealed,

@@ -38,6 +38,12 @@ Restore (``SnapshotStore.restore``): newest snapshot with
 exactly ``target_lsn``, oracle-equal to the committed prefix <= target.
 With no eligible snapshot it degrades to a full replay from LSN 1 — the
 baseline the re-seed benchmark measures against.
+
+Durability: with a ``MediaBackend`` attached, every snapshot is encoded
+(``media.codec`` — CRC-framed rows + metadata) and written through it as
+``snap/<id>``; ``SnapshotStore.load`` rebuilds the store in a fresh
+process from those blobs alone, which together with ``LogArchive.load``
+is the whole cold-restore story (``media.cold_restore``).
 """
 from __future__ import annotations
 
@@ -49,7 +55,15 @@ from ..core.dc import split_key
 from ..core.log import LogManager
 from ..core.records import (LSN, NULL_LSN, CommitRec, SnapshotRec, UpdateRec)
 from ..core.tc import CrashImage, Database
+from ..media.backend import MediaBackend
+from ..media.codec import decode_snapshot, encode_snapshot
 from .log_archive import LogArchive
+
+SNAP_PREFIX = "snap/"
+
+
+def _snap_name(snapshot_id: int) -> str:
+    return f"{SNAP_PREFIX}{snapshot_id:08d}"
 
 # the replication watermark row is position metadata in its owner's LSN
 # space — never part of a snapshot (a reseeded consumer writes its own)
@@ -95,11 +109,46 @@ class SnapshotStore:
     wiring it lets ``restore`` run from a bare archive with no live log."""
 
     def __init__(self, archive: Optional[LogArchive] = None,
-                 exclude_tables: tuple = DEFAULT_EXCLUDE_TABLES):
+                 exclude_tables: tuple = DEFAULT_EXCLUDE_TABLES,
+                 backend: Optional[MediaBackend] = None):
         self.archive = archive
         self.exclude_tables = set(exclude_tables)
+        self.backend = backend
         self.snapshots: list[Snapshot] = []
         self._next_id = 1
+
+    def attach_backend(self, backend: MediaBackend) -> int:
+        """Point this store at a backend and backfill every snapshot
+        taken before the attachment — otherwise a snapshot that exists
+        for in-process restore would be silently absent from cold
+        restore, and a cold target below the next snapshot's window
+        would degrade to full replay (or die on pruned history).
+        Returns how many snapshots were backfilled."""
+        self.backend = backend
+        written = 0
+        for snap in self.snapshots:
+            name = _snap_name(snap.snapshot_id)
+            if not backend.exists(name):
+                backend.put(name, encode_snapshot(snap))
+                written += 1
+        return written
+
+    @classmethod
+    def load(cls, backend: MediaBackend,
+             archive: Optional[LogArchive] = None,
+             exclude_tables: tuple = DEFAULT_EXCLUDE_TABLES
+             ) -> "SnapshotStore":
+        """Rebuild a store in a fresh process from a backend's ``snap/``
+        blobs alone (metadata + rows decode through the codec; CRC and
+        row-count validation make a torn snapshot loud, never short)."""
+        store = cls(archive=archive, exclude_tables=exclude_tables,
+                    backend=backend)
+        snaps = [decode_snapshot(backend.get(name))
+                 for name in backend.list(SNAP_PREFIX)]
+        snaps.sort(key=lambda s: (s.begin_lsn, s.snapshot_id))
+        store.snapshots = snaps
+        store._next_id = max((s.snapshot_id for s in snaps), default=0) + 1
+        return store
 
     # ------------------------------------------------------------------ take
     def take(self, db: Database, *, chunk_keys: int = 256,
@@ -123,6 +172,9 @@ class SnapshotStore:
         snap = Snapshot(snapshot_id=rec.snapshot_id, begin_lsn=begin,
                         end_lsn=db.log.stable_lsn, redo_lsn=redo,
                         rows=tuple(rows), chunks=chunks)
+        if self.backend is not None:
+            self.backend.put(_snap_name(snap.snapshot_id),
+                             encode_snapshot(snap))
         self.snapshots.append(snap)
         self._next_id += 1
         return snap
@@ -160,6 +212,11 @@ class SnapshotStore:
         keep_last = max(keep_last, 0)
         dropped = len(self.snapshots) - keep_last
         if dropped > 0:
+            retired = self.snapshots[:-keep_last] if keep_last \
+                else self.snapshots
+            if self.backend is not None:
+                for snap in retired:
+                    self.backend.delete(_snap_name(snap.snapshot_id))
             self.snapshots = self.snapshots[-keep_last:] if keep_last else []
             return dropped
         return 0

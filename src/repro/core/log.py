@@ -24,6 +24,7 @@ are gone for good — reading below ``retained_lsn`` raises
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Tuple
 
@@ -65,6 +66,11 @@ class LogManager:
         # can never have applied past it, so lag measured against anything
         # newer is phantom lag.
         self.last_stable_commit_lsn: LSN = NULL_LSN
+        # Commit LSNs in the unforced tail, ascending by construction.
+        # flush() bisects here for the newest commit <= the flush target
+        # instead of rescanning the flushed range backwards — O(commits
+        # since the last flush), amortized O(1) per commit.
+        self._pending_commits: List[LSN] = []
 
     # ---------------------------------------------------------------- append
     def append(self, rec: LogRec) -> LSN:
@@ -75,19 +81,19 @@ class LogManager:
             self.max_txn = txn
         if isinstance(rec, CommitRec):
             self.last_commit_lsn = rec.lsn
+            self._pending_commits.append(rec.lsn)
         return rec.lsn
 
     def flush(self, upto: Optional[LSN] = None) -> LSN:
         """Force the log to stable storage up to ``upto`` (default: all)."""
         tgt = self.end_lsn if upto is None else min(upto, self.end_lsn)
         if tgt > self._stable_lsn:
-            if self.last_commit_lsn <= tgt:
-                self.last_stable_commit_lsn = self.last_commit_lsn
-            else:   # a commit past tgt exists: scan just the flushed range
-                for lsn in range(tgt, self._stable_lsn, -1):
-                    if isinstance(self._recs[lsn - self._base - 1], CommitRec):
-                        self.last_stable_commit_lsn = lsn
-                        break
+            # newest pending commit at or below tgt; the full flush (the
+            # common case) clears the whole pending list in one del
+            idx = bisect.bisect_right(self._pending_commits, tgt)
+            if idx:
+                self.last_stable_commit_lsn = self._pending_commits[idx - 1]
+                del self._pending_commits[:idx]
             self._stable_lsn = tgt
             self.forced_flushes += 1
         return self.stable_lsn
@@ -210,6 +216,29 @@ class LogManager:
             self.master.bckpt_lsn = bckpt
         if rssp_rec is not None:
             self.master.rssp_rec_lsn = rssp_rec
+
+    def save_master(self, backend=None) -> None:
+        """Persist the master pointer as an encoded blob on a
+        ``MediaBackend`` (default: the attached archive's backend) — the
+        ARIES master record made real bytes, so a fresh process knows
+        where the last complete checkpoint and RSSP live without scanning
+        (``Archiver.run_once`` calls this after every seal)."""
+        from ..media.codec import encode_master   # keep core import-light
+        if backend is None:
+            backend = getattr(self.archive, "backend", None)
+        if backend is None:
+            raise ValueError("save_master needs a MediaBackend (none given "
+                             "and no backend-backed archive is attached)")
+        backend.put("master", encode_master(self.master))
+
+    @staticmethod
+    def load_master(backend) -> Master:
+        """Read a master pointer back from a backend; a fresh ``Master``
+        (all NULL_LSN) when none was ever saved."""
+        from ..media.codec import decode_master
+        if not backend.exists("master"):
+            return Master()
+        return decode_master(backend.get("master"))
 
     # ---------------------------------------------------------------- crash
     def crash(self) -> "LogManager":

@@ -228,6 +228,27 @@ class SnapshotRec(LogRec):
 
 UPDATE_KINDS = (RecKind.UPDATE, RecKind.INSERT, RecKind.DELETE)
 
+# Canonical kind -> record class registry.  The durable media codec
+# (repro.media.codec) must be able to encode/decode every kind; keeping
+# the authoritative enumeration here means a future RecKind added without
+# codec support fails the codec coverage test instead of silently
+# becoming unarchivable.
+REC_CLASSES: dict[RecKind, type] = {
+    RecKind.UPDATE: UpdateRec,
+    RecKind.INSERT: UpdateRec,
+    RecKind.DELETE: UpdateRec,
+    RecKind.COMMIT: CommitRec,
+    RecKind.ABORT: AbortRec,
+    RecKind.CLR: CLRRec,
+    RecKind.BEGIN_CKPT: BeginCkptRec,
+    RecKind.END_CKPT: EndCkptRec,
+    RecKind.BW: BWRec,
+    RecKind.DELTA: DeltaRec,
+    RecKind.SMO: SMORec,
+    RecKind.RSSP: RSSPRec,
+    RecKind.SNAPSHOT: SnapshotRec,
+}
+
 
 def is_update(rec: LogRec) -> bool:
     return isinstance(rec, UpdateRec)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import enum
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 from .dc import DataComponent, RedoStats, make_key
 from .dpt import DPT, build_dpt_sql
@@ -234,7 +234,7 @@ def recover(image: CrashImage, strategy: Strategy, *,
 
 
 # --------------------------------------------------------------------------
-def committed_state_oracle(image: CrashImage,
+def committed_state_oracle(image: Union[CrashImage, "Database", LogManager],
                            base: Optional[dict[bytes, bytes]] = None,
                            upto_lsn: Optional[LSN] = None
                            ) -> dict[bytes, bytes]:
@@ -252,8 +252,11 @@ def committed_state_oracle(image: CrashImage,
 
     Reads the log through the truncation splice (``LogManager.scan`` from
     LSN 1 spans archive segments and the live tail transparently), so the
-    oracle stays valid on truncated logs as long as nothing was pruned."""
-    log = image.log
+    oracle stays valid on truncated logs as long as nothing was pruned.
+
+    Accepts a ``Database``, ``CrashImage`` or bare ``LogManager`` (the
+    ``media.archive_log_view`` form — an oracle over cold bytes alone)."""
+    log = image if isinstance(image, LogManager) else image.log
     committed: set[int] = set()
     for rec in log.scan(1, upto_lsn):
         if isinstance(rec, CommitRec):

@@ -1,0 +1,48 @@
+"""Durable media layer: bytes on a backend, not references in a heap.
+
+The paper's premise is that logical recovery rebuilds state from the log
+without any physical context — so the durable artifacts themselves must
+be expressible across a real storage boundary.  This package owns that
+boundary:
+
+  codec      versioned, length-prefixed, CRC-framed binary encoding for
+             every log-record kind, sealed segments, snapshot rows, and
+             the master pointer
+  backend    MediaBackend interface; MemoryBackend (dict) and
+             DirectoryBackend (atomic rename-on-seal, fsync'd manifest)
+  restore    cold_restore / cold_restore_replica / archive_log_view —
+             rebuild a writable Database or a pre-seeded standby in a
+             fresh process from a backend alone
+  errors     CorruptSegmentError / UnknownFormatError /
+             BackendMissingError — the "loud hole" contract in byte form
+
+``restore`` is imported lazily (module ``__getattr__``): it pulls in the
+archive and TC layers, which themselves build on ``codec``/``backend``.
+"""
+from .backend import (DirectoryBackend, MediaBackend, MemoryBackend,
+                      open_backend)
+from .codec import (FORMAT_VERSION, decode_master, decode_record,
+                    decode_segment, decode_segment_header, decode_snapshot,
+                    encode_master, encode_record, encode_segment,
+                    encode_snapshot)
+from .errors import (BackendMissingError, CorruptSegmentError, MediaError,
+                     UnknownFormatError)
+
+_LAZY = ("cold_restore", "cold_restore_replica", "archive_log_view",
+         "load_media")
+
+__all__ = [
+    "MediaBackend", "MemoryBackend", "DirectoryBackend", "open_backend",
+    "FORMAT_VERSION", "encode_record", "decode_record", "encode_segment",
+    "decode_segment", "decode_segment_header", "encode_snapshot",
+    "decode_snapshot", "encode_master", "decode_master",
+    "MediaError", "CorruptSegmentError", "UnknownFormatError",
+    "BackendMissingError", *_LAZY,
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from . import restore
+        return getattr(restore, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

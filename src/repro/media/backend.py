@@ -1,0 +1,233 @@
+"""Pluggable blob stores for durable artifacts.
+
+A ``MediaBackend`` is the storage boundary of the Deuteronomy-style
+contract: above it, ``LogArchive`` / ``SnapshotStore`` / the master
+pointer deal in *named byte blobs*; below it, bytes live wherever the
+deployment wants them.  Two implementations:
+
+  MemoryBackend     a dict — the in-process tier the existing tests and
+                    benchmarks run on, byte-for-byte the same format.
+  DirectoryBackend  files under a root directory, with the two properties
+                    real durability needs: atomic publication (write to a
+                    temp file, fsync, ``os.replace`` onto the final name —
+                    a crash mid-seal leaves either the old blob or the new
+                    one, never a torn file) and a fsync'd manifest that is
+                    the authoritative listing (a stray temp file or a blob
+                    whose manifest update never landed is invisible).
+
+Names are hierarchical (``seg/000000000001``, ``snap/00000003``,
+``master``); ``list(prefix)`` filters on the name prefix.  Blob content is
+already CRC-framed by the codec, so backends store and return bytes
+opaquely — corruption is detected at decode, loudly.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from pathlib import Path
+from typing import Union
+
+from .errors import BackendMissingError
+
+MANIFEST = "MANIFEST"
+
+
+class MediaBackend:
+    """Interface: named, immutable-by-convention byte blobs.  ``put`` on
+    an existing name atomically replaces it (tail-segment extension)."""
+
+    def put(self, name: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, name: str) -> bytes:
+        raise NotImplementedError
+
+    def delete(self, name: str) -> None:
+        raise NotImplementedError
+
+    def list(self, prefix: str = "") -> list[str]:
+        """Sorted names starting with ``prefix``."""
+        raise NotImplementedError
+
+    def get_head(self, name: str, n: int) -> bytes:
+        """First ``n`` bytes of a blob — enough for a framed header.
+        Backends with cheap ranged reads override this so index rebuild
+        (``LogArchive.load``) costs O(headers), not O(archive bytes)."""
+        return self.get(name)[:n]
+
+    def exists(self, name: str) -> bool:
+        try:
+            self.get_head(name, 1)
+            return True
+        except KeyError:
+            return False
+
+
+class MemoryBackend(MediaBackend):
+    """Blobs in a dict: same codec bytes, no disk.  The default backend —
+    everything PR 3 did in-process keeps exactly its old semantics, just
+    with encoded segments instead of shared record references."""
+
+    def __init__(self):
+        self._blobs: dict[str, bytes] = {}
+
+    def put(self, name: str, data: bytes) -> None:
+        self._blobs[name] = bytes(data)
+
+    def get(self, name: str) -> bytes:
+        try:
+            return self._blobs[name]
+        except KeyError:
+            raise BackendMissingError(name, "MemoryBackend") from None
+
+    def delete(self, name: str) -> None:
+        self._blobs.pop(name, None)
+
+    def list(self, prefix: str = "") -> list[str]:
+        return sorted(n for n in self._blobs if n.startswith(prefix))
+
+
+class DirectoryBackend(MediaBackend):
+    """Blobs as files under ``root``.
+
+    Durability discipline:
+      * every blob is written to a temp file in the same directory,
+        fsync'd, then ``os.replace``d onto its final path — publication is
+        atomic at the filesystem level;
+      * the manifest is the *only* source of ``list``/``get`` visibility:
+        a blob file without a manifest entry (crash between the two
+        steps) is garbage, not data.  It is an append-only op log
+        (``+name`` / ``-name`` lines, fsync'd per append) so a put or
+        delete costs O(1) manifest I/O regardless of how many blobs the
+        backend holds — a full rewrite per mutation would make a
+        steady-cadence archiver's prune quadratic over the archive's
+        life, the same cost class the in-memory index fix eliminates.
+        When tombstones outnumber live entries the log compacts through
+        the usual temp-write + atomic-replace path.  A torn final line
+        (crash mid-append) is ignored: the op it described never became
+        visible, which is exactly the pre-crash state;
+      * directory entries are fsync'd after each replace so the rename
+        itself is durable (best-effort on platforms without O_DIRECTORY).
+    """
+
+    # compact when tombstones exceed live entries and this floor (avoids
+    # rewriting a tiny manifest over and over)
+    COMPACT_MIN_OPS = 64
+
+    def __init__(self, root: Union[str, Path]):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._names: set[str] = set()
+        self._manifest_ops = 0          # lines in the on-disk op log
+        self.manifest_bytes_written = 0  # appends + compactions, for the
+        #                                  O(1)-manifest-I/O bench guard
+        manifest = self.root / MANIFEST
+        if manifest.exists():
+            raw = manifest.read_bytes().decode("utf-8")
+            lines = raw.split("\n")
+            if not raw.endswith("\n") and lines:
+                lines = lines[:-1]      # torn final append: op never landed
+            for line in lines:
+                if line.startswith("+"):
+                    self._names.add(line[1:])
+                elif line.startswith("-"):
+                    self._names.discard(line[1:])
+                elif line:              # pre-op-log format: bare names
+                    self._names.add(line)
+            self._manifest_ops = len(lines)
+
+    # ------------------------------------------------------------ helpers
+    def _path(self, name: str) -> Path:
+        p = (self.root / name).resolve()
+        if self.root.resolve() not in p.parents and p != self.root.resolve():
+            raise ValueError(f"blob name {name!r} escapes the backend root")
+        return p
+
+    @staticmethod
+    def _fsync_dir(path: Path) -> None:
+        try:
+            fd = os.open(path, os.O_RDONLY)
+        except OSError:  # pragma: no cover — platform without dir-open
+            return
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def _write_atomic(self, path: Path, data: bytes) -> None:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._fsync_dir(path.parent)
+
+    def _append_manifest(self, op: str) -> None:
+        line = op.encode("utf-8") + b"\n"
+        with open(self.root / MANIFEST, "ab") as f:
+            f.write(line)
+            f.flush()
+            os.fsync(f.fileno())
+        self._manifest_ops += 1
+        self.manifest_bytes_written += len(line)
+        if self._manifest_ops > max(2 * len(self._names),
+                                    self.COMPACT_MIN_OPS):
+            self._compact_manifest()
+
+    def _compact_manifest(self) -> None:
+        text = "".join(f"+{n}\n" for n in sorted(self._names))
+        self._write_atomic(self.root / MANIFEST, text.encode("utf-8"))
+        self._manifest_ops = len(self._names)
+        self.manifest_bytes_written += len(text)
+
+    # ---------------------------------------------------------- interface
+    def put(self, name: str, data: bytes) -> None:
+        self._write_atomic(self._path(name), data)
+        if name not in self._names:
+            self._names.add(name)
+            self._append_manifest(f"+{name}")
+
+    def get(self, name: str) -> bytes:
+        if name not in self._names:
+            raise BackendMissingError(name, f"DirectoryBackend({self.root})")
+        return self._path(name).read_bytes()
+
+    def get_head(self, name: str, n: int) -> bytes:
+        if name not in self._names:
+            raise BackendMissingError(name, f"DirectoryBackend({self.root})")
+        with open(self._path(name), "rb") as f:
+            return f.read(n)
+
+    def delete(self, name: str) -> None:
+        if name not in self._names:
+            return
+        self._names.discard(name)
+        self._append_manifest(f"-{name}")   # unlist first: a crash leaves
+        try:                                # garbage, never a listed-but-
+            self._path(name).unlink()       # missing blob
+        except FileNotFoundError:  # pragma: no cover
+            pass
+
+    def list(self, prefix: str = "") -> list[str]:
+        return sorted(n for n in self._names if n.startswith(prefix))
+
+
+def open_backend(where: Union[str, Path, MediaBackend, None]
+                 ) -> MediaBackend:
+    """Coerce a backend argument: a ``MediaBackend`` passes through, a
+    path opens a ``DirectoryBackend``, ``None`` makes a fresh
+    ``MemoryBackend``."""
+    if where is None:
+        return MemoryBackend()
+    if isinstance(where, MediaBackend):
+        return where
+    return DirectoryBackend(where)

@@ -1,0 +1,526 @@
+"""Versioned binary codec for durable artifacts: log records, sealed
+segments, snapshot rows, and the master pointer.
+
+Everything a dead primary leaves behind must be *bytes on a backend*, not
+references into a Python heap — that is what lets ``cold_restore`` rebuild
+state in a process that shares nothing with the one that died.  This
+module owns the byte format:
+
+  record   kind byte + per-kind fields (length-prefixed bytes, fixed-width
+           ints); every ``RecKind`` in ``core.records`` round-trips exactly
+           (``decode_record(encode_record(r)) == r``).
+  frame    ``u32 length + u32 crc32 + payload`` — the unit of corruption
+           detection.  A truncated or bit-flipped frame raises
+           ``CorruptSegmentError``; decoding never returns a short stream.
+  segment  magic + format-version byte + header frame (lo, hi, count) +
+           one frame per record.  The header count is cross-checked against
+           the frames actually present and their LSN run.
+  snapshot magic + version + meta frame (id, begin, end, redo, chunks,
+           n_rows) + one frame per row.
+  master   magic + version + one frame (the three master LSNs).
+
+The format-version byte is the compatibility hinge: decoders accept every
+version they know (currently just 1) and raise ``UnknownFormatError`` for
+anything newer, so old segments stay readable when the format evolves.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Optional
+
+from ..core.log import Master
+from ..core.records import (AbortRec, BWRec, BeginCkptRec, CLRRec, CommitRec,
+                            DeltaRec, EndCkptRec, LogRec, RSSPRec, RecKind,
+                            SMORec, SnapshotRec, UpdateRec)
+from .errors import CorruptSegmentError, UnknownFormatError
+
+FORMAT_VERSION = 1
+SEGMENT_MAGIC = b"RSEG"
+SNAPSHOT_MAGIC = b"RSNP"
+MASTER_MAGIC = b"RMST"
+ARCHIVE_META_MAGIC = b"RAMT"
+
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_I64 = struct.Struct("<q")
+_FRAME = struct.Struct("<II")      # length, crc32
+
+
+# ------------------------------------------------------------- primitives
+class _Writer:
+    __slots__ = ("parts",)
+
+    def __init__(self):
+        self.parts: list[bytes] = []
+
+    def u32(self, v: int) -> None:
+        self.parts.append(_U32.pack(v))
+
+    def u64(self, v: int) -> None:
+        self.parts.append(_U64.pack(v))
+
+    def i64(self, v: int) -> None:
+        self.parts.append(_I64.pack(v))
+
+    def blob(self, b: bytes) -> None:
+        self.parts.append(_U32.pack(len(b)))
+        self.parts.append(b)
+
+    def opt_blob(self, b: Optional[bytes]) -> None:
+        if b is None:
+            self.parts.append(b"\x00")
+        else:
+            self.parts.append(b"\x01")
+            self.blob(b)
+
+    def getvalue(self) -> bytes:
+        return b"".join(self.parts)
+
+
+class _Reader:
+    __slots__ = ("buf", "pos", "what")
+
+    def __init__(self, buf: bytes, what: str = "payload"):
+        self.buf = buf
+        self.pos = 0
+        self.what = what
+
+    def take(self, n: int) -> bytes:
+        end = self.pos + n
+        if end > len(self.buf):
+            raise CorruptSegmentError(
+                f"truncated {self.what}: needed {n} bytes at offset "
+                f"{self.pos}, only {len(self.buf) - self.pos} remain")
+        out = self.buf[self.pos:end]
+        self.pos = end
+        return out
+
+    def u32(self) -> int:
+        return _U32.unpack(self.take(4))[0]
+
+    def u64(self) -> int:
+        return _U64.unpack(self.take(8))[0]
+
+    def i64(self) -> int:
+        return _I64.unpack(self.take(8))[0]
+
+    def blob(self) -> bytes:
+        return self.take(self.u32())
+
+    def opt_blob(self) -> Optional[bytes]:
+        return self.blob() if self.take(1) == b"\x01" else None
+
+    @property
+    def exhausted(self) -> bool:
+        return self.pos >= len(self.buf)
+
+
+def _frame(payload: bytes) -> bytes:
+    return _U32.pack(len(payload)) + _U32.pack(zlib.crc32(payload)) + payload
+
+
+def _read_frame(r: _Reader, what: str) -> _Reader:
+    r.what = what
+    n = r.u32()
+    crc = r.u32()
+    payload = r.take(n)
+    if zlib.crc32(payload) != crc:
+        raise CorruptSegmentError(
+            f"CRC mismatch on {what}: stored {crc:#010x}, computed "
+            f"{zlib.crc32(payload):#010x} — the blob is corrupt")
+    return _Reader(payload, what)
+
+
+def _check_header(r: _Reader, magic: bytes, what: str) -> int:
+    """Validate magic + format version; returns the version."""
+    got = r.take(4)
+    if got != magic:
+        raise CorruptSegmentError(
+            f"bad magic on {what}: expected {magic!r}, got {got!r} — "
+            "not a media blob, or the wrong blob kind")
+    version = r.take(1)[0]
+    if version > FORMAT_VERSION or version == 0:
+        raise UnknownFormatError(
+            f"{what} has format version {version}; this codec reads "
+            f"versions 1..{FORMAT_VERSION} — upgrade to read it")
+    return version
+
+
+# ---------------------------------------------------------------- records
+def encode_record(rec: LogRec) -> bytes:
+    """One record -> kind-tagged payload (no frame; see ``_frame``)."""
+    w = _Writer()
+    kind = rec.kind
+    w.parts.append(bytes([kind]))
+    w.u64(rec.lsn)
+    if isinstance(rec, UpdateRec):
+        w.u64(rec.txn)
+        w.blob(rec.table.encode("utf-8"))
+        w.blob(rec.key)
+        w.opt_blob(rec.before)
+        w.opt_blob(rec.after)
+        w.i64(rec.pid)
+        w.u64(rec.prev_lsn)
+    elif isinstance(rec, (CommitRec, AbortRec)):
+        w.u64(rec.txn)
+        w.u64(rec.prev_lsn)
+    elif isinstance(rec, CLRRec):
+        w.u64(rec.txn)
+        w.blob(rec.table.encode("utf-8"))
+        w.blob(rec.key)
+        w.opt_blob(rec.after)
+        w.parts.append(bytes([rec.op]))
+        w.i64(rec.pid)
+        w.u64(rec.undone_lsn)
+        w.u64(rec.undo_next)
+    elif isinstance(rec, BeginCkptRec):
+        pass
+    elif isinstance(rec, EndCkptRec):
+        w.u64(rec.bckpt_lsn)
+        w.u32(len(rec.active_txns))
+        for txn, lsn in rec.active_txns.items():
+            w.u64(txn)
+            w.u64(lsn)
+    elif isinstance(rec, BWRec):
+        w.u32(len(rec.written_set))
+        for pid in rec.written_set:
+            w.i64(pid)
+        w.u64(rec.fw_lsn)
+    elif isinstance(rec, DeltaRec):
+        w.u32(len(rec.dirty_set))
+        for pid in rec.dirty_set:
+            w.i64(pid)
+        w.u32(len(rec.written_set))
+        for pid in rec.written_set:
+            w.i64(pid)
+        w.u64(rec.fw_lsn)
+        w.u64(rec.first_dirty)
+        w.u64(rec.tc_lsn)
+        if rec.dirty_lsns is None:
+            w.parts.append(b"\x00")
+        else:
+            w.parts.append(b"\x01")
+            w.u32(len(rec.dirty_lsns))
+            for lsn in rec.dirty_lsns:
+                w.u64(lsn)
+    elif isinstance(rec, SMORec):
+        w.u32(len(rec.images))
+        for pid, image in rec.images.items():
+            w.i64(pid)
+            w.blob(image)
+        w.i64(rec.root_pid)
+        w.i64(rec.next_pid)
+        w.u64(rec.height)
+    elif isinstance(rec, RSSPRec):
+        w.u64(rec.rssp_lsn)
+        w.i64(rec.root_pid)
+        w.i64(rec.next_pid)
+        w.u64(rec.height)
+    elif isinstance(rec, SnapshotRec):
+        w.u64(rec.snapshot_id)
+        w.u64(rec.oldest_active_lsn)
+    else:
+        raise TypeError(f"no encoder for record type {type(rec).__name__}")
+    return w.getvalue()
+
+
+def decode_record(payload: bytes) -> LogRec:
+    try:
+        return _decode_record(payload)
+    except (struct.error, IndexError, ValueError) as exc:
+        # short fields, an unknown kind byte, invalid UTF-8 in a table
+        # name — all corruption, all loud (CorruptSegmentError itself is
+        # a RuntimeError and passes through untouched)
+        raise CorruptSegmentError(
+            f"corrupt record payload: {exc}") from None
+
+
+def _take(payload: bytes, off: int, n: int) -> bytes:
+    end = off + n
+    if end > len(payload):
+        raise struct.error(f"needed {n} bytes at offset {off}, "
+                           f"only {len(payload) - off} remain")
+    return payload[off:end]
+
+
+def _decode_update(payload: bytes, kind: RecKind, lsn: int) -> UpdateRec:
+    """Manual-offset fast path for the record kinds that dominate every
+    redo stream — the _Reader's per-field method calls are the hot cost
+    of decoding a segment, and cold restore is all segment decode."""
+    off = 9
+    txn, tl = struct.unpack_from("<QI", payload, off)
+    off += 12
+    table = _take(payload, off, tl).decode("utf-8")
+    off += tl
+    kl, = _U32.unpack_from(payload, off)
+    off += 4
+    key = _take(payload, off, kl)
+    off += kl
+    before = after = None
+    if payload[off]:
+        bl, = _U32.unpack_from(payload, off + 1)
+        before = _take(payload, off + 5, bl)
+        off += 5 + bl
+    else:
+        off += 1
+    if payload[off]:
+        al, = _U32.unpack_from(payload, off + 1)
+        after = _take(payload, off + 5, al)
+        off += 5 + al
+    else:
+        off += 1
+    pid, prev_lsn = struct.unpack_from("<qQ", payload, off)
+    if off + 16 != len(payload):
+        raise CorruptSegmentError(
+            f"record payload has {len(payload) - off - 16} trailing bytes "
+            f"after a complete {kind.name} record")
+    return UpdateRec(lsn=lsn, txn=txn, table=table, key=key, before=before,
+                     after=after, pid=pid, prev_lsn=prev_lsn, op=kind)
+
+
+def _decode_record(payload: bytes) -> LogRec:
+    kind = RecKind(payload[0])
+    lsn, = _U64.unpack_from(payload, 1)
+    if kind is RecKind.UPDATE or kind is RecKind.INSERT \
+            or kind is RecKind.DELETE:
+        return _decode_update(payload, kind, lsn)
+    if kind is RecKind.COMMIT:
+        txn, prev = struct.unpack_from("<QQ", payload, 9)
+        if len(payload) != 25:
+            raise CorruptSegmentError(
+                "COMMIT record payload has trailing bytes")
+        return CommitRec(lsn=lsn, txn=txn, prev_lsn=prev)
+    r = _Reader(payload, "record")
+    r.pos = 9
+    if kind == RecKind.ABORT:
+        rec = AbortRec(lsn=lsn, txn=r.u64(), prev_lsn=r.u64())
+    elif kind == RecKind.CLR:
+        rec = CLRRec(lsn=lsn, txn=r.u64(),
+                     table=r.blob().decode("utf-8"), key=r.blob(),
+                     after=r.opt_blob(), op=RecKind(r.take(1)[0]),
+                     pid=r.i64(), undone_lsn=r.u64(), undo_next=r.u64())
+    elif kind == RecKind.BEGIN_CKPT:
+        rec = BeginCkptRec(lsn=lsn)
+    elif kind == RecKind.END_CKPT:
+        bckpt = r.u64()
+        active = {}
+        for _ in range(r.u32()):
+            txn = r.u64()            # explicit order: txn precedes its lsn
+            active[txn] = r.u64()
+        rec = EndCkptRec(lsn=lsn, bckpt_lsn=bckpt, active_txns=active)
+    elif kind == RecKind.BW:
+        written = [r.i64() for _ in range(r.u32())]
+        rec = BWRec(lsn=lsn, written_set=written, fw_lsn=r.u64())
+    elif kind == RecKind.DELTA:
+        dirty = [r.i64() for _ in range(r.u32())]
+        written = [r.i64() for _ in range(r.u32())]
+        fw, first_dirty, tc = r.u64(), r.u64(), r.u64()
+        dirty_lsns = None
+        if r.take(1) == b"\x01":
+            dirty_lsns = [r.u64() for _ in range(r.u32())]
+        rec = DeltaRec(lsn=lsn, dirty_set=dirty, written_set=written,
+                       fw_lsn=fw, first_dirty=first_dirty, tc_lsn=tc,
+                       dirty_lsns=dirty_lsns)
+    elif kind == RecKind.SMO:
+        images = {}
+        for _ in range(r.u32()):
+            pid = r.i64()
+            images[pid] = r.blob()
+        rec = SMORec(lsn=lsn, images=images, root_pid=r.i64(),
+                     next_pid=r.i64(), height=r.u64())
+    elif kind == RecKind.RSSP:
+        rec = RSSPRec(lsn=lsn, rssp_lsn=r.u64(), root_pid=r.i64(),
+                      next_pid=r.i64(), height=r.u64())
+    elif kind == RecKind.SNAPSHOT:
+        rec = SnapshotRec(lsn=lsn, snapshot_id=r.u64(),
+                          oldest_active_lsn=r.u64())
+    else:  # pragma: no cover — RecKind() above already rejects unknowns
+        raise CorruptSegmentError(f"unknown record kind {kind}")
+    if not r.exhausted:
+        raise CorruptSegmentError(
+            f"record payload has {len(payload) - r.pos} trailing bytes "
+            f"after a complete {kind.name} record")
+    return rec
+
+
+# --------------------------------------------------------------- segments
+def encode_segment(records) -> bytes:
+    """Encode one sealed, LSN-contiguous run of records."""
+    records = list(records)
+    if not records:
+        raise ValueError("cannot encode an empty segment")
+    lo, hi = records[0].lsn, records[-1].lsn
+    header = _Writer()
+    header.u64(lo)
+    header.u64(hi)
+    header.u32(len(records))
+    parts = [SEGMENT_MAGIC, bytes([FORMAT_VERSION]),
+             _frame(header.getvalue())]
+    parts.extend(_frame(encode_record(rec)) for rec in records)
+    return b"".join(parts)
+
+
+def decode_segment_header(blob: bytes) -> tuple[int, int, int]:
+    """(lo, hi, count) without decoding the records — what ``LogArchive.
+    load`` needs to rebuild its index from a backend listing."""
+    r = _Reader(blob, "segment")
+    _check_header(r, SEGMENT_MAGIC, "segment")
+    h = _read_frame(r, "segment header")
+    return h.u64(), h.u64(), h.u32()
+
+
+def decode_segment(blob: bytes) -> list[LogRec]:
+    """Decode a full segment; validates CRC per frame, the header count,
+    and the LSN run — a segment is whole or it is an error, never short."""
+    r = _Reader(blob, "segment")
+    _check_header(r, SEGMENT_MAGIC, "segment")
+    h = _read_frame(r, "segment header")
+    lo, hi, count = h.u64(), h.u64(), h.u32()
+    if count != hi - lo + 1:
+        raise CorruptSegmentError(
+            f"segment header inconsistent: [{lo}, {hi}] cannot hold "
+            f"{count} records")
+    records = []
+    buf, off = r.buf, r.pos
+    crc32 = zlib.crc32
+    for i in range(count):
+        # manual-offset frame parse — this loop is the cold-restore and
+        # cold-scan hot path, where per-field reader calls are pure tax
+        try:
+            ln, crc = _FRAME.unpack_from(buf, off)
+        except struct.error:
+            raise CorruptSegmentError(
+                f"truncated segment record {i} of {count}: frame header "
+                f"cut short at offset {off}") from None
+        off += 8
+        payload = buf[off:off + ln]
+        if len(payload) != ln:
+            raise CorruptSegmentError(
+                f"truncated segment record {i} of {count}: declared "
+                f"{ln} bytes, {len(payload)} present")
+        if crc32(payload) != crc:
+            raise CorruptSegmentError(
+                f"CRC mismatch on segment record {i} of {count} — "
+                "the blob is corrupt")
+        off += ln
+        records.append(decode_record(payload))
+    if off != len(buf):
+        raise CorruptSegmentError(
+            f"segment [{lo}, {hi}] has {len(buf) - off} trailing "
+            "bytes after its declared records")
+    for want, rec in zip(range(lo, hi + 1), records):
+        if rec.lsn != want:
+            raise CorruptSegmentError(
+                f"segment [{lo}, {hi}] record stream broke at LSN "
+                f"{rec.lsn} (expected {want}) — non-contiguous run")
+    return records
+
+
+# -------------------------------------------------------------- snapshots
+def encode_snapshot(snap) -> bytes:
+    """Encode an ``archive.Snapshot`` (metadata + committed rows)."""
+    meta = _Writer()
+    meta.u64(snap.snapshot_id)
+    meta.u64(snap.begin_lsn)
+    meta.u64(snap.end_lsn)
+    meta.u64(snap.redo_lsn)
+    meta.u32(snap.chunks)
+    meta.u32(len(snap.rows))
+    parts = [SNAPSHOT_MAGIC, bytes([FORMAT_VERSION]),
+             _frame(meta.getvalue())]
+    for key, value in snap.rows:
+        row = _Writer()
+        row.blob(key)
+        row.blob(value)
+        parts.append(_frame(row.getvalue()))
+    return b"".join(parts)
+
+
+def decode_snapshot(blob: bytes):
+    """Decode a snapshot blob back into an ``archive.Snapshot``."""
+    from ..archive.snapshot import Snapshot  # codec stays import-light
+    r = _Reader(blob, "snapshot")
+    _check_header(r, SNAPSHOT_MAGIC, "snapshot")
+    meta = _read_frame(r, "snapshot metadata")
+    snapshot_id, begin, end, redo = (meta.u64(), meta.u64(), meta.u64(),
+                                     meta.u64())
+    chunks, n_rows = meta.u32(), meta.u32()
+    rows = []
+    buf, off = r.buf, r.pos
+    try:
+        for i in range(n_rows):
+            # manual-offset row parse (reseed decodes every row of a big
+            # snapshot; the _Reader per-field calls are pure overhead)
+            ln, crc = _FRAME.unpack_from(buf, off)
+            off += 8
+            payload = buf[off:off + ln]
+            if len(payload) != ln:
+                raise CorruptSegmentError(
+                    f"truncated snapshot row {i} of {n_rows}: declared "
+                    f"{ln} bytes, {len(payload)} present")
+            if zlib.crc32(payload) != crc:
+                raise CorruptSegmentError(
+                    f"CRC mismatch on snapshot row {i} of {n_rows} — "
+                    "the blob is corrupt")
+            off += ln
+            kl, = _U32.unpack_from(payload, 0)
+            key = _take(payload, 4, kl)
+            vl, = _U32.unpack_from(payload, 4 + kl)
+            value = _take(payload, 8 + kl, vl)
+            if 8 + kl + vl != ln:
+                raise CorruptSegmentError(
+                    f"snapshot row {i} frame has trailing bytes")
+            rows.append((key, value))
+    except struct.error as exc:
+        raise CorruptSegmentError(
+            f"truncated snapshot row {i} of {n_rows}: {exc}") from None
+    if off != len(buf):
+        raise CorruptSegmentError(
+            f"snapshot {snapshot_id} has trailing bytes after its "
+            f"{n_rows} declared rows")
+    return Snapshot(snapshot_id=snapshot_id, begin_lsn=begin, end_lsn=end,
+                    redo_lsn=redo, rows=tuple(rows), chunks=chunks)
+
+
+# ----------------------------------------------------------- archive meta
+def encode_archive_meta(retained_from: int, archived_upto: int,
+                        pruned_records: int) -> bytes:
+    """The archive's frontier state, persisted because segments alone
+    cannot always reconstruct it: retention may legitimately prune *every*
+    segment (a fresh snapshot's redo_lsn past the sealed frontier), and a
+    fresh process must still know the frontier and the prune floor —
+    otherwise a restore target inside the empty-but-covered range would
+    be refused, and a scan below the floor could fail quietly."""
+    w = _Writer()
+    w.u64(retained_from)
+    w.u64(archived_upto)
+    w.u64(pruned_records)
+    return (ARCHIVE_META_MAGIC + bytes([FORMAT_VERSION])
+            + _frame(w.getvalue()))
+
+
+def decode_archive_meta(blob: bytes) -> tuple[int, int, int]:
+    """(retained_from, archived_upto, pruned_records)."""
+    r = _Reader(blob, "archive meta")
+    _check_header(r, ARCHIVE_META_MAGIC, "archive meta")
+    m = _read_frame(r, "archive meta")
+    return m.u64(), m.u64(), m.u64()
+
+
+# ----------------------------------------------------------------- master
+def encode_master(master: Master) -> bytes:
+    w = _Writer()
+    w.u64(master.end_ckpt_lsn)
+    w.u64(master.bckpt_lsn)
+    w.u64(master.rssp_rec_lsn)
+    return (MASTER_MAGIC + bytes([FORMAT_VERSION])
+            + _frame(w.getvalue()))
+
+
+def decode_master(blob: bytes) -> Master:
+    r = _Reader(blob, "master")
+    _check_header(r, MASTER_MAGIC, "master")
+    m = _read_frame(r, "master pointer")
+    return Master(end_ckpt_lsn=m.u64(), bckpt_lsn=m.u64(),
+                  rssp_rec_lsn=m.u64())

@@ -1,0 +1,37 @@
+"""Errors of the durable media layer.
+
+The contract mirrors ``TruncatedLogError``: a reader that cannot produce
+the exact byte-faithful record stream must fail loudly.  A short or
+corrupt segment silently yielding fewer records would make recovery,
+restore or shipping *look* successful while losing committed work — the
+one failure mode a recovery system must never have.
+"""
+from __future__ import annotations
+
+
+class MediaError(RuntimeError):
+    """Base class for durable-media failures."""
+
+
+class CorruptSegmentError(MediaError):
+    """An encoded blob failed validation: truncated frame, CRC mismatch,
+    bad magic, or a record count that does not match the header.  The blob
+    must be treated as unreadable — never as a shorter-but-valid stream."""
+
+
+class UnknownFormatError(CorruptSegmentError):
+    """The blob's format-version byte is newer than this codec understands.
+    Old segments stay readable forever (the version gates decoding); new
+    ones written by a future codec refuse loudly instead of misparsing."""
+
+
+class BackendMissingError(MediaError, KeyError):
+    """A named blob is absent from the backend (deleted, never sealed, or
+    the wrong directory was opened)."""
+
+    def __init__(self, name: str, backend: str):
+        self.name = name
+        super().__init__(f"blob {name!r} not found in {backend}")
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep the message
+        return self.args[0]

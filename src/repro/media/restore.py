@@ -1,0 +1,105 @@
+"""Cold start: rebuild a database (or a pre-seeded standby) in a fresh
+process from a media backend alone.
+
+This is the deployment the archive tier exists for — the dead primary.
+Process A ran a workload, sealed segments, took snapshots, saved the
+master pointer, and exited; nothing of it survives but bytes on a
+backend.  ``cold_restore`` opens that backend (a directory path, in the
+real case), rebuilds the ``LogArchive`` index from segment headers and
+the ``SnapshotStore`` from snapshot blobs, and runs the ordinary
+point-in-time restore: newest covering snapshot + committed-only logical
+redo from its ``redo_lsn`` — no shared references, no pickled heap, no
+physical context.  The result is a *writable* ``Database`` on whatever
+geometry ``db_kwargs`` picks (restore is relayout, as everywhere else in
+this system).
+
+``cold_restore_replica`` is the standby form: a ``Replica`` (or
+``ShardedApplier``) pre-seeded from the newest snapshot with its durable
+``(applied, resume)`` watermark set, ready to subscribe at
+``resume_lsn`` against a new primary.
+
+``archive_log_view`` wraps the loaded archive in a read-only
+``LogManager`` whose whole prefix is "truncated" into the archive — so
+every existing log consumer (``committed_state_oracle``, analysis scans,
+a ``LogShipper`` serving cold subscribers) runs unmodified against bytes.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional, Union
+
+from ..archive.log_archive import LogArchive
+from ..archive.snapshot import RestoreStats, SnapshotStore
+from ..core.log import LogManager
+from ..core.records import LSN
+from ..core.tc import Database
+from .backend import MediaBackend, open_backend
+
+BackendLike = Union[str, Path, MediaBackend]
+
+
+def load_media(where: BackendLike, *, cache_segments: int = 8
+               ) -> tuple[MediaBackend, LogArchive, SnapshotStore]:
+    """Open a backend and rebuild the archive + snapshot store from it —
+    the shared first step of every cold entry point."""
+    backend = open_backend(where)
+    archive = LogArchive.load(backend, cache_segments=cache_segments)
+    store = SnapshotStore.load(backend, archive=archive)
+    return backend, archive, store
+
+
+def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
+                 **db_kwargs) -> tuple[Database, RestoreStats]:
+    """Point-in-time restore in a fresh process: a writable ``Database``
+    equal to the committed prefix <= ``target_lsn``, built from the
+    backend at ``where`` (directory path or ``MediaBackend``) and nothing
+    else.  ``target_lsn`` defaults to everything the archive sealed."""
+    backend, archive, store = load_media(where)
+    if target_lsn is None:
+        target_lsn = archive.archived_upto
+        if target_lsn == 0:
+            raise ValueError(
+                f"nothing to restore: backend {where!r} holds no sealed "
+                "segments (was the archiver ever run?)")
+    return store.restore(target_lsn, **db_kwargs)
+
+
+def cold_restore_replica(where: BackendLike, replica_id: str, *,
+                         target_lsn: Optional[LSN] = None,
+                         replica_cls=None, **replica_kwargs):
+    """Standby form of ``cold_restore``: a replica pre-seeded from the
+    newest snapshot on the backend (<= ``target_lsn`` when given), its
+    durable watermark at the snapshot window — subscribe it at
+    ``resume_lsn`` and it catches up through ordinary shipping."""
+    _backend, _archive, store = load_media(where)
+    return store.restore_replica(replica_id, target_lsn=target_lsn,
+                                 replica_cls=replica_cls, **replica_kwargs)
+
+
+def archive_log_view(where: BackendLike) -> LogManager:
+    """A read-only ``LogManager`` over a loaded archive: the live tail is
+    empty, the base sits at the sealed frontier, and every read path
+    splices down into the segments — ``scan``/``record``/``scan_stable``
+    and with them the oracle and the shipper work against cold bytes.
+    Appending or flushing through this view is a caller error (it holds
+    no writable tail), but reads are the point."""
+    backend, archive, _store = load_media(where)
+    log = LogManager()
+    log._base = archive.archived_upto
+    log._stable_lsn = archive.archived_upto
+    log.attach_archive(archive)
+    log.master = LogManager.load_master(backend)
+    # commit-relative consumers (Replica.lag, primary-fallback tokens)
+    # measure against last_stable_commit_lsn; leaving it NULL would make
+    # an arbitrarily stale replica read as fully caught up.  Walk the
+    # sealed segments newest-first — the newest commit is almost always
+    # in the last one, which then sits warm in the decode LRU.
+    from ..core.records import CommitRec
+    for i in range(len(archive.segments) - 1, -1, -1):
+        newest = next((rec.lsn for rec in reversed(archive._records(i))
+                       if isinstance(rec, CommitRec)), None)
+        if newest is not None:
+            log.last_commit_lsn = newest
+            log.last_stable_commit_lsn = newest
+            break
+    return log

@@ -378,3 +378,25 @@ class Replica(ApplyEngine):
         self.resume_lsn = snapshot.redo_lsn
         self.promoted = False
         self._reset_volatile()
+
+    def reseed_from_backend(self, where, *, target_lsn=None):
+        """``reseed_from`` against durable media: load the snapshot store
+        from a ``MediaBackend`` (or directory path) and seed from its
+        newest snapshot (<= ``target_lsn`` when given).  This is how a
+        standby joins a *dead* primary's lineage — nothing of the old
+        process survives but bytes on the backend, and that is enough to
+        put this node at the snapshot window, ready to subscribe to
+        whoever now serves the log.  Returns the snapshot used."""
+        # call-time import: replication must not depend on archive/media
+        # at module load (the dependency arrow points archive -> replication)
+        from ..media.restore import load_media
+        _backend, _archive, store = load_media(where)
+        snap = store.latest() if target_lsn is None else \
+            store.latest_for(target_lsn)
+        if snap is None:
+            raise ValueError(
+                f"backend {where!r} holds no usable snapshot"
+                + (f" at or below LSN {target_lsn}" if target_lsn else "")
+                + " — run the archiver/snapshot store against it first")
+        self.reseed_from(snap)
+        return snap

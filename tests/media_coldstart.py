@@ -1,0 +1,115 @@
+"""Subprocess halves of the cold-restore round-trip test.
+
+Run as a script with two roles so the two halves genuinely share no
+process state:
+
+    python media_coldstart.py prepare <dir> <variant>
+    python media_coldstart.py restore <dir>
+
+``prepare`` (process A) runs a workload against a fresh primary, seals
+segments / takes snapshots / saves the master pointer into a
+``DirectoryBackend`` at ``<dir>/backend``, writes the committed-state
+oracle for the chosen target to ``<dir>/expect.pickle``, and exits — the
+primary dies with the process.  ``restore`` (process B) rebuilds a
+database from the backend directory alone via ``media.cold_restore`` and
+compares it against the oracle.  Variants:
+
+  live    everything stable is sealed before exit (clean shutdown);
+          target = the sealed frontier = the stable tip
+  crash   work keeps committing *after* the last seal, and a stable but
+          uncommitted loser is left in flight — media only holds the
+          prefix sealed before the "crash"; the tail and the loser must
+          not surface
+  pruned  two snapshot generations, then retention drops the old one and
+          prunes the segments only it needed — restore runs above the
+          prune floor from the surviving snapshot
+"""
+import pickle
+import random
+import sys
+from pathlib import Path
+
+from repro.archive import Archiver, LogArchive, SnapshotStore
+from repro.core import committed_state_oracle
+from repro.media import DirectoryBackend, cold_restore
+
+from repl_workload import drive, make_primary
+
+N_ROWS, VAL = 150, 16
+
+
+def prepare(workdir: Path, variant: str) -> None:
+    rng = random.Random(20260727)
+    db, rows, base = make_primary(rng, n_rows=N_ROWS, val=VAL,
+                                  page_size=8192)
+    backend = DirectoryBackend(workdir / "backend")
+    store = SnapshotStore()
+    arch = Archiver(db, archive=LogArchive(segment_records=64,
+                                           backend=backend),
+                    snapshots=store)
+    drive(db, rng, 25, n_rows=N_ROWS, val=VAL)
+    store.take(db, chunk_keys=48,
+               on_chunk=lambda: drive(db, rng, 2, n_rows=N_ROWS, val=VAL))
+    drive(db, rng, 25, n_rows=N_ROWS, val=VAL)
+
+    if variant == "live":
+        arch.run_once()
+        target = db.log.stable_lsn
+        assert arch.archive.archived_upto == target
+    elif variant == "crash":
+        loser = db.tc.begin()
+        db.tc.update(loser, "t", rows[0][0], b"LOSER")
+        db.log.flush()                       # stable but uncommitted
+        arch.run_once()
+        target = arch.archive.archived_upto
+        # the world moves on after the last seal; none of this reaches media
+        drive(db, rng, 20, n_rows=N_ROWS, val=VAL)
+    elif variant == "pruned":
+        arch.run_once()
+        drive(db, rng, 30, n_rows=N_ROWS, val=VAL)
+        store.take(db, chunk_keys=48)
+        arch.run_once()
+        target = arch.archive.archived_upto
+        # the oracle itself needs the full history — compute it before
+        # retention destroys the pruned prefix (restore does not: it
+        # starts at the surviving snapshot's redo_lsn, above the floor)
+        oracle = committed_state_oracle(db.crash(), base, upto_lsn=target)
+        arch.prune(keep_snapshots=1)         # old generation's history gone
+        assert arch.archive.retained_from > 1
+    else:
+        raise SystemExit(f"unknown variant {variant!r}")
+
+    if variant != "pruned":
+        oracle = committed_state_oracle(db.crash(), base, upto_lsn=target)
+    (workdir / "expect.pickle").write_bytes(
+        pickle.dumps({"target": target, "oracle": oracle,
+                      "variant": variant}))
+
+
+def restore(workdir: Path) -> None:
+    expect = pickle.loads((workdir / "expect.pickle").read_bytes())
+    db, stats = cold_restore(workdir / "backend",
+                             target_lsn=expect["target"], page_size=4096)
+    got = dict(db.scan_all())
+    if got != expect["oracle"]:
+        missing = expect["oracle"].keys() - got.keys()
+        extra = got.keys() - expect["oracle"].keys()
+        raise SystemExit(
+            f"cold restore diverged from the committed-state oracle "
+            f"(variant={expect['variant']}, target={expect['target']}): "
+            f"{len(missing)} missing, {len(extra)} extra keys")
+    # the restored database is writable in this process too
+    db.run_txn([("insert", "t", b"cold-start", b"alive")])
+    assert db.dc.read("t", b"cold-start") == b"alive"
+    print(f"restored variant={expect['variant']} "
+          f"target={expect['target']} replayed={stats.replayed_txns}")
+
+
+if __name__ == "__main__":
+    role, workdir = sys.argv[1], Path(sys.argv[2])
+    if role == "prepare":
+        prepare(workdir, sys.argv[3])
+    elif role == "restore":
+        restore(workdir)
+    else:
+        raise SystemExit(f"unknown role {role!r}")

@@ -2,7 +2,14 @@
 (splice-cursor transparency for recovery, analysis and shipping), fuzzy
 logical snapshots, point-in-time restore, standby re-seeding
 (SnapshotRequired / auto-reseed / promote survivors), and ranged replica
-scans with min-over-spanned-shards staleness tokens."""
+scans with min-over-spanned-shards staleness tokens.
+
+Every test that builds an archive runs twice — once on ``MemoryBackend``
+(the PR-3 in-process semantics, unchanged) and once on
+``DirectoryBackend`` (encoded blobs on disk) — via the ``make_backend``
+fixture: the media layer's contract is that the backend choice is
+invisible to everything above it."""
+import itertools
 import random
 
 import pytest
@@ -11,6 +18,7 @@ from repro.archive import (Archiver, LogArchive, SnapshotRequired,
                            SnapshotStore)
 from repro.core import (Database, Strategy, TruncatedLogError,
                         committed_state_oracle, make_key, recover)
+from repro.media import DirectoryBackend, MemoryBackend
 from repro.replication import (LogShipper, Replica, ReplicaSet,
                                ShardedApplier, range_partitioner)
 
@@ -23,6 +31,16 @@ def _mix(rng, db, n_txns):
     drive(db, rng, n_txns, n_rows=N_ROWS, val=VAL)
 
 
+@pytest.fixture(params=["memory", "directory"])
+def make_backend(request, tmp_path):
+    """Factory for fresh backends of the parametrized kind (a test may
+    need several — e.g. one per LSN space after a failover)."""
+    if request.param == "memory":
+        return MemoryBackend
+    counter = itertools.count()
+    return lambda: DirectoryBackend(tmp_path / f"backend{next(counter)}")
+
+
 @pytest.fixture
 def primary():
     rng = random.Random(1234)
@@ -33,10 +51,10 @@ def primary():
 
 
 # ------------------------------------------------------------ archive/splice
-def test_seal_truncate_and_splice(primary):
+def test_seal_truncate_and_splice(primary, make_backend):
     rng, db, rows, base = primary
     full = [r.lsn for r in db.log.scan(1)]
-    arch = LogArchive(segment_records=64)
+    arch = LogArchive(segment_records=64, backend=make_backend())
     db.log.attach_archive(arch)
     sealed = arch.seal(db.log)
     assert sealed == db.log.stable_lsn
@@ -56,11 +74,11 @@ def test_seal_truncate_and_splice(primary):
     assert arch.archived_upto == db.log.stable_lsn
 
 
-def test_truncate_guards(primary):
+def test_truncate_guards(primary, make_backend):
     _, db, _, _ = primary
     with pytest.raises(ValueError, match="no archive"):
         db.log.truncate(10)
-    arch = LogArchive()
+    arch = LogArchive(backend=make_backend())
     db.log.attach_archive(arch)
     arch.seal(db.log, upto=20)
     with pytest.raises(ValueError, match="sealed only through"):
@@ -69,9 +87,9 @@ def test_truncate_guards(primary):
     assert db.log.truncate(20) == 0          # idempotent
 
 
-def test_prune_loses_history_loudly(primary):
+def test_prune_loses_history_loudly(primary, make_backend):
     _, db, _, _ = primary
-    arch = LogArchive(segment_records=16)
+    arch = LogArchive(segment_records=16, backend=make_backend())
     db.log.attach_archive(arch)
     arch.seal(db.log, upto=50)
     db.log.truncate(50)
@@ -86,13 +104,13 @@ def test_prune_loses_history_loudly(primary):
         list(range(db.log.retained_lsn, db.log.stable_lsn + 1))
 
 
-def test_recovery_starts_below_truncation(primary):
+def test_recovery_starts_below_truncation(primary, make_backend):
     """Crash after truncation: analysis/redo start at the checkpoint,
     which lives in the archive — recovery must be oblivious."""
     rng, db, rows, base = primary
     db.checkpoint()
     _mix(rng, db, 40)
-    arch = LogArchive(segment_records=32)
+    arch = LogArchive(segment_records=32, backend=make_backend())
     db.log.attach_archive(arch)
     arch.seal(db.log)
     db.log.truncate(db.log.stable_lsn)       # checkpoint now below the base
@@ -108,11 +126,11 @@ def test_recovery_starts_below_truncation(primary):
         assert stats.scan_from <= image.log._base
 
 
-def test_shipping_through_splice(primary):
+def test_shipping_through_splice(primary, make_backend):
     """A subscriber below the truncation base (but above the prune floor)
     is served from archive segments — truncation is invisible to it."""
     rng, db, rows, base = primary
-    arch = LogArchive(segment_records=50)
+    arch = LogArchive(segment_records=50, backend=make_backend())
     db.log.attach_archive(arch)
     arch.seal(db.log)
     db.log.truncate(db.log.stable_lsn)
@@ -198,12 +216,13 @@ def test_restore_targets_before_and_between_snapshots(primary):
         committed_state_oracle(image, base, upto_lsn=early)
 
 
-def test_restore_from_archive_alone(primary):
+def test_restore_from_archive_alone(primary, make_backend):
     """Dead-primary story: sealed segments + snapshots restore with no
     live log at all."""
     rng, db, rows, base = primary
     store = SnapshotStore()
-    arch = Archiver(db, snapshots=store)
+    arch = Archiver(db, archive=LogArchive(backend=make_backend()),
+                    snapshots=store)
     store.take(db, chunk_keys=64, on_chunk=lambda: _mix(rng, db, 2))
     _mix(rng, db, 20)
     arch.run_once()                          # seal through stable
@@ -226,14 +245,15 @@ def test_restore_rejects_unstable_target(primary):
 
 
 # ------------------------------------------------- truncation watermark/bound
-def test_archiver_watermark_and_bounded_memory(primary):
+def test_archiver_watermark_and_bounded_memory(primary, make_backend):
     """min(snapshot horizon, slowest subscriber): the live record count
     stays bounded by the snapshot cadence instead of growing with
     history."""
     rng, db, rows, base = primary
     store = SnapshotStore()
     rs = ReplicaSet(db, snapshots=store)
-    arch = Archiver(db, snapshots=store, shippers=[rs.shipper])
+    arch = Archiver(db, archive=LogArchive(backend=make_backend()),
+                    snapshots=store, shippers=[rs.shipper])
     assert arch.watermark() == 0             # no snapshot yet: all hot
     store.take(db)
     replica = store.restore_replica("r1", page_size=8192, cache_pages=256)
@@ -261,10 +281,11 @@ def test_archiver_watermark_and_bounded_memory(primary):
 
 
 # ------------------------------------------- SnapshotRequired / auto-reseed
-def _pruned_set(rng, db):
+def _pruned_set(rng, db, make_backend):
     store = SnapshotStore()
     rs = ReplicaSet(db, snapshots=store)
-    arch = Archiver(db, archive=LogArchive(segment_records=16),
+    arch = Archiver(db, archive=LogArchive(segment_records=16,
+                                           backend=make_backend()),
                     snapshots=store, shippers=[rs.shipper])
     store.take(db)
     _mix(rng, db, 40)
@@ -275,9 +296,9 @@ def _pruned_set(rng, db):
     return store, rs, arch
 
 
-def test_subscribe_below_horizon_raises(primary):
+def test_subscribe_below_horizon_raises(primary, make_backend):
     rng, db, rows, base = primary
-    store, rs, arch = _pruned_set(rng, db)
+    store, rs, arch = _pruned_set(rng, db, make_backend)
     with pytest.raises(SnapshotRequired) as exc:
         rs.shipper.subscribe("stale", 1)
     assert exc.value.requested_lsn == 1
@@ -297,9 +318,9 @@ def test_subscribe_below_horizon_raises(primary):
         shipper2.poll("ok")
 
 
-def test_add_replica_below_horizon_autoreseeds(primary):
+def test_add_replica_below_horizon_autoreseeds(primary, make_backend):
     rng, db, rows, base = primary
-    store, rs, arch = _pruned_set(rng, db)
+    store, rs, arch = _pruned_set(rng, db, make_backend)
     stale = Replica("stale", page_size=2048, cache_pages=256)
     assert stale.resume_lsn == 1             # fresh standby: below horizon
     rs.add_replica(stale)                    # SnapshotRequired -> reseed
