@@ -1,0 +1,247 @@
+"""Streaming batched redo pipeline benchmark: what one log pass and
+amortized B-tree apply buy over the paper's per-record algorithms.
+
+  1. batched redo throughput — the same crash image recovered with
+     per-record Log0/Log1/Log2 (Algorithms 2/5 verbatim) vs batched Log1
+     (sorted windows through the leaf-resident cursor); the acceptance
+     bound asserts batched Log1 >= 2x per-record Log1 per-record redo
+     throughput on the uniform workload, every variant oracle-checked;
+  2. window sweep — cursor reuse fraction and redo wall vs batch_window,
+     showing where traversal amortization saturates;
+  3. streaming cold restore — `cold_restore` through the windowed
+     decode-and-apply pipeline vs the materializing path: peak decoded-
+     segment residency must stay bounded by the LRU window and peak
+     buffered redo ops by the apply window (asserted), at <= 1.25x the
+     materializing wall time (asserted), oracle-equal (asserted).
+
+Wall-clock comparisons interleave the contenders and take per-side
+minima (this machine's latency drifts across seconds; see media_bench).
+"""
+from __future__ import annotations
+
+import contextlib
+import gc
+import json
+import random
+import tempfile
+import time
+from pathlib import Path
+
+from repro.archive import Archiver, LogArchive, SnapshotStore
+from repro.core import (Strategy, committed_state_oracle, make_key, recover,
+                        recovered_state)
+from repro.core.tc import Database
+from repro.media import DirectoryBackend, cold_restore
+
+from .harness import BenchSetup, build_crash_image
+
+
+@contextlib.contextmanager
+def _quiet_gc():
+    gc.collect()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if was_enabled:
+            gc.enable()
+
+
+def _redo_setup(fast: bool):
+    # n_rows keeps the tree at height 3 even in fast mode — a height-2
+    # tree leaves one internal hop to amortize and understates the win
+    s = BenchSetup(n_rows=30_000 if fast else 50_000,
+                   cache_pages=4096,
+                   ckpt_updates=8_000 if fast else 16_000,
+                   n_ckpts=1, value_size=60,
+                   tracker_interval=100, bg_flush_per_txn=4)
+    image, base, info = build_crash_image(s)
+    oracle = committed_state_oracle(image, base)
+    return s, image, oracle
+
+
+def bench_batched_redo(fast: bool) -> list[dict]:
+    s, image, oracle = _redo_setup(fast)
+    window = 8192
+    variants = [
+        ("Log0", Strategy.LOG0, {}),
+        ("Log1", Strategy.LOG1, {}),
+        ("Log2", Strategy.LOG2, {}),
+        ("Log1-batched", Strategy.LOG1,
+         {"batched": True, "batch_window": window}),
+    ]
+    best: dict[str, object] = {}
+    with _quiet_gc():
+        for name, strat, kw in variants:       # warm decode/ck caches once
+            recover(image, strat, cache_pages=s.cache_pages, **kw)
+        # interleaved minima: 3 rounds for the context rows, 7 for the two
+        # sides of the asserted ratio (this machine's latency drifts, and
+        # the bound must compare algorithms, not scheduler luck)
+        for rnd in range(7):
+            for name, strat, kw in variants:
+                if rnd >= 3 and name not in ("Log1", "Log1-batched"):
+                    continue
+                db, st = recover(image, strat, cache_pages=s.cache_pages,
+                                 **kw)
+                assert recovered_state(db) == oracle, \
+                    f"{name} diverged from the committed-state oracle"
+                prev = best.get(name)
+                if prev is None or st.redo_wall_ms < prev.redo_wall_ms:
+                    best[name] = st
+    rows = []
+    for name, _strat, _kw in variants:
+        st = best[name]
+        us_per_rec = st.redo_wall_ms * 1e3 / max(st.log_records, 1)
+        rows.append({
+            "name": f"recovery_redo/{name}",
+            "log_records": st.log_records,
+            "redo_wall_ms": round(st.redo_wall_ms, 2),
+            "us_per_record": round(us_per_rec, 3),
+            "redone": st.redo.redone,
+            "skipped_dpt": st.redo.skipped_dpt,
+            "skipped_plsn": st.redo.skipped_plsn,
+            "cursor_reuses": st.cursor_reuses,
+            "cursor_traversals": st.cursor_traversals,
+            "us_per_call": us_per_rec,
+            "derived": f"{st.log_records} recs {st.redo_wall_ms:.1f}ms "
+                       f"redone={st.redo.redone} ok=True",
+        })
+    per_rec = best["Log1"].redo_wall_ms
+    batched = best["Log1-batched"].redo_wall_ms
+    speedup = per_rec / max(batched, 1e-9)
+    rows[-1]["speedup_vs_log1"] = round(speedup, 2)
+    rows[-1]["derived"] += f" speedup={speedup:.2f}x"
+    assert speedup >= 2.0, \
+        f"batched Log1 redo throughput only {speedup:.2f}x per-record " \
+        "Log1 — below the 2x acceptance bound"
+    return rows
+
+
+def bench_window_sweep(fast: bool) -> list[dict]:
+    s, image, oracle = _redo_setup(fast)
+    rows = []
+    with _quiet_gc():
+        for window in (64, 1024, 8192):
+            wall, st = float("inf"), None
+            for _ in range(3):
+                db, cand = recover(image, Strategy.LOG1,
+                                   cache_pages=s.cache_pages,
+                                   batched=True, batch_window=window)
+                assert recovered_state(db) == oracle
+                if cand.redo_wall_ms < wall:
+                    wall, st = cand.redo_wall_ms, cand
+            total = st.cursor_reuses + st.cursor_traversals
+            reuse = st.cursor_reuses / max(total, 1)
+            assert st.peak_window_records <= window, \
+                f"window {window}: {st.peak_window_records} records " \
+                "buffered — the redo window is not bounded"
+            rows.append({
+                "name": f"recovery_window/batch={window}",
+                "batch_window": window,
+                "redo_wall_ms": round(wall, 2),
+                "peak_window_records": st.peak_window_records,
+                "cursor_reuse_frac": round(reuse, 3),
+                "us_per_call": wall * 1e3 / max(st.log_records, 1),
+                "derived": f"reuse={reuse:.0%} "
+                           f"peak={st.peak_window_records} ok=True",
+            })
+    return rows
+
+
+def bench_streaming_restore(fast: bool, tmp: Path) -> list[dict]:
+    n_rows = 2_000 if fast else 10_000
+    total_txns = 800 if fast else 2_500
+    cache_segments = 4
+    apply_window = 1024
+    rng = random.Random(41)
+    rows = [(f"k{i:07d}".encode(), rng.randbytes(60)) for i in range(n_rows)]
+    primary = Database(page_size=8192, cache_pages=512,
+                       tracker_interval=100, bg_flush_per_txn=4)
+    primary.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+
+    def drive(n_txns):
+        for _ in range(n_txns):
+            primary.run_txn([("update", "t",
+                              f"k{rng.randrange(n_rows):07d}".encode(),
+                              rng.randbytes(60)) for _ in range(8)])
+
+    backend = DirectoryBackend(tmp / "stream")
+    store = SnapshotStore()
+    arch = Archiver(primary,
+                    archive=LogArchive(segment_records=256, backend=backend,
+                                       cache_segments=cache_segments),
+                    snapshots=store)
+    drive(total_txns // 4)
+    store.take(primary, chunk_keys=512, on_chunk=lambda: drive(1))
+    drive(3 * total_txns // 4)          # long redo tail: the memory story
+    arch.run_once()
+    target = arch.archive.archived_upto
+    oracle = committed_state_oracle(primary.crash(), base, upto_lsn=target)
+
+    t_stream = t_mat = float("inf")
+    st_stream = st_mat = None
+    with _quiet_gc():
+        for _ in range(5):
+            t0 = time.perf_counter()
+            db_s, cand_s = cold_restore(backend, target_lsn=target,
+                                        page_size=4096,
+                                        cache_segments=cache_segments,
+                                        apply_window=apply_window)
+            w = time.perf_counter() - t0
+            if w < t_stream:
+                t_stream, st_stream = w, cand_s
+            assert dict(db_s.scan_all()) == oracle, "streaming diverged"
+            t0 = time.perf_counter()
+            db_m, cand_m = cold_restore(backend, target_lsn=target,
+                                        page_size=4096, streaming=False)
+            w = time.perf_counter() - t0
+            if w < t_mat:
+                t_mat, st_mat = w, cand_m
+            assert dict(db_m.scan_all()) == oracle, "materializing diverged"
+    # the memory bounds the pipeline exists for.  The +1 is the insert
+    # transient (peak samples before eviction — deliberately, so a broken
+    # eviction discipline CAN fail this; caller-side materialization is
+    # what the peak_buffered_ops bounds below catch)
+    assert st_stream.peak_cached_segments <= cache_segments + 1, \
+        f"{st_stream.peak_cached_segments} decoded segments resident — " \
+        f"the {cache_segments}-segment LRU window did not bound decode"
+    bound = apply_window + 64           # window + in-flight straddlers
+    assert st_stream.peak_buffered_ops <= bound, \
+        f"streaming restore buffered {st_stream.peak_buffered_ops} ops " \
+        f"(> {bound}): the apply window is not bounding memory"
+    assert st_stream.peak_buffered_ops < st_mat.peak_buffered_ops, \
+        "streaming restore holds no fewer redo records than materializing"
+    ratio = t_stream / max(t_mat, 1e-9)
+    assert ratio <= 1.25, \
+        f"streaming restore {ratio:.2f}x materializing exceeds the " \
+        "1.25x wall-time bound"
+    return [{
+        "name": "recovery_stream_restore/vs_materializing",
+        "replayed_txns": st_stream.replayed_txns,
+        "stream_ms": round(t_stream * 1e3, 1),
+        "materializing_ms": round(t_mat * 1e3, 1),
+        "ratio": round(ratio, 2),
+        "stream_peak_ops": st_stream.peak_buffered_ops,
+        "materializing_peak_ops": st_mat.peak_buffered_ops,
+        "peak_cached_segments": st_stream.peak_cached_segments,
+        "us_per_call": t_stream * 1e6,
+        "derived": f"stream={t_stream * 1e3:.0f}ms "
+                   f"mat={t_mat * 1e3:.0f}ms {ratio:.2f}x "
+                   f"ops={st_stream.peak_buffered_ops}/"
+                   f"{st_mat.peak_buffered_ops} "
+                   f"segs={st_stream.peak_cached_segments} ok=True",
+    }]
+
+
+def run(fast: bool = False) -> dict:
+    with tempfile.TemporaryDirectory(prefix="recovery_bench_") as tmpdir:
+        rows = (bench_batched_redo(fast)
+                + bench_window_sweep(fast)
+                + bench_streaming_restore(fast, Path(tmpdir)))
+    return {"name": "recovery_pipeline", "rows": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(fast=True), indent=1))

@@ -2,9 +2,12 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 
-Prints ``name,us_per_call,derived`` CSV lines per benchmark row, and writes
-full JSON to artifacts/bench/.  --full uses the paper-scaled setup (slower);
-the default "fast" mode keeps the whole suite under ~3 minutes.
+Prints ``name,us_per_call,derived`` CSV lines per benchmark row, writes
+full JSON to artifacts/bench/, and appends one machine-readable
+``artifacts/bench_<n>.json`` summary per run (monotonic ``n``) so the
+perf trajectory across commits is diffable without parsing stdout.
+--full uses the paper-scaled setup (slower); the default "fast" mode
+keeps the whole suite under ~3 minutes.
 
 Failure discipline: each module runs to completion independently (one
 broken table must not hide the others' numbers), but any failure — an
@@ -14,25 +17,67 @@ runner exit non-zero, so CI cannot greenlight a diverging benchmark.
 from __future__ import annotations
 
 import json
+import re
 import sys
+import time
 import traceback
 from pathlib import Path
 
-ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+ART_ROOT = Path(__file__).resolve().parents[1] / "artifacts"
+ART = ART_ROOT / "bench"
+
+
+def _next_run_index() -> int:
+    mx = 0
+    for p in ART_ROOT.glob("bench_*.json"):
+        m = re.fullmatch(r"bench_(\d+)\.json", p.name)
+        if m:
+            mx = max(mx, int(m.group(1)))
+    return mx + 1
+
+
+def write_summary(results: list[dict], failures: list[str],
+                  fast: bool) -> Path:
+    """One flat, machine-readable record of this run: every row's key
+    metrics plus per-module status — the perf-trajectory unit."""
+    summary = {
+        "run": _next_run_index(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "mode": "fast" if fast else "full",
+        "modules": [
+            {"name": out["name"], "rows": len(out["rows"]), "ok": True}
+            for out in results
+        ] + [{"name": name, "rows": 0, "ok": False} for name in failures],
+        "failures": failures,
+        "rows": [
+            {"module": out["name"], **{
+                key: row[key] for key in
+                ("name", "us_per_call", "derived", "speedup",
+                 "speedup_vs_log1", "ratio", "recs_per_s",
+                 "bytes_per_record")
+                if key in row}}
+            for out in results for row in out["rows"]
+        ],
+    }
+    path = ART_ROOT / f"bench_{summary['run']}.json"
+    path.write_text(json.dumps(summary, indent=1))
+    return path
 
 
 def main() -> None:
     fast = "--full" not in sys.argv
     from . import (appendix_d_variants, archive_bench, fig2_cache_sweep,
                    fig3_ckpt_interval, kernel_bench, media_bench,
-                   parallel_apply_bench, replication_bench, roofline_table,
-                   trainstore_bench)
+                   parallel_apply_bench, recovery_bench, replication_bench,
+                   roofline_table, trainstore_bench)
     ART.mkdir(parents=True, exist_ok=True)
     failures: list[str] = []
+    results: list[dict] = []
     print("name,us_per_call,derived")
     for mod in (fig2_cache_sweep, fig3_ckpt_interval, appendix_d_variants,
-                replication_bench, parallel_apply_bench, archive_bench,
-                media_bench, trainstore_bench, kernel_bench, roofline_table):
+                recovery_bench, replication_bench, parallel_apply_bench,
+                archive_bench, media_bench, trainstore_bench, kernel_bench,
+                roofline_table):
         try:
             out = mod.run(fast=fast)
         except Exception:
@@ -40,6 +85,7 @@ def main() -> None:
             print(f"# FAILED {mod.__name__}:", file=sys.stderr)
             traceback.print_exc()
             continue
+        results.append(out)
         (ART / f"{out['name']}.json").write_text(json.dumps(out, indent=1))
         for row in out["rows"]:
             if "us_per_call" in row:
@@ -70,7 +116,9 @@ def main() -> None:
                       f"{row.get('shape','')},"
                       f"{row.get('compute_s', 0)*1e6:.0f},"
                       f"\"dom={row.get('dominant','')}\"")
-    print("# full JSON written to artifacts/bench/", file=sys.stderr)
+    summary_path = write_summary(results, failures, fast)
+    print(f"# full JSON written to artifacts/bench/; run summary at "
+          f"{summary_path.relative_to(ART_ROOT.parent)}", file=sys.stderr)
     if failures:
         print(f"# {len(failures)} benchmark module(s) FAILED: "
               f"{', '.join(failures)}", file=sys.stderr)

@@ -34,9 +34,9 @@ from typing import Iterator, Optional
 from ..core.log import LogManager, TruncatedLogError
 from ..core.records import LSN, LogRec
 from ..media.backend import MediaBackend, MemoryBackend
-from ..media.codec import (decode_archive_meta, decode_segment,
-                           decode_segment_header, encode_archive_meta,
-                           encode_segment)
+from ..media.codec import (FEAT_ZLIB, decode_archive_meta, decode_segment,
+                           decode_segment_features, decode_segment_header,
+                           encode_archive_meta, encode_segment)
 from ..media.errors import CorruptSegmentError
 
 SEG_PREFIX = "seg/"
@@ -65,10 +65,18 @@ class Segment:
 class LogArchive:
     def __init__(self, segment_records: int = 1024,
                  backend: Optional[MediaBackend] = None,
-                 cache_segments: int = 8):
+                 cache_segments: int = 8, compress: bool = False):
         self.segment_records = segment_records
         self.backend = backend if backend is not None else MemoryBackend()
         self.cache_segments = cache_segments
+        # per-segment zlib compression (codec feature byte).  Applies to
+        # blobs this archive writes: new segments, and a short tail
+        # segment when seal() extends it (that re-encode adopts the
+        # current setting).  Full sealed segments are immutable, and
+        # mixed archives read fine because the flag travels per blob;
+        # LogArchive.load adopts the newest segment's feature byte so the
+        # setting survives a reopen.
+        self.compress = compress
         # index/offset scheme (the LogManager._base idiom): pruning only
         # advances _head past dead entries — no per-prune list shuffling —
         # and the storage compacts amortized-O(1) once half of it is dead
@@ -84,24 +92,41 @@ class LogArchive:
         self._cache: OrderedDict[str, tuple] = OrderedDict()
         self.segment_decodes = 0
         self.cache_hits = 0
+        # high-water mark of decoded segments resident at once — what the
+        # streaming-restore memory bound is asserted against
+        self.peak_cached_segments = 0
 
     # ----------------------------------------------------------- loading
     @classmethod
     def load(cls, backend: MediaBackend, *, segment_records: int = 1024,
-             cache_segments: int = 8) -> "LogArchive":
+             cache_segments: int = 8,
+             compress: Optional[bool] = None) -> "LogArchive":
         """Rebuild the archive index from a backend alone — the fresh-
         process path.  Reads only segment *headers*; records decode
         lazily on first touch.  Validates that the sealed runs are
         LSN-contiguous (a gap means blobs were lost behind the
-        manifest's back, and serving around it would be a silent hole)."""
+        manifest's back, and serving around it would be a silent hole).
+
+        ``compress=None`` (default) adopts the newest sealed segment's
+        feature byte, so a compressed archive keeps compressing across
+        restarts instead of silently resetting; pass an explicit bool to
+        override."""
         arch = cls(segment_records=segment_records, backend=backend,
-                   cache_segments=cache_segments)
+                   cache_segments=cache_segments, compress=bool(compress))
         entries = []
+        newest_feat = 0
+        newest_lo = -1
         for name in backend.list(SEG_PREFIX):
-            # 64 bytes cover magic + version + the framed (lo, hi, count)
-            # header; records decode lazily on first touch
-            lo, hi, _count = decode_segment_header(backend.get_head(name, 64))
+            # 64 bytes cover magic + version + feature byte + the framed
+            # (lo, hi, count) header; records decode lazily on first touch
+            head = backend.get_head(name, 64)
+            lo, hi, _count = decode_segment_header(head)
             entries.append(Segment(lo, hi, name))
+            if compress is None and lo > newest_lo:
+                newest_lo = lo
+                newest_feat = decode_segment_features(head)
+        if compress is None:
+            arch.compress = bool(newest_feat & FEAT_ZLIB)
         entries.sort(key=lambda s: s.lo)
         for prev, nxt in zip(entries, entries[1:]):
             if nxt.lo != prev.hi + 1:
@@ -175,7 +200,9 @@ class LogArchive:
             if head:
                 merged = list(self._records(len(self._segs) - 1)) + head
                 grown = Segment(last.lo, last.hi + len(head), last.name)
-                self.backend.put(grown.name, encode_segment(merged))
+                self.backend.put(grown.name,
+                                 encode_segment(merged,
+                                                compress=self.compress))
                 self._segs[-1] = grown
                 self._cache[grown.name] = tuple(merged)
                 self._cache.move_to_end(grown.name)
@@ -185,7 +212,8 @@ class LogArchive:
                            recs[self.segment_records:])
             seg = Segment(chunk[0].lsn, chunk[-1].lsn,
                           _seg_name(chunk[0].lsn))
-            self.backend.put(seg.name, encode_segment(chunk))
+            self.backend.put(seg.name,
+                             encode_segment(chunk, compress=self.compress))
             self._segs.append(seg)
             self._los.append(seg.lo)
         self._archived_upto = hi
@@ -202,8 +230,17 @@ class LogArchive:
         return -1
 
     def _shrink_cache(self) -> None:
+        # the peak samples BEFORE eviction: a regression in the eviction
+        # discipline (or a bypass of it) must be able to push the peak
+        # past the cap, otherwise the streaming-restore residency assert
+        # holds by construction and guards nothing
+        if len(self._cache) > self.peak_cached_segments:
+            self.peak_cached_segments = len(self._cache)
         while len(self._cache) > max(self.cache_segments, 0):
             self._cache.popitem(last=False)
+
+    def reset_cache_peak(self) -> None:
+        self.peak_cached_segments = len(self._cache)
 
     def _records(self, i: int) -> tuple:
         """Decoded records of ``_segs[i]``, through the LRU."""

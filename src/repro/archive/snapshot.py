@@ -53,7 +53,8 @@ from typing import Callable, Optional, Union
 
 from ..core.dc import split_key
 from ..core.log import LogManager
-from ..core.records import (LSN, NULL_LSN, CommitRec, SnapshotRec, UpdateRec)
+from ..core.records import (LSN, NULL_LSN, AbortRec, CommitRec, SnapshotRec,
+                            UpdateRec)
 from ..core.tc import CrashImage, Database
 from ..media.backend import MediaBackend
 from ..media.codec import decode_snapshot, encode_snapshot
@@ -94,6 +95,14 @@ class RestoreStats:
     replayed_txns: int = 0
     replayed_ops: int = 0
     wall_ms: float = 0.0
+    streaming: bool = False
+    # peak redo records resident at once (in-flight txn buffers + the
+    # pending apply window) — the memory the streaming path bounds; the
+    # materializing path reports its full updates-dict residency here
+    peak_buffered_ops: int = 0
+    # peak decoded segments in the archive LRU during the redo scan
+    # (0 when the scan did not read through an archive)
+    peak_cached_segments: int = 0
 
 
 def _log_of(source) -> LogManager:
@@ -224,25 +233,40 @@ class SnapshotStore:
     # --------------------------------------------------------------- restore
     def restore(self, target_lsn: LSN,
                 source: Union[Database, CrashImage, LogManager, None] = None,
-                base_rows=None, **db_kwargs) -> tuple[Database, RestoreStats]:
+                base_rows=None, *, streaming: bool = True,
+                apply_window: int = 1024,
+                **db_kwargs) -> tuple[Database, RestoreStats]:
         """Point-in-time restore: a writable ``Database`` whose state is
         exactly the committed prefix <= ``target_lsn``.
 
         Loads the newest snapshot whose window closed at or before the
         target, then replays every transaction with ``begin_lsn < commit
-        <= target_lsn`` through a fresh TC (one local transaction per
-        source transaction, LSN order — the replica apply discipline).
-        ``source`` is the log to replay from (``Database`` / ``CrashImage``
-        / ``LogManager``); omitted, the attached archive serves alone,
-        which is the dead-primary story: sealed segments + a snapshot are
-        enough.  ``db_kwargs`` pick the new geometry (page_size, ...) —
-        restore is relayout.
+        <= target_lsn`` through a fresh TC.  ``source`` is the log to
+        replay from (``Database`` / ``CrashImage`` / ``LogManager``);
+        omitted, the attached archive serves alone, which is the
+        dead-primary story: sealed segments + a snapshot are enough.
+        ``db_kwargs`` pick the new geometry (page_size, ...) — restore is
+        relayout.
+
+        ``streaming=True`` (default) runs the heal-replay as a bounded-
+        memory pipeline: one pass over the redo scan, buffering only
+        in-flight transactions (dropped at their abort, or at a commit at
+        or below the snapshot begin) and batching committed ops into
+        ``apply_window``-sized runs through the leaf-resident batched
+        engine (``tc.apply_shipped_batch``).  Peak redo residency is the
+        apply window plus the in-flight straddlers — independent of
+        history length — and archive reads stay behind the decoded-segment
+        LRU, so an archive much larger than RAM restores in bounded
+        memory.  ``streaming=False`` keeps the materializing shape (full
+        updates dict, one local transaction per source transaction) as
+        the oracle/benchmark reference.
 
         ``base_rows``: composite-key rows present *before* LSN 1 — the
         initial ``bulk_build`` load, which is unlogged by design.  Only the
         no-eligible-snapshot full-replay path needs it (a snapshot taken at
         load time is the cleaner equivalent and makes it moot)."""
         t0 = time.perf_counter()
+        archive = None
         if source is not None:
             log = _log_of(source)
             if target_lsn > log.stable_lsn:
@@ -251,6 +275,7 @@ class SnapshotStore:
                     f"{log.stable_lsn} is stable (the unforced tail is not "
                     "restorable — it can still be disowned)")
             scan = log.scan
+            archive = log.archive
         elif self.archive is not None:
             if target_lsn > self.archive.archived_upto:
                 raise ValueError(
@@ -259,6 +284,7 @@ class SnapshotStore:
                     f"{self.archive.archived_upto} (pass the live log or "
                     "crash image as source)")
             scan = self.archive.scan
+            archive = self.archive
         else:
             raise ValueError("restore needs a log source: pass a Database/"
                              "CrashImage/LogManager, or attach a LogArchive")
@@ -269,21 +295,93 @@ class SnapshotStore:
         stats = RestoreStats(target_lsn=target_lsn,
                              snapshot_id=snap.snapshot_id if snap else None,
                              snapshot_rows=snap.n_rows if snap else 0,
-                             redo_from=redo_from)
-
-        updates: dict[int, list[UpdateRec]] = {}
-        commits: list[tuple[LSN, int]] = []       # LSN order by construction
-        for rec in scan(redo_from, target_lsn):
-            if isinstance(rec, UpdateRec):
-                updates.setdefault(rec.txn, []).append(rec)
-            elif isinstance(rec, CommitRec) and rec.lsn > begin:
-                commits.append((rec.lsn, rec.txn))
+                             redo_from=redo_from, streaming=streaming)
+        if archive is not None:
+            archive.reset_cache_peak()
 
         db = Database(**db_kwargs)
         seed = list(snap.rows) if snap else \
             sorted(dict(base_rows or {}).items())
         db.dc.bulk_build(seed)
         db.tc.checkpoint()
+
+        if streaming:
+            self._heal_streaming(db, scan, redo_from, target_lsn, begin,
+                                 apply_window, stats)
+        else:
+            self._heal_materializing(db, scan, redo_from, target_lsn, begin,
+                                     stats)
+        if archive is not None:
+            stats.peak_cached_segments = archive.peak_cached_segments
+        stats.wall_ms = (time.perf_counter() - t0) * 1e3
+        return db, stats
+
+    @staticmethod
+    def _heal_streaming(db: Database, scan, redo_from: LSN, target_lsn: LSN,
+                        begin: LSN, apply_window: int,
+                        stats: RestoreStats) -> None:
+        """One pass, bounded memory: buffer in-flight transactions only,
+        release each at its commit into a pending window that flushes
+        through the batched apply engine as it fills.  Equivalent to the
+        materializing path: the same transactions replay (commit in
+        ``(begin, target]``), per-key op order is preserved by the
+        engine's (key, lsn) sort, and ops are absolute after-images, so
+        fusing source-transaction boundaries into window-sized local
+        transactions cannot change the final committed state."""
+        bufs: dict[int, list[UpdateRec]] = {}
+        pending: list[UpdateRec] = []
+        buffered = 0                       # ops across bufs (running count)
+
+        def flush_pending() -> None:
+            if not pending:
+                return
+            local = db.tc.begin()
+            db.tc.apply_shipped_batch(local, pending)
+            db.tc.commit(local)
+            pending.clear()
+
+        for rec in scan(redo_from, target_lsn):
+            if isinstance(rec, UpdateRec):
+                bufs.setdefault(rec.txn, []).append(rec)
+                buffered += 1
+                if buffered + len(pending) > stats.peak_buffered_ops:
+                    stats.peak_buffered_ops = buffered + len(pending)
+            elif isinstance(rec, AbortRec):
+                buffered -= len(bufs.pop(rec.txn, ()))
+            elif isinstance(rec, CommitRec):
+                ops = bufs.pop(rec.txn, None)
+                if ops is not None:
+                    buffered -= len(ops)
+                if rec.lsn <= begin:
+                    continue               # fully inside the snapshot
+                stats.replayed_txns += 1
+                if ops:
+                    stats.replayed_ops += len(ops)
+                    pending.extend(ops)
+                    if len(pending) >= apply_window:
+                        flush_pending()
+        flush_pending()
+        # leftover bufs are losers / post-target txns: dropped, as in the
+        # materializing path (their commits never entered the range)
+
+    @staticmethod
+    def _heal_materializing(db: Database, scan, redo_from: LSN,
+                            target_lsn: LSN, begin: LSN,
+                            stats: RestoreStats) -> None:
+        """The pre-pipeline shape, kept as the reference the streaming
+        path is benchmarked and property-tested against: materialize every
+        update in the redo range, then replay one local transaction per
+        source transaction in commit-LSN order."""
+        updates: dict[int, list[UpdateRec]] = {}
+        commits: list[tuple[LSN, int]] = []       # LSN order by construction
+        n_updates = 0
+        for rec in scan(redo_from, target_lsn):
+            if isinstance(rec, UpdateRec):
+                updates.setdefault(rec.txn, []).append(rec)
+                n_updates += 1
+            elif isinstance(rec, CommitRec) and rec.lsn > begin:
+                commits.append((rec.lsn, rec.txn))
+        stats.peak_buffered_ops = n_updates
         for _lsn, txn in commits:
             ops = updates.get(txn, ())
             local = db.tc.begin()
@@ -292,8 +390,6 @@ class SnapshotStore:
             db.tc.commit(local)
             stats.replayed_txns += 1
             stats.replayed_ops += len(ops)
-        stats.wall_ms = (time.perf_counter() - t0) * 1e3
-        return db, stats
 
     def restore_replica(self, replica_id: str, *,
                         target_lsn: Optional[LSN] = None,

@@ -5,10 +5,10 @@ Public surface:
   Strategy / recover / committed_state_oracle / recovered_state
   DPT / build_dpt_sql / build_dpt_logical
 """
-from .btree import BTree
+from .btree import BTree, LeafCursor
 from .bufferpool import BufferPool
 from .dc import DataComponent, make_key, split_key, table_bounds, table_range
-from .dpt import DPT, build_dpt_logical, build_dpt_sql
+from .dpt import DPT, LogicalDPTBuilder, build_dpt_logical, build_dpt_sql
 from .log import LogManager, TruncatedLogError
 from .pages import PAGE_SIZE, Page
 from .records import (LSN, NULL_LSN, NULL_PID, PID, BWRec, CLRRec, CommitRec,
@@ -19,9 +19,9 @@ from .storage import DiskModel, IOSim, IOStats, PageStore
 from .tc import CrashImage, Database, TransactionalComponent
 
 __all__ = [
-    "BTree", "BufferPool", "DataComponent", "make_key", "split_key",
-    "table_bounds", "table_range", "DPT", "build_dpt_logical",
-    "build_dpt_sql",
+    "BTree", "LeafCursor", "BufferPool", "DataComponent", "make_key",
+    "split_key", "table_bounds", "table_range", "DPT", "LogicalDPTBuilder",
+    "build_dpt_logical", "build_dpt_sql",
     "LogManager", "TruncatedLogError", "PAGE_SIZE", "Page",
     "LSN", "NULL_LSN", "NULL_PID", "PID", "BWRec", "CLRRec", "CommitRec",
     "DeltaRec", "RecKind", "SMORec", "SnapshotRec", "UpdateRec",

@@ -27,6 +27,64 @@ from .pages import PAGE_SIZE, Page, empty_internal, empty_leaf
 from .records import LSN, NULL_LSN, NULL_PID, PID, SMORec
 
 
+class LeafCursor:
+    """Amortizes root-to-leaf traversal across a sorted run of keys.
+
+    ``seek(key)`` returns the PID of the leaf owning ``key`` *without*
+    fetching the leaf page — the caller's DPT test can prune the record
+    before any data-page IO, exactly like ``redo_with_dpt``.  While keys
+    stay inside the current leaf's separator interval ``(lo, hi]`` the
+    cached PID is returned with two byte comparisons; only a key past the
+    interval re-traverses the internal levels.  This is the logical
+    analogue of ARIES' page-at-a-time redo locality: a batch sorted by
+    (table, key) turns N traversals over one leaf into one.
+
+    The cursor caches no leaf *page* reference across mutations it cannot
+    see; ``invalidate()`` must be called after any structure modification
+    (split / root growth) because separators may have moved.
+    """
+
+    __slots__ = ("tree", "pid", "lo", "hi", "traversals", "reuses")
+
+    def __init__(self, tree: "BTree"):
+        self.tree = tree
+        self.pid: PID = NULL_PID
+        self.lo: Optional[bytes] = None     # exclusive lower separator
+        self.hi: Optional[bytes] = None     # inclusive upper separator
+        self.traversals = 0
+        self.reuses = 0
+
+    def seek(self, key: bytes) -> PID:
+        if (self.pid != NULL_PID
+                and (self.lo is None or key > self.lo)
+                and (self.hi is None or key <= self.hi)):
+            self.reuses += 1
+            return self.pid
+        tree = self.tree
+        pool = tree.pool
+        pid = tree.root_pid
+        lo: Optional[bytes] = None
+        hi: Optional[bytes] = None
+        for _ in range(tree.height - 1):
+            node = pool.get(pid)
+            idx = bisect.bisect_left(node.keys, key)
+            # child idx owns (keys[idx-1], keys[idx]]; each level's bounds
+            # are contained in the parent's, so present separators are
+            # always the tighter ones
+            if idx > 0:
+                lo = node.keys[idx - 1]
+            if idx < len(node.keys):
+                hi = node.keys[idx]
+            pid = node.children[idx]
+        self.pid, self.lo, self.hi = pid, lo, hi
+        self.traversals += 1
+        return pid
+
+    def invalidate(self) -> None:
+        self.pid = NULL_PID
+        self.lo = self.hi = None
+
+
 class BTree:
     def __init__(self, pool: BufferPool, log: LogManager,
                  root_pid: PID = NULL_PID, height: int = 1,
@@ -125,7 +183,7 @@ class BTree:
         def rec(pid: PID):
             node = self.pool.get(pid)
             if node.is_leaf:
-                out.extend(sorted(node.records.items()))
+                out.extend(node.sorted_items())
             else:
                 for c in node.children:
                     rec(c)
@@ -148,7 +206,7 @@ class BTree:
         def walk(pid: PID) -> bool:          # True = stop the whole scan
             node = self.pool.get(pid)
             if node.is_leaf:
-                for k, v in sorted(node.records.items()):
+                for k, v in node.sorted_items():
                     if hi is not None and k >= hi:
                         return True
                     if lo is None or k >= lo:
@@ -165,6 +223,13 @@ class BTree:
         walk(self.root_pid)
         return out
 
+    # ---------------------------------------------------------------- cursor
+    def cursor(self) -> "LeafCursor":
+        """Leaf-resident cursor for batched apply (``DataComponent.
+        apply_batch``): keys presented in sorted order reuse the current
+        leaf instead of re-traversing from the root."""
+        return LeafCursor(self)
+
     # ------------------------------------------------------------------ SMO
     def _split(self, path: list[PID], key: bytes) -> tuple[SMORec, dict[PID, Page]]:
         """Split the leaf on ``path`` (and ancestors as needed).  Returns the
@@ -180,7 +245,7 @@ class BTree:
         leaf_pid = path[-1]
         leaf = self.pool.get(leaf_pid)
         new_leaf = empty_leaf(self.pool.store.allocate_pid())
-        items = sorted(leaf.records.items())
+        items = leaf.sorted_items()
         # Separator choice ("keys <= sep stay left"; sep need not be a stored
         # key).  Append-beyond-range gets an empty right page (bulk-append /
         # state-chunk pattern); prepend-below-range an empty left page;
@@ -194,7 +259,9 @@ class BTree:
             half = max(1, len(items) // 2)
             sep = items[half - 1][0]
         leaf.records = dict(items[:half])
+        leaf.invalidate_sorted()
         new_leaf.records = dict(items[half:])
+        new_leaf.invalidate_sorted()
         new_leaf.plsn = leaf.plsn         # data state inherited, plsn preserved
         leaf.slsn = lsn
         new_leaf.slsn = lsn

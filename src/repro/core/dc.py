@@ -9,23 +9,43 @@ tables, and then to a leaf PID.
 """
 from __future__ import annotations
 
+import bisect
 import struct
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .btree import BTree
+from .btree import BTree, LeafCursor
 from .bufferpool import BufferPool
 from .delta_log import BWAccumulator, DeltaAccumulator
-from .dpt import DPT, build_dpt_logical
+from .dpt import DPT, LogicalDPTBuilder, build_dpt_logical
 from .log import LogManager
 from .records import (LSN, NULL_LSN, NULL_PID, PID, CLRRec, DeltaRec, LogRec,
                       RecKind, RSSPRec, SMORec, UpdateRec)
 from .storage import PageStore
 
 
+# length-prefixed table headers, memoized: make_key is on every logical
+# hot path (apply, redo, batch sort) and the prefix only depends on the
+# table name (bounded set)
+_TABLE_PREFIX: dict = {}
+
+
 def make_key(table: str, key: bytes) -> bytes:
-    t = table.encode()
-    return struct.pack("<H", len(t)) + t + key
+    p = _TABLE_PREFIX.get(table)
+    if p is None:
+        t = table.encode()
+        p = _TABLE_PREFIX[table] = struct.pack("<H", len(t)) + t
+    return p + key
+
+
+def rec_key(rec) -> bytes:
+    """Composite tree key of an Update/CLR record, memoized on the record
+    (``rec.ck``) — the identity never changes after append and every
+    redo / apply / batch-sort pass needs it."""
+    ck = rec.ck
+    if ck is None:
+        ck = rec.ck = make_key(rec.table, rec.key)
+    return ck
 
 
 def split_key(composite: bytes) -> tuple[str, bytes]:
@@ -99,6 +119,10 @@ class DataComponent:
         self.last_delta_tc_lsn: LSN = NULL_LSN
         self.pf_list: list[PID] = []
         self.redo_stats = RedoStats()
+        # first PID allocated *during* recovery redo (set by ``recover``):
+        # pages at or above it were (re-)born by redo-time splits and have
+        # no DPT entry, so the DPT test must not prune ops that land there
+        self.redo_pid_floor: PID = 1 << 62
 
     # ----------------------------------------------------------- bootstrap
     def bootstrap(self) -> None:
@@ -155,7 +179,7 @@ class DataComponent:
     def apply(self, rec: UpdateRec) -> None:
         """Execute a logical operation; stamps the touched PID back onto the
         (shared prototype) log record so the physiological path can use it."""
-        k = make_key(rec.table, rec.key)
+        k = rec_key(rec)
         if rec.op == RecKind.DELETE:
             rec.pid = self.btree.delete(k, rec.lsn)
         else:
@@ -164,7 +188,7 @@ class DataComponent:
             self.delta.applied_lsn = rec.lsn
 
     def apply_clr(self, rec: CLRRec) -> None:
-        k = make_key(rec.table, rec.key)
+        k = rec_key(rec)
         if rec.op == RecKind.DELETE or rec.after is None:
             rec.pid = self.btree.delete(k, rec.lsn)
         else:
@@ -225,12 +249,21 @@ class DataComponent:
             self.btree.root_pid = rssp.root_pid
             self.btree.height = rssp.height
             self.store.set_next_pid(rssp.next_pid)
-        for rec in self.log.scan(scan_from):
+        # one fused scan serves both DC recovery jobs: SMO replay (from
+        # ``scan_from``) and DPT construction (Delta records above
+        # ``rssp_lsn``) — this used to be two full passes over the log.
+        dpt_builder = LogicalDPTBuilder(rssp_lsn) if build_dpt else None
+        for rec in self.log.scan(min(scan_from, rssp_lsn + 1)):
             if isinstance(rec, SMORec):
-                self.btree.redo_smo(rec)
-        if build_dpt:
+                if rec.lsn >= scan_from:
+                    self.btree.redo_smo(rec)
+            elif dpt_builder is not None and isinstance(rec, DeltaRec) \
+                    and rec.lsn > rssp_lsn:
+                dpt_builder.feed(rec)
+        if dpt_builder is not None:
             self.dpt, self.last_delta_tc_lsn, self.pf_list = \
-                build_dpt_logical(self.log, rssp_lsn)
+                dpt_builder.finish()
+        self.redo_pid_floor = self.store.next_pid
         if preload_index:
             pids = self.index_pids_from_meta()
             if self.pool.iosim is not None:
@@ -245,7 +278,7 @@ class DataComponent:
     def redo_basic(self, rec: UpdateRec) -> None:
         """Algorithm 2: traverse, fetch, pLSN test, maybe re-execute."""
         self.redo_stats.submitted += 1
-        k = make_key(rec.table, rec.key)
+        k = rec_key(rec)
         pid = self.btree.find_leaf(k)
         page = self.pool.get(pid)
         if rec.lsn <= page.plsn:
@@ -256,7 +289,7 @@ class DataComponent:
     def redo_with_dpt(self, rec: UpdateRec) -> None:
         """Algorithm 5: DPT-assisted logical redo with log-tail fallback."""
         self.redo_stats.submitted += 1
-        k = make_key(rec.table, rec.key)
+        k = rec_key(rec)
         pid = self.btree.find_leaf(k)
         if rec.lsn <= self.last_delta_tc_lsn:
             e = self.dpt.find(pid)
@@ -270,6 +303,161 @@ class DataComponent:
             self.redo_stats.skipped_plsn += 1
             return
         self._reexecute(rec, k, pid)
+
+    # ----------------------------------------------------- batched apply
+    def apply_batch(self, recs, *, mode: str = "execute",
+                    cursor: Optional[LeafCursor] = None) -> int:
+        """Batched logical apply: sort a window of records by
+        ``(composite key, lsn)`` and walk it with a leaf-resident cursor,
+        amortizing index traversal across consecutive ops to the same leaf
+        (the paper's Section 5 locality optimizations, made logical).
+        Returns the number of ops executed (non-skipped).
+
+        Modes select the redo tests:
+
+          execute  replica / restore apply — no tests, every op executes
+                   (the records are committed absolute after-images that
+                   were just appended to the local log);
+          basic    batched Log0 — page-LSN idempotence test only;
+          dpt      batched Log1/Log2 — DPT prune + page-LSN test.
+
+        Reordering within the window is sound because per-key LSN order is
+        preserved (the sort is keyed on (key, lsn)) and ops carry absolute
+        after-images: keys commute, re-execution is idempotent.  The
+        page-LSN test, however, must not compare against a pLSN advanced
+        by *this* window's out-of-order ops — so each leaf "group" captures
+        its pre-window pLSN on entry and tests the whole group against
+        that base.  A split during the group inherits the leaf's data
+        state (and pLSN), so keys still inside the group's original
+        separator interval keep the captured base; a key beyond it enters
+        a fresh group and reads a fresh (window-untouched — keys ascend)
+        base.  Across windows the test is exact again: windows partition
+        the log in LSN order, so a later window's LSNs all exceed any pLSN
+        this one can write.
+
+        In dpt mode, a missing DPT entry prunes only pages that existed
+        when redo began (``redo_pid_floor``): pages born from redo-time
+        splits are absent from the DPT by construction, and — unlike the
+        per-record LSN-order path, whose repeat-of-history guarantees
+        their images — a key-ordered batch may reach them before their
+        content does, so they must repeat history unconditionally."""
+        # ``recs`` must arrive in stream (LSN) order — every caller is a
+        # log-ordered window — so the stable sort on the composite key
+        # alone preserves per-key LSN order without comparing LSNs
+        rs = sorted(recs, key=rec_key)
+        ks = [r.ck for r in rs]           # parallel key array for the span
+        # bisects (rec_key above filled every ck)
+        cur = cursor if cursor is not None else self.btree.cursor()
+        stats = self.redo_stats
+        pool = self.pool
+        if mode not in ("execute", "basic", "dpt"):
+            raise ValueError(f"unknown apply_batch mode {mode!r}")
+        test_plsn = mode != "execute"
+        dpt_mode = mode == "dpt"
+        delta = self.delta if mode == "execute" else None
+        dpt_find = self.dpt.find if dpt_mode else None
+        tc_lsn = self.last_delta_tc_lsn
+        floor = self.redo_pid_floor
+        delete_op = RecKind.DELETE
+        page_size = self.page_size
+        ALWAYS = 1 << 62          # group rlsn: no DPT entry, pre-redo page
+        NEVER = -1                # group rlsn: redo-born page, never prune
+        bis_right = bisect.bisect_right
+
+        # local tallies, folded into redo_stats once at the end — attribute
+        # read-modify-writes per record are measurable at window scale
+        sub = skd = skp = red = tails = executed = 0
+
+        # The sorted window is processed leaf *span* at a time: one
+        # traversal, one DPT consult, one page fetch and one pre-window
+        # pLSN ("base") capture per span; the span end comes from one
+        # bisect against the leaf's upper separator, so a pruned record —
+        # the common case — costs two integer comparisons
+        n = len(ks)
+        i = 0
+        carry = False                     # split mid-span: carry the base
+        carry_hi: Optional[bytes] = None
+        carry_base: LSN = NULL_LSN
+        while i < n:
+            k0 = ks[i]
+            pid = cur.seek(k0)
+            ghi = cur.hi
+            j = n if ghi is None else bis_right(ks, ghi, i)
+            page = None
+            if carry and not (carry_hi is not None and k0 > carry_hi):
+                base, base_valid = carry_base, True
+            else:
+                carry = False
+                base, base_valid = NULL_LSN, False
+            if dpt_mode:
+                e = dpt_find(pid)
+                grlsn = e.rlsn if e is not None else \
+                    (ALWAYS if pid < floor else NEVER)
+            if test_plsn:
+                sub += j - i
+            idx = i
+            split = False
+            while idx < j:
+                rec = rs[idx]
+                lsn = rec.lsn
+                idx += 1
+                if dpt_mode:
+                    if lsn <= tc_lsn:
+                        if lsn < grlsn:
+                            skd += 1
+                            continue
+                    else:
+                        tails += 1
+                if page is None:
+                    page = pool.get(pid)
+                    if not base_valid:
+                        base = page.plsn  # pre-window pLSN of this leaf
+                        base_valid = True
+                if test_plsn:
+                    if lsn <= base:
+                        skp += 1
+                        continue
+                    red += 1
+                after = rec.after
+                if rec.op == delete_op or after is None:
+                    page.delete(rec.ck, lsn)
+                    pool.mark_dirty(pid, lsn)
+                    rec.pid = pid
+                elif not page.would_overflow(rec.ck, after, page_size):
+                    page.put(rec.ck, after, lsn)
+                    pool.mark_dirty(pid, lsn)
+                    rec.pid = pid
+                else:
+                    # split path: repeat history through the ordinary put;
+                    # separators moved under the cursor, so the rest of the
+                    # span re-seeks.  Keys still inside this span's original
+                    # interval keep its captured base (split leaves inherit
+                    # data state + pLSN); the carry interval is pinned at
+                    # the first split so later sub-splits cannot narrow it
+                    rec.pid = self.btree.put(rec.ck, after, lsn)
+                    cur.invalidate()
+                    if test_plsn:
+                        if not carry:
+                            carry, carry_hi, carry_base = True, ghi, base
+                        sub -= j - idx    # tail re-counts in the next span
+                    executed += 1
+                    if delta is not None and lsn > delta.applied_lsn:
+                        delta.applied_lsn = lsn
+                    split = True
+                    break
+                executed += 1
+                if delta is not None and lsn > delta.applied_lsn:
+                    delta.applied_lsn = lsn
+            consumed = (idx if split else j) - i
+            if consumed > 1:
+                cur.reuses += consumed - 1    # ops that paid no traversal
+            i = idx if split else j
+        stats.submitted += sub
+        stats.skipped_dpt += skd
+        stats.skipped_plsn += skp
+        stats.redone += red
+        stats.tail_ops += tails
+        return executed
 
     def _reexecute(self, rec, k: bytes, pid: PID) -> None:
         self.redo_stats.redone += 1

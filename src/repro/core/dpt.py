@@ -73,10 +73,11 @@ def build_dpt_sql(log: LogManager, bckpt_lsn: LSN) -> DPT:
     return dpt
 
 
-def build_dpt_logical(log: LogManager, rssp_lsn: LSN) -> tuple[DPT, LSN, list[PID]]:
-    """Algorithm 4 — DC analysis over Delta-log records only.
-
-    Returns (DPT, TC-LSN of the last Delta record seen, PF-list).
+class LogicalDPTBuilder:
+    """Algorithm 4 — DC analysis over Delta-log records only, in
+    incremental form so a fused recovery scan can feed it Delta records as
+    it encounters them instead of paying a dedicated log pass
+    (``build_dpt_logical`` below remains the one-shot wrapper).
 
     * DirtySet entries with index < FirstDirty were dirtied before the
       interval's first flush -> rLSN = TC-LSN of the *previous* Delta record
@@ -93,15 +94,20 @@ def build_dpt_logical(log: LogManager, rssp_lsn: LSN) -> tuple[DPT, LSN, list[PI
     The PF-list (Appendix A.2) is the first-occurrence-ordered concatenation
     of DirtySets restricted to pages that survive in the final DPT.
     """
-    dpt = DPT()
-    prev_lsn = rssp_lsn
-    pf_order: list[PID] = []
-    seen: set[PID] = set()
-    for rec in log.scan(rssp_lsn + 1):
-        if not isinstance(rec, DeltaRec):
-            continue
-        if rec.tc_lsn <= rssp_lsn:
-            continue
+
+    def __init__(self, rssp_lsn: LSN):
+        self.rssp_lsn = rssp_lsn
+        self.dpt = DPT()
+        self.prev_lsn = rssp_lsn
+        self._pf_order: list[PID] = []
+        self._seen: set[PID] = set()
+
+    def feed(self, rec: DeltaRec) -> None:
+        """Consume one Delta record (callers must feed in LSN order)."""
+        if rec.tc_lsn <= self.rssp_lsn:
+            return
+        dpt, prev_lsn = self.dpt, self.prev_lsn
+        seen, pf_order = self._seen, self._pf_order
         reduced = rec.fw_lsn == NULL_LSN and bool(rec.written_set)
         if rec.dirty_lsns is not None:                      # Appendix D.1
             for pid, ulsn in zip(rec.dirty_set, rec.dirty_lsns):
@@ -131,6 +137,18 @@ def build_dpt_logical(log: LogManager, rssp_lsn: LSN) -> tuple[DPT, LSN, list[PI
                     dpt.remove(pid)
                 elif e.rlsn < rec.fw_lsn:
                     e.rlsn = rec.fw_lsn
-        prev_lsn = rec.tc_lsn
-    pf_list = [pid for pid in pf_order if pid in dpt]
-    return dpt, prev_lsn, pf_list
+        self.prev_lsn = rec.tc_lsn
+
+    def finish(self) -> tuple[DPT, LSN, list[PID]]:
+        pf_list = [pid for pid in self._pf_order if pid in self.dpt]
+        return self.dpt, self.prev_lsn, pf_list
+
+
+def build_dpt_logical(log: LogManager, rssp_lsn: LSN) -> tuple[DPT, LSN, list[PID]]:
+    """One-shot Algorithm 4 (see ``LogicalDPTBuilder``): returns
+    (DPT, TC-LSN of the last Delta record seen, PF-list)."""
+    builder = LogicalDPTBuilder(rssp_lsn)
+    for rec in log.scan(rssp_lsn + 1):
+        if isinstance(rec, DeltaRec):
+            builder.feed(rec)
+    return builder.finish()

@@ -48,13 +48,42 @@ class Page:
     # internal payload: keys[i] separates children[i] (<= keys[i]) from children[i+1]
     keys: list = field(default_factory=list)
     children: list = field(default_factory=list)
+    # cached sorted view of ``records`` (leaf scans re-sorting an unchanged
+    # leaf on every visit was pure tax); None = stale.  Every mutation path
+    # must invalidate — direct writes to ``records``/``keys``/``children``
+    # bypass the caches, so they pair with ``invalidate_sorted()``.
+    _sorted: object = field(default=None, repr=False, compare=False)
+    # cached payload byte size, maintained incrementally by put/delete
+    # (summing every slot per ``would_overflow`` call made batched apply
+    # O(page) per op); -1 = stale
+    _payload: int = field(default=-1, repr=False, compare=False)
+
+    # --------------------------------------------------------- sorted view
+    def sorted_items(self) -> list:
+        """Sorted (key, value) view of a leaf, cached until the next write.
+        Treat the returned list as read-only — it is shared across calls."""
+        s = self._sorted
+        if s is None:
+            s = self._sorted = sorted(self.records.items())
+        return s
+
+    def invalidate_sorted(self) -> None:
+        self._sorted = None
+        self._payload = -1
 
     # ------------------------------------------------------------------ size
     def payload_size(self) -> int:
-        if self.is_leaf:
-            return sum(len(k) + len(v) + SLOT_OVERHEAD for k, v in self.records.items())
-        return (sum(len(k) + SLOT_OVERHEAD for k in self.keys)
-                + len(self.children) * _CHILD.size)
+        if not self.is_leaf:
+            # internal nodes are uncached on purpose: splits and bulk build
+            # mutate ``keys``/``children`` in place, and sizing them is off
+            # the per-op hot path anyway
+            return (sum(len(k) + SLOT_OVERHEAD for k in self.keys)
+                    + len(self.children) * _CHILD.size)
+        p = self._payload
+        if p < 0:
+            p = self._payload = sum(len(k) + len(v) + SLOT_OVERHEAD
+                                    for k, v in self.records.items())
+        return p
 
     def serialized_size(self) -> int:
         return _HDR.size + self.payload_size()
@@ -72,21 +101,29 @@ class Page:
 
     def put(self, key: bytes, value: bytes, lsn: LSN) -> None:
         assert self.is_leaf
+        old = self.records.get(key)
         self.records[key] = value
+        self._sorted = None
+        if self._payload >= 0:
+            self._payload += len(value) - len(old) if old is not None \
+                else len(key) + len(value) + SLOT_OVERHEAD
         if lsn > self.plsn:
             self.plsn = lsn
 
     def delete(self, key: bytes, lsn: LSN) -> bool:
         assert self.is_leaf
-        existed = self.records.pop(key, None) is not None
+        old = self.records.pop(key, None)
+        self._sorted = None
+        if old is not None and self._payload >= 0:
+            self._payload -= len(key) + len(old) + SLOT_OVERHEAD
         if lsn > self.plsn:
             self.plsn = lsn
-        return existed
+        return old is not None
 
     # --------------------------------------------------------- serialization
     def to_bytes(self) -> bytes:
         if self.is_leaf:
-            items = sorted(self.records.items())
+            items = self.sorted_items()
             body = b"".join(_SLOT.pack(len(k), len(v)) + k + v for k, v in items)
             n = len(items)
         else:
@@ -129,6 +166,16 @@ class Page:
 
     def clone(self) -> "Page":
         return Page.from_bytes(self.to_bytes())
+
+    def copy(self) -> "Page":
+        """Independent mutable copy without a serialization round-trip.
+        Keys/values/separators are immutable bytes, so container-shallow
+        is deep enough; the ``_sorted`` cache is shared safely because
+        invalidation replaces the list, never mutates it."""
+        return Page(pid=self.pid, is_leaf=self.is_leaf, plsn=self.plsn,
+                    slsn=self.slsn, records=dict(self.records),
+                    keys=list(self.keys), children=list(self.children),
+                    _sorted=self._sorted, _payload=self._payload)
 
 
 def empty_leaf(pid: PID) -> Page:

@@ -64,6 +64,10 @@ class UpdateRec(LogRec):
     pid: PID = NULL_PID
     prev_lsn: LSN = NULL_LSN
     op: RecKind = RecKind.UPDATE
+    # memoized composite tree key (dc.make_key(table, key)) — identity
+    # never changes after append, and every redo/apply/batch-sort pass
+    # needs it; excluded from equality so codec round-trips stay exact
+    ck: Optional[bytes] = field(default=None, repr=False, compare=False)
 
     @property
     def kind(self) -> RecKind:
@@ -106,6 +110,7 @@ class CLRRec(LogRec):
     pid: PID = NULL_PID
     undone_lsn: LSN = NULL_LSN
     undo_next: LSN = NULL_LSN
+    ck: Optional[bytes] = field(default=None, repr=False, compare=False)
 
     @property
     def kind(self) -> RecKind:

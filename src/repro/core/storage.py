@@ -138,8 +138,21 @@ class PageStore:
     ``clone()`` snapshots the stable state (used to build crash images that
     several recovery strategies each recover independently)."""
 
+    # decoded pages cached at most this many before the cache resets —
+    # replaced page versions would otherwise accumulate forever
+    DECODE_CACHE_MAX = 1 << 16
+
     def __init__(self):
         self._pages: Dict[PID, bytes] = {}
+        # decoded-page cache, keyed by the raw serialized bytes:
+        # deserializing a page is ~25x the cost of copying one, and
+        # recovery / replicas / restores re-read the same images over and
+        # over.  Content addressing makes sharing safe — a clone holds the
+        # *same* bytes objects until it diverges, so crash images share
+        # hits, while any write produces new bytes and thus a new key;
+        # entries are private snapshots (reads hand out copies), so crash
+        # semantics still flow through the serialized form only.
+        self._decoded: Dict[bytes, Page] = {}
         self._next_pid: PID = 1
         self.master: dict = {}          # e.g. {'rssp_rec_lsn': ..., 'ckpt_lsn': ...}
 
@@ -157,6 +170,8 @@ class PageStore:
         return self._next_pid
 
     def write_page(self, page: Page) -> None:
+        # the caller's object stays live and mutable — never cache it; the
+        # new bytes simply miss the content-keyed cache until re-read
         self._pages[page.pid] = page.to_bytes()
 
     def write_raw(self, pid: PID, raw: bytes) -> None:
@@ -164,7 +179,14 @@ class PageStore:
 
     def read_page(self, pid: PID) -> Optional[Page]:
         raw = self._pages.get(pid)
-        return Page.from_bytes(raw) if raw is not None else None
+        if raw is None:
+            return None
+        cached = self._decoded.get(raw)
+        if cached is None:
+            if len(self._decoded) >= self.DECODE_CACHE_MAX:
+                self._decoded.clear()
+            cached = self._decoded[raw] = Page.from_bytes(raw)  # CRC-checked
+        return cached.copy()
 
     def has_page(self, pid: PID) -> bool:
         return pid in self._pages
@@ -175,6 +197,10 @@ class PageStore:
     def clone(self) -> "PageStore":
         s = PageStore()
         s._pages = dict(self._pages)
+        # content-keyed, so sharing the cache *object* is safe across
+        # divergence — recovering N strategies from one crash image decodes
+        # each page once, not N times
+        s._decoded = self._decoded
         s._next_pid = self._next_pid
         s.master = dict(self.master)
         return s

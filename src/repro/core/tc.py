@@ -16,7 +16,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .dc import DataComponent, make_key, table_range
+from .dc import DataComponent, make_key, rec_key, table_range
 from .log import LogManager
 from .records import (LSN, NULL_LSN, AbortRec, BeginCkptRec, CLRRec,
                       CommitRec, EndCkptRec, RecKind, SnapshotRec, TxnId,
@@ -155,6 +155,35 @@ class TransactionalComponent:
         self._log_op(txn, shipped.table, shipped.key, shipped.before,
                      shipped.after, shipped.op)
 
+    def apply_shipped_batch(self, txn: TxnId, shipped_ops) -> int:
+        """Batched ``apply_shipped``: re-log a run of shipped records in
+        (key, source-LSN) order, then execute them through the DC's
+        leaf-resident batched engine (``DataComponent.apply_batch``) in one
+        walk — the replica/restore apply hot path.
+
+        Reordering across keys is sound for the same reason the batched
+        redo is: the ops are committed absolute after-images, per-key
+        source order is preserved by the stable (key, lsn) sort, and the
+        local undo chain (abort on a failed apply) restores before-images
+        in reverse append order, which per key is reverse source order.
+        Returns the number of ops applied."""
+        order = sorted(shipped_ops, key=rec_key)   # stable: per-key source
+        local: list[UpdateRec] = []                # order is kept
+        log, active = self.log, self.active
+        for s in order:
+            rec = UpdateRec(txn=txn, table=s.table, key=s.key,
+                            before=s.before, after=s.after,
+                            prev_lsn=active[txn], op=s.op, ck=s.ck)
+            log.append(rec)
+            active[txn] = rec.lsn
+            self._first_writes.setdefault(txn, {}).setdefault(
+                (s.table, s.key), (rec.lsn, s.before))
+            local.append(rec)
+        # local LSNs were assigned in sorted-key order, so the batch is
+        # presorted for the engine (its sort is then a linear verify)
+        self.dc.apply_batch(local, mode="execute")
+        return len(local)
+
     def commit(self, txn: TxnId) -> LSN:
         rec = CommitRec(txn=txn, prev_lsn=self.active[txn])
         self.log.append(rec)
@@ -270,6 +299,14 @@ class Database:
         if self._updates_since_tracker >= self.tracker_interval:
             self.dc.emit_trackers()
             self._updates_since_tracker = 0
+
+    def note_updates(self, n: int) -> None:
+        """Batch form of ``note_update``: same cadence, one call per
+        applied batch instead of one per op."""
+        self._updates_since_tracker += n
+        while self._updates_since_tracker >= self.tracker_interval:
+            self.dc.emit_trackers()
+            self._updates_since_tracker -= self.tracker_interval
 
     def post_commit_flush(self) -> None:
         """Background page flushing budgeted per committed transaction."""

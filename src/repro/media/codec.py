@@ -20,8 +20,17 @@ module owns the byte format:
   master   magic + version + one frame (the three master LSNs).
 
 The format-version byte is the compatibility hinge: decoders accept every
-version they know (currently just 1) and raise ``UnknownFormatError`` for
-anything newer, so old segments stay readable when the format evolves.
+version they know and raise ``UnknownFormatError`` for anything newer, so
+old segments stay readable when the format evolves.
+
+Segments additionally carry a *feature byte* from format version 2 on:
+a bitmask of per-blob options.  Bit 0 (``FEAT_ZLIB``) marks the record
+region as zlib-compressed (the header frame stays raw so index rebuild
+keeps reading 64-byte heads).  Version-1 segments have no feature byte
+and decode exactly as before — old uncompressed archives stay readable —
+while an unknown feature bit raises ``UnknownFormatError`` loudly: a
+decoder that ignored a bit it does not understand would misparse the
+payload behind it.
 """
 from __future__ import annotations
 
@@ -36,6 +45,10 @@ from ..core.records import (AbortRec, BWRec, BeginCkptRec, CLRRec, CommitRec,
 from .errors import CorruptSegmentError, UnknownFormatError
 
 FORMAT_VERSION = 1
+# segments evolved past the other blob kinds: v2 adds the feature byte
+SEGMENT_FORMAT_VERSION = 2
+FEAT_ZLIB = 0x01                    # record region is zlib-compressed
+KNOWN_FEATURES = FEAT_ZLIB
 SEGMENT_MAGIC = b"RSEG"
 SNAPSHOT_MAGIC = b"RSNP"
 MASTER_MAGIC = b"RMST"
@@ -132,7 +145,8 @@ def _read_frame(r: _Reader, what: str) -> _Reader:
     return _Reader(payload, what)
 
 
-def _check_header(r: _Reader, magic: bytes, what: str) -> int:
+def _check_header(r: _Reader, magic: bytes, what: str,
+                  max_version: int = FORMAT_VERSION) -> int:
     """Validate magic + format version; returns the version."""
     got = r.take(4)
     if got != magic:
@@ -140,11 +154,26 @@ def _check_header(r: _Reader, magic: bytes, what: str) -> int:
             f"bad magic on {what}: expected {magic!r}, got {got!r} — "
             "not a media blob, or the wrong blob kind")
     version = r.take(1)[0]
-    if version > FORMAT_VERSION or version == 0:
+    if version > max_version or version == 0:
         raise UnknownFormatError(
             f"{what} has format version {version}; this codec reads "
-            f"versions 1..{FORMAT_VERSION} — upgrade to read it")
+            f"versions 1..{max_version} — upgrade to read it")
     return version
+
+
+def _segment_features(r: _Reader) -> int:
+    """Segment prologue past the magic: version (1..2), then the v2
+    feature byte.  Unknown feature bits are loud — a decoder that ignored
+    one would misparse everything behind it."""
+    version = _check_header(r, SEGMENT_MAGIC, "segment",
+                            max_version=SEGMENT_FORMAT_VERSION)
+    feat = r.take(1)[0] if version >= 2 else 0
+    unknown = feat & ~KNOWN_FEATURES
+    if unknown:
+        raise UnknownFormatError(
+            f"segment carries unknown feature bits {unknown:#04x} "
+            f"(known: {KNOWN_FEATURES:#04x}) — upgrade to read it")
+    return feat
 
 
 # ---------------------------------------------------------------- records
@@ -246,8 +275,9 @@ def _take(payload: bytes, off: int, n: int) -> bytes:
 
 def _decode_update(payload: bytes, kind: RecKind, lsn: int) -> UpdateRec:
     """Manual-offset fast path for the record kinds that dominate every
-    redo stream — the _Reader's per-field method calls are the hot cost
-    of decoding a segment, and cold restore is all segment decode."""
+    redo stream — per-field reader calls, dataclass ``__init__`` kwargs
+    and enum construction are the hot costs of decoding a segment, and
+    cold restore is all segment decode."""
     off = 9
     txn, tl = struct.unpack_from("<QI", payload, off)
     off += 12
@@ -275,22 +305,43 @@ def _decode_update(payload: bytes, kind: RecKind, lsn: int) -> UpdateRec:
         raise CorruptSegmentError(
             f"record payload has {len(payload) - off - 16} trailing bytes "
             f"after a complete {kind.name} record")
-    return UpdateRec(lsn=lsn, txn=txn, table=table, key=key, before=before,
-                     after=after, pid=pid, prev_lsn=prev_lsn, op=kind)
+    rec = UpdateRec.__new__(UpdateRec)     # bypass __init__: slot stores
+    rec.lsn = lsn
+    rec.txn = txn
+    rec.table = table
+    rec.key = key
+    rec.before = before
+    rec.after = after
+    rec.pid = pid
+    rec.prev_lsn = prev_lsn
+    rec.op = kind
+    rec.ck = None
+    return rec
+
+
+# byte value -> interned RecKind member: RecKind(x) goes through the
+# EnumMeta call protocol, which is measurable at per-record scale
+_KIND_BY_BYTE = {int(k): k for k in RecKind}
 
 
 def _decode_record(payload: bytes) -> LogRec:
-    kind = RecKind(payload[0])
+    kb = payload[0]
     lsn, = _U64.unpack_from(payload, 1)
-    if kind is RecKind.UPDATE or kind is RecKind.INSERT \
-            or kind is RecKind.DELETE:
-        return _decode_update(payload, kind, lsn)
-    if kind is RecKind.COMMIT:
+    if kb == 1 or kb == 2 or kb == 3:      # UPDATE / INSERT / DELETE
+        return _decode_update(payload, _KIND_BY_BYTE[kb], lsn)
+    if kb == 4:                            # COMMIT
         txn, prev = struct.unpack_from("<QQ", payload, 9)
         if len(payload) != 25:
             raise CorruptSegmentError(
                 "COMMIT record payload has trailing bytes")
-        return CommitRec(lsn=lsn, txn=txn, prev_lsn=prev)
+        rec = CommitRec.__new__(CommitRec)
+        rec.lsn = lsn
+        rec.txn = txn
+        rec.prev_lsn = prev
+        return rec
+    kind = _KIND_BY_BYTE.get(kb)
+    if kind is None:
+        raise ValueError(f"{kb} is not a valid RecKind")
     r = _Reader(payload, "record")
     r.pos = 9
     if kind == RecKind.ABORT:
@@ -345,8 +396,10 @@ def _decode_record(payload: bytes) -> LogRec:
 
 
 # --------------------------------------------------------------- segments
-def encode_segment(records) -> bytes:
-    """Encode one sealed, LSN-contiguous run of records."""
+def encode_segment(records, *, compress: bool = False) -> bytes:
+    """Encode one sealed, LSN-contiguous run of records.  ``compress``
+    zlib-compresses the record region (feature bit ``FEAT_ZLIB``); the
+    header frame stays raw so header-only reads keep working."""
     records = list(records)
     if not records:
         raise ValueError("cannot encode an empty segment")
@@ -355,26 +408,36 @@ def encode_segment(records) -> bytes:
     header.u64(lo)
     header.u64(hi)
     header.u32(len(records))
-    parts = [SEGMENT_MAGIC, bytes([FORMAT_VERSION]),
-             _frame(header.getvalue())]
-    parts.extend(_frame(encode_record(rec)) for rec in records)
-    return b"".join(parts)
+    body = b"".join(_frame(encode_record(rec)) for rec in records)
+    feat = 0
+    if compress:
+        feat |= FEAT_ZLIB
+        body = zlib.compress(body, 6)
+    return b"".join([SEGMENT_MAGIC, bytes([SEGMENT_FORMAT_VERSION, feat]),
+                     _frame(header.getvalue()), body])
 
 
 def decode_segment_header(blob: bytes) -> tuple[int, int, int]:
     """(lo, hi, count) without decoding the records — what ``LogArchive.
     load`` needs to rebuild its index from a backend listing."""
     r = _Reader(blob, "segment")
-    _check_header(r, SEGMENT_MAGIC, "segment")
+    _segment_features(r)
     h = _read_frame(r, "segment header")
     return h.u64(), h.u64(), h.u32()
+
+
+def decode_segment_features(blob: bytes) -> int:
+    """The feature byte of a segment blob (0 for v1 blobs) from its head
+    alone — lets a reopened archive adopt the writer's settings instead
+    of silently resetting them."""
+    return _segment_features(_Reader(blob, "segment"))
 
 
 def decode_segment(blob: bytes) -> list[LogRec]:
     """Decode a full segment; validates CRC per frame, the header count,
     and the LSN run — a segment is whole or it is an error, never short."""
     r = _Reader(blob, "segment")
-    _check_header(r, SEGMENT_MAGIC, "segment")
+    feat = _segment_features(r)
     h = _read_frame(r, "segment header")
     lo, hi, count = h.u64(), h.u64(), h.u32()
     if count != hi - lo + 1:
@@ -383,6 +446,13 @@ def decode_segment(blob: bytes) -> list[LogRec]:
             f"{count} records")
     records = []
     buf, off = r.buf, r.pos
+    if feat & FEAT_ZLIB:
+        try:
+            buf, off = zlib.decompress(buf[off:]), 0
+        except zlib.error as exc:
+            raise CorruptSegmentError(
+                f"segment [{lo}, {hi}]: compressed record region does not "
+                f"inflate ({exc}) — the blob is corrupt") from None
     crc32 = zlib.crc32
     for i in range(count):
         # manual-offset frame parse — this loop is the cold-restore and

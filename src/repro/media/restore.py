@@ -49,19 +49,29 @@ def load_media(where: BackendLike, *, cache_segments: int = 8
 
 
 def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
+                 *, cache_segments: int = 8, streaming: bool = True,
+                 apply_window: int = 1024,
                  **db_kwargs) -> tuple[Database, RestoreStats]:
     """Point-in-time restore in a fresh process: a writable ``Database``
     equal to the committed prefix <= ``target_lsn``, built from the
     backend at ``where`` (directory path or ``MediaBackend``) and nothing
-    else.  ``target_lsn`` defaults to everything the archive sealed."""
-    backend, archive, store = load_media(where)
+    else.  ``target_lsn`` defaults to everything the archive sealed.
+
+    The default is the streaming pipeline: segments decode through an LRU
+    of ``cache_segments`` and committed ops flush through the batched
+    apply engine every ``apply_window`` records, so peak memory is
+    (window + in-flight straddlers + LRU), independent of archive length —
+    an archive much larger than RAM restores without materializing it.
+    ``streaming=False`` keeps the materializing reference path."""
+    backend, archive, store = load_media(where, cache_segments=cache_segments)
     if target_lsn is None:
         target_lsn = archive.archived_upto
         if target_lsn == 0:
             raise ValueError(
                 f"nothing to restore: backend {where!r} holds no sealed "
                 "segments (was the archiver ever run?)")
-    return store.restore(target_lsn, **db_kwargs)
+    return store.restore(target_lsn, streaming=streaming,
+                         apply_window=apply_window, **db_kwargs)
 
 
 def cold_restore_replica(where: BackendLike, replica_id: str, *,

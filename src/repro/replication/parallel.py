@@ -215,9 +215,11 @@ class ShardedApplier(Replica):
     def _apply_slice(self, s: ShardState, ops: list[UpdateRec]) -> None:
         txn = self.db.tc.begin()
         try:
-            for rec in ops:
-                self.db.tc.apply_shipped(txn, rec)
-                self.db.note_update()
+            # same leaf-resident batched engine as the serial path — a
+            # shard's slice is committed absolute after-images in source
+            # LSN order, exactly what apply_shipped_batch reorders safely
+            self.db.tc.apply_shipped_batch(txn, ops)
+            self.db.note_updates(len(ops))
         except Exception:
             # undo the partial slice; the queue still holds it, and the
             # durable watermark (last barrier) re-ships it after recovery

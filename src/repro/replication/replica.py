@@ -267,9 +267,10 @@ class Replica(ApplyEngine):
         resume = self.resume_floor(commit_lsn)
         txn = self.db.tc.begin()
         try:
-            for rec in ops:
-                self.db.tc.apply_shipped(txn, rec)
-                self.db.note_update()        # replica-local Delta-records
+            # one sorted walk through the leaf-resident batched engine
+            # (shared with recovery redo and snapshot heal-replay)
+            self.db.tc.apply_shipped_batch(txn, ops)
+            self.db.note_updates(len(ops))       # replica-local Delta-records
             self.db.tc.update(txn, REPL_TABLE, REPL_KEY,
                               pack_watermark(commit_lsn, resume))
         except Exception:

@@ -1,0 +1,46 @@
+"""Hypothesis sweep for the streaming batched redo pipeline: streamed
+single-pass recovery with batched apply, and streaming restore, must be
+oracle-equal to the committed prefix across random crash points, batch
+windows and strategies.  Skip-guarded (hypothesis is an optional dev
+dependency); the seeded samples in test_recovery_pipeline.py always run.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (Strategy, committed_state_oracle, recover,  # noqa: E402
+                        recovered_state)
+from test_recovery_pipeline import _archived_primary, mixed_workload  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       window=st.sampled_from([1, 13, 128, 4096]),
+       strategy=st.sampled_from([Strategy.LOG0, Strategy.LOG1,
+                                 Strategy.LOG2]),
+       n_txns=st.integers(20, 90))
+def test_property_streamed_batched_recovery_oracle_equal(seed, window,
+                                                         strategy, n_txns):
+    db, base = mixed_workload(seed, n_rows=300, n_txns=n_txns,
+                              ckpt_at=n_txns // 2, cache_pages=64)
+    image = db.crash()
+    oracle = committed_state_oracle(image, base)
+    bat_db, _ = recover(image, strategy, cache_pages=64,
+                        batched=True, batch_window=window)
+    assert recovered_state(bat_db) == oracle
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       apply_window=st.sampled_from([1, 32, 1024]),
+       cut=st.floats(0.2, 1.0))
+def test_property_streaming_restore_oracle_equal(seed, apply_window, cut):
+    primary, base, _backend, store, _arch = _archived_primary(seed)
+    lo = store.latest().end_lsn
+    hi = primary.log.stable_lsn
+    target = lo + int((hi - lo) * cut)
+    oracle = committed_state_oracle(primary.crash(), base, upto_lsn=target)
+    db, _ = store.restore(target, primary, page_size=8192,
+                          apply_window=apply_window)
+    assert dict(db.scan_all()) == oracle
