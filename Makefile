@@ -1,13 +1,15 @@
 # One-command gates for every PR.
 #   make test        tier-1 suite (the ROADMAP verify command)
 #   make bench-smoke fast benchmark pass (all tables/figures + replication)
+#   make bench-diff  >2x regression gate vs the previous bench artifact
+#   make trace-demo  crash + traced recovery, timeline printed
 #   make examples    run every example end-to-end
 PY      := python
 PYPATH  := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke examples all
+.PHONY: test bench-smoke bench-diff trace-demo examples all
 
-all: test bench-smoke examples
+all: test bench-smoke bench-diff examples
 
 test:
 	$(PYPATH) $(PY) -m pytest -x -q
@@ -15,8 +17,15 @@ test:
 bench-smoke:
 	$(PYPATH) $(PY) -m benchmarks.run
 
+bench-diff:
+	$(PYPATH) $(PY) -m benchmarks.diff
+
+trace-demo:
+	$(PY) examples/recovery_timeline.py
+
 examples:
 	$(PY) examples/quickstart.py
 	$(PY) examples/replica_relayout.py
 	$(PY) examples/train_with_recovery.py
 	$(PY) examples/serve_batched.py
+	$(PY) examples/recovery_timeline.py

@@ -1,0 +1,96 @@
+"""Bench-artifact regression gate.
+
+    PYTHONPATH=src python -m benchmarks.diff        (or: make bench-diff)
+
+Compares the newest ``artifacts/bench_<n>.json`` against the previous run
+*of the same mode* (fast vs full — their absolute numbers are not
+comparable) and fails loudly on a >2x ``us_per_call`` regression in any
+oracle-asserted row.  Only the modules whose rows carry correctness
+oracles are gated: a 2x slide there is a real pipeline regression, not a
+tuning drift in an informational table.  With fewer than two comparable
+artifacts the gate is a no-op pass — the first run of a fresh checkout
+has nothing to diff against.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ART_ROOT = Path(__file__).resolve().parents[1] / "artifacts"
+
+# modules whose rows are oracle-asserted (recovered state checked against
+# the committed-state oracle / acceptance bounds inside the bench itself)
+GUARDED_MODULES = {"recovery_pipeline", "replication", "parallel_apply",
+                   "archive", "media"}
+THRESHOLD = 2.0
+# rows faster than this are pure timer noise at 2x granularity
+MIN_US = 50.0
+
+
+def load_runs(root: Path = ART_ROOT) -> list[dict]:
+    """All bench summaries, oldest first."""
+    runs = []
+    for p in sorted(root.glob("bench_*.json")):
+        m = re.fullmatch(r"bench_(\d+)\.json", p.name)
+        if not m:
+            continue
+        try:
+            runs.append((int(m.group(1)), json.loads(p.read_text())))
+        except (OSError, json.JSONDecodeError):
+            continue
+    runs.sort(key=lambda t: t[0])
+    return [r for _, r in runs]
+
+
+def compare_runs(old: dict, new: dict,
+                 threshold: float = THRESHOLD) -> list[str]:
+    """Regression lines for guarded rows that got > ``threshold``x slower
+    between two summaries (rows present in both, by module+name)."""
+    prev = {(r["module"], r["name"]): r for r in old.get("rows", [])
+            if r.get("module") in GUARDED_MODULES}
+    regressions = []
+    for r in new.get("rows", []):
+        if r.get("module") not in GUARDED_MODULES:
+            continue
+        p = prev.get((r["module"], r["name"]))
+        if p is None:
+            continue
+        a, b = p.get("us_per_call"), r.get("us_per_call")
+        if not a or not b or a < MIN_US:
+            continue
+        if b > a * threshold:
+            regressions.append(
+                f"{r['module']}/{r['name']}: {a:.1f}us -> {b:.1f}us "
+                f"({b / a:.2f}x, threshold {threshold:.1f}x)")
+    return regressions
+
+
+def main() -> int:
+    runs = load_runs()
+    if not runs:
+        print("bench-diff: no bench artifacts yet — nothing to compare")
+        return 0
+    new = runs[-1]
+    olds = [r for r in runs[:-1] if r.get("mode") == new.get("mode")]
+    if not olds:
+        print(f"bench-diff: run {new.get('run')} is the first "
+              f"{new.get('mode')}-mode artifact — nothing to compare")
+        return 0
+    old = olds[-1]
+    regressions = compare_runs(old, new)
+    label = (f"run {old.get('run')} -> {new.get('run')} "
+             f"({new.get('mode')} mode)")
+    if regressions:
+        print(f"bench-diff: {len(regressions)} regression(s) {label}:")
+        for line in regressions:
+            print(f"  REGRESSION {line}")
+        return 1
+    print(f"bench-diff: no >{THRESHOLD:.0f}x regressions in "
+          f"oracle-asserted rows, {label}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

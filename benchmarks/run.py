@@ -39,7 +39,11 @@ def _next_run_index() -> int:
 def write_summary(results: list[dict], failures: list[str],
                   fast: bool) -> Path:
     """One flat, machine-readable record of this run: every row's key
-    metrics plus per-module status — the perf-trajectory unit."""
+    metrics plus per-module status — the perf-trajectory unit.  The
+    process-wide metrics snapshot rides along so each artifact carries the
+    telemetry (cache hit rates, windows, shipped records, ...) that
+    explains its numbers."""
+    from repro.obs import metrics as obs_metrics
     summary = {
         "run": _next_run_index(),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
@@ -58,6 +62,7 @@ def write_summary(results: list[dict], failures: list[str],
                 if key in row}}
             for out in results for row in out["rows"]
         ],
+        "metrics": obs_metrics.snapshot(),
     }
     path = ART_ROOT / f"bench_{summary['run']}.json"
     path.write_text(json.dumps(summary, indent=1))

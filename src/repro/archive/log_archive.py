@@ -38,6 +38,13 @@ from ..media.codec import (FEAT_ZLIB, decode_archive_meta, decode_segment,
                            decode_segment_features, decode_segment_header,
                            encode_archive_meta, encode_segment)
 from ..media.errors import CorruptSegmentError
+from ..obs import metrics as _metrics
+
+# process-wide mirrors of the per-instance LRU tallies (instance attrs
+# stay: tests and benches assert them on specific archives)
+_C_CACHE_HITS = _metrics.counter("archive.cache_hits")
+_C_SEG_DECODES = _metrics.counter("archive.segment_decodes")
+_G_CACHED_SEGS = _metrics.gauge("archive.cached_segments")
 
 SEG_PREFIX = "seg/"
 META_NAME = "archive_meta"
@@ -238,6 +245,7 @@ class LogArchive:
             self.peak_cached_segments = len(self._cache)
         while len(self._cache) > max(self.cache_segments, 0):
             self._cache.popitem(last=False)
+        _G_CACHED_SEGS.set(len(self._cache))
 
     def reset_cache_peak(self) -> None:
         self.peak_cached_segments = len(self._cache)
@@ -249,9 +257,11 @@ class LogArchive:
         if hit is not None and len(hit) == len(seg):
             self._cache.move_to_end(seg.name)
             self.cache_hits += 1
+            _C_CACHE_HITS.inc()
             return hit
         records = tuple(decode_segment(self.backend.get(seg.name)))
         self.segment_decodes += 1
+        _C_SEG_DECODES.inc()
         if records[0].lsn != seg.lo or records[-1].lsn != seg.hi:
             raise CorruptSegmentError(
                 f"segment blob {seg.name} covers [{records[0].lsn}, "

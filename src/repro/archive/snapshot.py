@@ -58,7 +58,12 @@ from ..core.records import (LSN, NULL_LSN, AbortRec, CommitRec, SnapshotRec,
 from ..core.tc import CrashImage, Database
 from ..media.backend import MediaBackend
 from ..media.codec import decode_snapshot, encode_snapshot
+from ..obs import metrics as obs_metrics
+from ..obs.trace import TRACER as _TRACER
 from .log_archive import LogArchive
+
+_H_RESTORE_WINDOW = obs_metrics.histogram("restore.window_ops")
+_C_RESTORE_RUNS = obs_metrics.counter("restore.runs")
 
 SNAP_PREFIX = "snap/"
 
@@ -103,6 +108,16 @@ class RestoreStats:
     # peak decoded segments in the archive LRU during the redo scan
     # (0 when the scan did not read through an archive)
     peak_cached_segments: int = 0
+
+    def publish(self, registry=None) -> None:
+        """Mirror every numeric field into the process-wide registry as
+        ``restore.*`` gauges — last run wins."""
+        obs_metrics.publish_dataclass(self, "restore", registry)
+
+    @classmethod
+    def from_registry(cls, registry=None) -> "RestoreStats":
+        """The registry-backed view of the most recent published run."""
+        return obs_metrics.load_dataclass(cls, "restore", registry)
 
 
 def _log_of(source) -> LogManager:
@@ -300,20 +315,30 @@ class SnapshotStore:
             archive.reset_cache_peak()
 
         db = Database(**db_kwargs)
-        seed = list(snap.rows) if snap else \
-            sorted(dict(base_rows or {}).items())
-        db.dc.bulk_build(seed)
-        db.tc.checkpoint()
+        with _TRACER.span("restore.seed",
+                          snapshot=snap.snapshot_id if snap else None) as sp:
+            seed = list(snap.rows) if snap else \
+                sorted(dict(base_rows or {}).items())
+            db.dc.bulk_build(seed)
+            db.tc.checkpoint()
+            sp.set(rows=len(seed))
 
-        if streaming:
-            self._heal_streaming(db, scan, redo_from, target_lsn, begin,
-                                 apply_window, stats)
-        else:
-            self._heal_materializing(db, scan, redo_from, target_lsn, begin,
-                                     stats)
+        with _TRACER.span("restore.heal", streaming=streaming,
+                          redo_from=redo_from,
+                          target_lsn=target_lsn) as hp:
+            if streaming:
+                self._heal_streaming(db, scan, redo_from, target_lsn, begin,
+                                     apply_window, stats)
+            else:
+                self._heal_materializing(db, scan, redo_from, target_lsn,
+                                         begin, stats)
+            hp.set(replayed_txns=stats.replayed_txns,
+                   replayed_ops=stats.replayed_ops)
         if archive is not None:
             stats.peak_cached_segments = archive.peak_cached_segments
         stats.wall_ms = (time.perf_counter() - t0) * 1e3
+        stats.publish()
+        _C_RESTORE_RUNS.inc()
         return db, stats
 
     @staticmethod
@@ -335,6 +360,9 @@ class SnapshotStore:
         def flush_pending() -> None:
             if not pending:
                 return
+            _H_RESTORE_WINDOW.observe(len(pending))
+            if _TRACER.enabled:
+                _TRACER.event("restore.window", ops=len(pending))
             local = db.tc.begin()
             db.tc.apply_shipped_batch(local, pending)
             db.tc.commit(local)

@@ -14,6 +14,8 @@ import struct
 from dataclasses import dataclass, field
 from typing import Optional
 
+from ..obs import metrics as _metrics
+from ..obs.trace import TRACER as _TRACER
 from .btree import BTree, LeafCursor
 from .bufferpool import BufferPool
 from .delta_log import BWAccumulator, DeltaAccumulator
@@ -22,6 +24,12 @@ from .log import LogManager
 from .records import (LSN, NULL_LSN, NULL_PID, PID, CLRRec, DeltaRec, LogRec,
                       RecKind, RSSPRec, SMORec, UpdateRec)
 from .storage import PageStore
+
+# batched-apply span walks: how well the leaf-resident cursor amortizes
+# traversal (records/spans ~ ops per traversal)
+_C_AB_CALLS = _metrics.counter("dc.apply_batch.calls")
+_C_AB_RECORDS = _metrics.counter("dc.apply_batch.records")
+_C_AB_SPANS = _metrics.counter("dc.apply_batch.leaf_spans")
 
 
 # length-prefixed table headers, memoized: make_key is on every logical
@@ -366,7 +374,7 @@ class DataComponent:
 
         # local tallies, folded into redo_stats once at the end — attribute
         # read-modify-writes per record are measurable at window scale
-        sub = skd = skp = red = tails = executed = 0
+        sub = skd = skp = red = tails = executed = spans = 0
 
         # The sorted window is processed leaf *span* at a time: one
         # traversal, one DPT consult, one page fetch and one pre-window
@@ -379,6 +387,7 @@ class DataComponent:
         carry_hi: Optional[bytes] = None
         carry_base: LSN = NULL_LSN
         while i < n:
+            spans += 1
             k0 = ks[i]
             pid = cur.seek(k0)
             ghi = cur.hi
@@ -457,6 +466,12 @@ class DataComponent:
         stats.skipped_plsn += skp
         stats.redone += red
         stats.tail_ops += tails
+        _C_AB_CALLS.inc()
+        _C_AB_RECORDS.inc(n)
+        _C_AB_SPANS.inc(spans)
+        if _TRACER.enabled:
+            _TRACER.event("dc.apply_batch", records=n, spans=spans,
+                          mode=mode, executed=executed)
         return executed
 
     def _reexecute(self, rec, k: bytes, pid: PID) -> None:

@@ -19,6 +19,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
+from ..obs import metrics as obs_metrics
+from ..obs.trace import TRACER as _TRACER
 from .dc import DataComponent, RedoStats, make_key, rec_key
 from .dpt import DPT, build_dpt_sql
 from .log import LogManager
@@ -66,8 +68,20 @@ class RecoveryStats:
     batched: bool = False            # sorted bulk apply inside each window
     batch_window: int = 0            # redo-window size (records)
     peak_window_records: int = 0     # max redo records buffered at once
+    windows: int = 0                 # redo windows flushed
     cursor_traversals: int = 0       # batched mode: root-to-leaf walks
     cursor_reuses: int = 0           # batched mode: leaf-resident hits
+
+    def publish(self, registry=None) -> None:
+        """Mirror every numeric field (nested redo/io included) into the
+        process-wide registry as ``recovery.*`` gauges — last run wins."""
+        obs_metrics.publish_dataclass(self, "recovery", registry)
+
+    @classmethod
+    def from_registry(cls, registry=None) -> "RecoveryStats":
+        """The registry-backed view of the most recent published run
+        (numeric fields only; ``strategy`` keeps its default)."""
+        return obs_metrics.load_dataclass(cls, "recovery", registry)
 
 
 # --------------------------------------------------------------------------
@@ -135,124 +149,172 @@ def recover(image: CrashImage, strategy: Strategy, *,
             f"batched redo applies logical strategies only (got "
             f"{strategy.value}): physiological redo is page-addressed and "
             "has no traversal to amortize")
+    # The root span wraps the whole run so IO/window events nest under it;
+    # when tracing is disabled this is the shared null span (no cost).
+    with _TRACER.span("recover", strategy=strategy.value,
+                      batched=batched) as rspan:
+        return _recover(image, strategy, rspan, cache_pages=cache_pages,
+                        disk=disk, work_ms_per_op=work_ms_per_op,
+                        lookahead=lookahead, delta_mode=delta_mode,
+                        page_size=page_size,
+                        tracker_interval=tracker_interval,
+                        bg_flush_per_txn=bg_flush_per_txn,
+                        run_undo=run_undo, batched=batched,
+                        batch_window=batch_window)
+
+
+_H_WINDOW_RECORDS = obs_metrics.histogram("recovery.window_records")
+_C_RECOVER_RUNS = obs_metrics.counter("recovery.runs")
+
+
+def _recover(image: CrashImage, strategy: Strategy, rspan, *,
+             cache_pages, disk, work_ms_per_op, lookahead, delta_mode,
+             page_size, tracker_interval, bg_flush_per_txn, run_undo,
+             batched, batch_window) -> tuple[Database, RecoveryStats]:
     t0 = time.perf_counter()
-    store = image.store.clone()
-    log = image.log.crash()            # stable prefix, private copy
-    iosim = IOSim(disk or DiskModel())
-    dc = DataComponent(store, log, cache_pages, delta_mode=delta_mode,
-                       side_by_side=True, page_size=page_size)
-    dc.pool.iosim = iosim
-    stats = RecoveryStats(strategy=strategy.value, batched=batched,
-                          batch_window=batch_window)
+    # the "analysis" span covers exactly what ``stats.analysis_ms`` times:
+    # image clone, DC init, SMO replay + DPT build
+    with _TRACER.span("analysis") as asp:
+        store = image.store.clone()
+        log = image.log.crash()            # stable prefix, private copy
+        iosim = IOSim(disk or DiskModel())
+        dc = DataComponent(store, log, cache_pages, delta_mode=delta_mode,
+                           side_by_side=True, page_size=page_size)
+        dc.pool.iosim = iosim
+        stats = RecoveryStats(strategy=strategy.value, batched=batched,
+                              batch_window=batch_window)
 
-    m = log.master
-    # May start below the in-memory truncation base: every log read here
-    # (analysis, DPT build, redo, the EndCkpt/RSSP record fetches) goes
-    # through the archive splice, so a truncated-and-archived prefix
-    # recovers identically to an all-in-memory one.
-    scan_from = m.bckpt_lsn if m.bckpt_lsn != NULL_LSN else 1
-    stats.scan_from = scan_from
+        m = log.master
+        # May start below the in-memory truncation base: every log read here
+        # (analysis, DPT build, redo, the EndCkpt/RSSP record fetches) goes
+        # through the archive splice, so a truncated-and-archived prefix
+        # recovers identically to an all-in-memory one.
+        scan_from = m.bckpt_lsn if m.bckpt_lsn != NULL_LSN else 1
+        stats.scan_from = scan_from
 
-    # ------------------------------------------------------- DC recovery
-    # SMO replay + Delta-record DPT come first (redo needs a well-formed
-    # tree and a complete DPT — Delta records describing a page's dirtying
-    # land *after* the ops they describe, so the DPT cannot build inline
-    # with redo); the DC fuses both jobs into its own single scan.
-    dc.recover(scan_from, rssp_lsn=m.bckpt_lsn,
-               build_dpt=strategy.logical and strategy.uses_dpt,
-               preload_index=(strategy is Strategy.LOG2))
-    dpt: Optional[DPT] = None
-    if strategy.logical and strategy.uses_dpt:
-        dpt = dc.dpt
-    elif not strategy.logical:
-        dpt = build_dpt_sql(log, m.bckpt_lsn)
-    stats.dpt_size = len(dpt) if dpt is not None else 0
-    stats.analysis_ms = (time.perf_counter() - t0) * 1e3
+        # --------------------------------------------------- DC recovery
+        # SMO replay + Delta-record DPT come first (redo needs a well-formed
+        # tree and a complete DPT — Delta records describing a page's
+        # dirtying land *after* the ops they describe, so the DPT cannot
+        # build inline with redo); the DC fuses both jobs into its own
+        # single scan.
+        dc.recover(scan_from, rssp_lsn=m.bckpt_lsn,
+                   build_dpt=strategy.logical and strategy.uses_dpt,
+                   preload_index=(strategy is Strategy.LOG2))
+        dpt: Optional[DPT] = None
+        if strategy.logical and strategy.uses_dpt:
+            dpt = dc.dpt
+        elif not strategy.logical:
+            dpt = build_dpt_sql(log, m.bckpt_lsn)
+        stats.dpt_size = len(dpt) if dpt is not None else 0
+        stats.analysis_ms = (time.perf_counter() - t0) * 1e3
+        asp.set(scan_from=scan_from, dpt_size=stats.dpt_size,
+                analysis_ms=round(stats.analysis_ms, 3))
 
     # ------------------------------------- fused analysis + redo (one pass)
     t1 = time.perf_counter()
-    iosim.log_read(log.n_log_pages(scan_from))    # the single fused pass
-    active: dict[int, LSN] = {}
-    if m.end_ckpt_lsn != NULL_LSN:
-        eck = log.record(m.end_ckpt_lsn)
-        if isinstance(eck, EndCkptRec):
-            active.update(eck.active_txns)
+    with _TRACER.span("redo") as rdsp:
+        iosim.log_read(log.n_log_pages(scan_from))    # the single fused pass
+        active: dict[int, LSN] = {}
+        if m.end_ckpt_lsn != NULL_LSN:
+            eck = log.record(m.end_ckpt_lsn)
+            if isinstance(eck, EndCkptRec):
+                active.update(eck.active_txns)
 
-    window: list = []
-    cursor = dc.btree.cursor() if batched else None
-    pf_ptr = 0                                    # Log2 PF-list cursor
-    done = 0                                      # records already flushed
+        window: list = []
+        cursor = dc.btree.cursor() if batched else None
+        pf_ptr = 0                                    # Log2 PF-list cursor
+        done = 0                                      # records already flushed
 
-    def pace_pf_list(upto: int) -> None:
-        """LOG2 PF-list read-ahead: stay ``lookahead`` records ahead of
-        redo position ``upto`` (Appendix A pacing, preserved per record
-        on the per-record path; batched mode paces once per window)."""
-        nonlocal pf_ptr
-        target = min(len(dc.pf_list), upto + lookahead)
-        while pf_ptr < target:
-            batch = dc.pf_list[pf_ptr:min(pf_ptr + 8, target)]
-            iosim.prefetch(batch, contiguous=True)
-            pf_ptr += len(batch)
+        def pace_pf_list(upto: int) -> None:
+            """LOG2 PF-list read-ahead: stay ``lookahead`` records ahead
+            of redo position ``upto`` (Appendix A pacing — per record in
+            both modes, so batched redo prices the same issue schedule the
+            per-record study measures)."""
+            nonlocal pf_ptr
+            target = min(len(dc.pf_list), upto + lookahead)
+            while pf_ptr < target:
+                batch = dc.pf_list[pf_ptr:min(pf_ptr + 8, target)]
+                iosim.prefetch(batch, contiguous=True)
+                pf_ptr += len(batch)
 
-    def flush_window() -> None:
-        nonlocal done
-        if not window:
-            return
-        stats.peak_window_records = max(stats.peak_window_records,
-                                        len(window))
-        is_log2 = strategy is Strategy.LOG2 and bool(dc.pf_list)
-        if batched:
-            if is_log2:
-                pace_pf_list(done + len(window))
-            iosim.work(work_ms_per_op * len(window))
-            dc.apply_batch(window,
-                           mode="dpt" if strategy.uses_dpt else "basic",
-                           cursor=cursor)
-        else:
-            for i, rec in enumerate(window, start=done):
-                iosim.work(work_ms_per_op)
-                if is_log2:
-                    pace_pf_list(i)
-                elif strategy is Strategy.SQL2 and dpt is not None:
-                    # log-driven read-ahead over the next `lookahead`
-                    # records; truncated at the window edge — the stream
-                    # is not materialized, and lookahead << batch_window
-                    # makes the boundary effect marginal
-                    for fut in window[i - done + 1: i - done + 1 + lookahead]:
-                        e = dpt.find(fut.pid)
-                        if e is not None and fut.lsn >= e.rlsn:
-                            iosim.prefetch([fut.pid], contiguous=True)
-                if strategy is Strategy.LOG0:
-                    dc.redo_basic(rec)
-                elif strategy.logical:
-                    dc.redo_with_dpt(rec)
+        def flush_window() -> None:
+            nonlocal done
+            if not window:
+                return
+            stats.peak_window_records = max(stats.peak_window_records,
+                                            len(window))
+            stats.windows += 1
+            _H_WINDOW_RECORDS.observe(len(window))
+            is_log2 = strategy is Strategy.LOG2 and bool(dc.pf_list)
+            with _TRACER.span("redo.window", records=len(window),
+                              start=done):
+                if batched:
+                    if is_log2:
+                        # pace per record even though apply is batched:
+                        # issuing the whole window's prefetches up front
+                        # collapsed every issue onto the window-start
+                        # clock and overstated overlap (nearly every
+                        # demand read counted as a free hit)
+                        for i in range(done, done + len(window)):
+                            iosim.work(work_ms_per_op)
+                            pace_pf_list(i)
+                    else:
+                        iosim.work(work_ms_per_op * len(window))
+                    dc.apply_batch(window,
+                                   mode="dpt" if strategy.uses_dpt
+                                   else "basic",
+                                   cursor=cursor)
                 else:
-                    _redo_physiological(dc, dpt, rec, dc.redo_stats)
-        done += len(window)
-        window.clear()
+                    for i, rec in enumerate(window, start=done):
+                        iosim.work(work_ms_per_op)
+                        if is_log2:
+                            pace_pf_list(i)
+                        elif strategy is Strategy.SQL2 and dpt is not None:
+                            # log-driven read-ahead over the next
+                            # `lookahead` records; truncated at the window
+                            # edge — the stream is not materialized, and
+                            # lookahead << batch_window makes the boundary
+                            # effect marginal
+                            for fut in window[i - done + 1:
+                                              i - done + 1 + lookahead]:
+                                e = dpt.find(fut.pid)
+                                if e is not None and fut.lsn >= e.rlsn:
+                                    iosim.prefetch([fut.pid],
+                                                   contiguous=True)
+                        if strategy is Strategy.LOG0:
+                            dc.redo_basic(rec)
+                        elif strategy.logical:
+                            dc.redo_with_dpt(rec)
+                        else:
+                            _redo_physiological(dc, dpt, rec, dc.redo_stats)
+            done += len(window)
+            window.clear()
 
-    for rec in log.scan(scan_from):
-        # ---- analysis state machine (ARIES transaction table)
-        if isinstance(rec, UpdateRec):
-            active[rec.txn] = rec.lsn
-            window.append(rec)
-        elif isinstance(rec, CLRRec):
-            active[rec.txn] = rec.lsn
-            window.append(rec)
-        elif isinstance(rec, CommitRec):
-            active.pop(rec.txn, None)
-        elif isinstance(rec, AbortRec):
-            active.pop(rec.txn, None)
-        if len(window) >= batch_window:
-            flush_window()
-    flush_window()
-    stats.log_records = done
+        for rec in log.scan(scan_from):
+            # ---- analysis state machine (ARIES transaction table)
+            if isinstance(rec, UpdateRec):
+                active[rec.txn] = rec.lsn
+                window.append(rec)
+            elif isinstance(rec, CLRRec):
+                active[rec.txn] = rec.lsn
+                window.append(rec)
+            elif isinstance(rec, CommitRec):
+                active.pop(rec.txn, None)
+            elif isinstance(rec, AbortRec):
+                active.pop(rec.txn, None)
+            if len(window) >= batch_window:
+                flush_window()
+        flush_window()
+        stats.log_records = done
 
-    stats.redo = dc.redo_stats
-    if cursor is not None:
-        stats.cursor_traversals = cursor.traversals
-        stats.cursor_reuses = cursor.reuses
-    stats.redo_wall_ms = (time.perf_counter() - t1) * 1e3
+        stats.redo = dc.redo_stats
+        if cursor is not None:
+            stats.cursor_traversals = cursor.traversals
+            stats.cursor_reuses = cursor.reuses
+        stats.redo_wall_ms = (time.perf_counter() - t1) * 1e3
+        rdsp.set(log_records=done, windows=stats.windows,
+                 redo_wall_ms=round(stats.redo_wall_ms, 3))
     stats.io = iosim.finish()
     stats.modeled_redo_ms = stats.io.modeled_ms
     # detach the IO model: undo / end-of-recovery checkpoint / post-recovery
@@ -261,19 +323,21 @@ def recover(image: CrashImage, strategy: Strategy, *,
     dc.pool.iosim = None
 
     # ----------------------------------------------------------- undo pass
-    tc = TransactionalComponent(log, dc)
-    tc.active = dict(active)
-    # txn ids must never be reused across restarts (a new txn id colliding
-    # with a pre-crash aborted txn would corrupt outcome attribution).
-    # LogManager tracks the high-water mark at append time, so no second
-    # O(log) scan is needed here.
-    tc._next_txn = log.max_txn + 1
-    stats.losers = len(active)
-    if run_undo:
-        before = len(log)
-        for txn in sorted(active, key=lambda t: -active[t]):
-            tc.abort(txn)
-        stats.undone_ops = len(log) - before - len(active)  # CLRs written
+    with _TRACER.span("undo", losers=len(active)) as usp:
+        tc = TransactionalComponent(log, dc)
+        tc.active = dict(active)
+        # txn ids must never be reused across restarts (a new txn id
+        # colliding with a pre-crash aborted txn would corrupt outcome
+        # attribution).  LogManager tracks the high-water mark at append
+        # time, so no second O(log) scan is needed here.
+        tc._next_txn = log.max_txn + 1
+        stats.losers = len(active)
+        if run_undo:
+            before = len(log)
+            for txn in sorted(active, key=lambda t: -active[t]):
+                tc.abort(txn)
+            stats.undone_ops = len(log) - before - len(active)  # CLRs written
+            usp.set(undone_ops=stats.undone_ops)
 
     # ----------------------------------------------- end-of-recovery checkpoint
     # Mandatory for a *live* database: pages dirtied by redo carry their
@@ -282,7 +346,8 @@ def recover(image: CrashImage, strategy: Strategy, *,
     # previous Delta record's TC-LSN") for any post-recovery Delta record.
     # Flushing them here — exactly what SQL Server's end-of-recovery
     # checkpoint does — restores the invariant and resets the redo baseline.
-    tc.checkpoint()
+    with _TRACER.span("checkpoint"):
+        tc.checkpoint()
 
     db = Database.__new__(Database)
     db.store, db.log, db.dc, db.tc = store, log, dc, tc
@@ -290,6 +355,10 @@ def recover(image: CrashImage, strategy: Strategy, *,
     db.bg_flush_per_txn = bg_flush_per_txn
     db._updates_since_tracker = 0
     stats.total_wall_ms = (time.perf_counter() - t0) * 1e3
+    rspan.set(log_records=stats.log_records,
+              total_wall_ms=round(stats.total_wall_ms, 3))
+    stats.publish()
+    _C_RECOVER_RUNS.inc()
     return db, stats
 
 

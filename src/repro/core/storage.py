@@ -22,6 +22,8 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional
 
+from ..obs import metrics as _metrics
+from ..obs.trace import TRACER as _TRACER
 from .pages import Page
 from .records import NULL_PID, PID
 
@@ -64,10 +66,20 @@ class IOSim:
 
     # -------------------------------------------------------------- demand IO
     def demand_read(self, pid: PID) -> None:
-        """Synchronous random read of one page (redo stalls)."""
+        """Synchronous random read of one page (redo stalls).
+
+        When tracing is enabled, each demand (consume) is emitted as an
+        ``io.demand`` event carrying the *modeled* clock and outcome, so
+        true per-record prefetch overlap can be computed from the trace
+        (``prefetch_overlap``) instead of inferred from aggregate hit
+        counters."""
+        t0 = self.clock
         if pid in self._done:
             self.stats.prefetch_hits += 1
             self._done.discard(pid)
+            if _TRACER.enabled:
+                _TRACER.event("io.demand", pid=pid, outcome="hit",
+                              clock=round(t0, 3))
             return
         t = self._inflight.pop(pid, None)
         if t is not None:
@@ -75,12 +87,21 @@ class IOSim:
             if t > self.clock:
                 self.stats.partial_stalls += 1
                 self.clock = t
+                outcome = "partial"
             else:
                 self.stats.prefetch_hits += 1
+                outcome = "hit"
             self._done.discard(pid)
+            if _TRACER.enabled:
+                _TRACER.event("io.demand", pid=pid, outcome=outcome,
+                              clock=round(t0, 3),
+                              stall_ms=round(self.clock - t0, 3))
             return
         self.stats.sync_reads += 1
         self.clock += self.m.t_rand
+        if _TRACER.enabled:
+            _TRACER.event("io.demand", pid=pid, outcome="sync",
+                          clock=round(t0, 3), stall_ms=self.m.t_rand)
 
     def log_read(self, n_pages: int = 1) -> None:
         self.stats.log_pages += n_pages
@@ -118,6 +139,9 @@ class IOSim:
             self.stats.prefetch_reads += len(g)
             for p in g:
                 self._inflight[p] = fin
+            if _TRACER.enabled:
+                _TRACER.event("io.prefetch.issue", pids=list(g),
+                              clock=round(self.clock, 3), fin=round(fin, 3))
 
     def work(self, ms: float) -> None:
         """Non-IO redo work advances the clock (lets prefetch overlap)."""
@@ -130,6 +154,52 @@ class IOSim:
     def finish(self) -> IOStats:
         self.stats.modeled_ms = self.clock
         return self.stats
+
+
+# --------------------------------------------------------------------------
+# trace-derived IO analysis (the honest view the batched-mode pacing fix is
+# validated against)
+def issue_schedule(events) -> list:
+    """Prefetch issue order from traced events: the list of pid groups, in
+    issue order.  Pacing parity between per-record and batched redo means
+    identical schedules here — issue *clocks* may legitimately differ,
+    because demand stalls advance the modeled clock at different points."""
+    return [tuple(e["attrs"]["pids"]) for e in events
+            if e.get("name") == "io.prefetch.issue"]
+
+
+def prefetch_overlap(events) -> dict:
+    """True prefetch overlap from traced issue/consume events.
+
+    ``overlap`` is the fraction of demand reads fully absorbed by prefetch
+    (outcome "hit"); ``stall_ms`` sums the modeled time redo actually
+    waited (partial stalls + sync reads)."""
+    issued = consumed = hits = partials = syncs = 0
+    stall = 0.0
+    for e in events:
+        name = e.get("name")
+        if name == "io.prefetch.issue":
+            issued += len(e["attrs"]["pids"])
+        elif name == "io.demand":
+            consumed += 1
+            a = e["attrs"]
+            o = a["outcome"]
+            if o == "hit":
+                hits += 1
+            elif o == "partial":
+                partials += 1
+                stall += a.get("stall_ms", 0.0)
+            else:
+                syncs += 1
+                stall += a.get("stall_ms", 0.0)
+    return {"issued": issued, "consumed": consumed, "hits": hits,
+            "partials": partials, "syncs": syncs,
+            "stall_ms": round(stall, 3),
+            "overlap": round(hits / consumed, 4) if consumed else 0.0}
+
+
+_C_DECODE_HITS = _metrics.counter("pagestore.decode_hits")
+_C_DECODE_MISSES = _metrics.counter("pagestore.decode_misses")
 
 
 class PageStore:
@@ -153,6 +223,8 @@ class PageStore:
         # entries are private snapshots (reads hand out copies), so crash
         # semantics still flow through the serialized form only.
         self._decoded: Dict[bytes, Page] = {}
+        self.decode_hits = 0            # this instance's cache outcomes —
+        self.decode_misses = 0          # the cache *object* may be shared
         self._next_pid: PID = 1
         self.master: dict = {}          # e.g. {'rssp_rec_lsn': ..., 'ckpt_lsn': ...}
 
@@ -186,6 +258,11 @@ class PageStore:
             if len(self._decoded) >= self.DECODE_CACHE_MAX:
                 self._decoded.clear()
             cached = self._decoded[raw] = Page.from_bytes(raw)  # CRC-checked
+            self.decode_misses += 1
+            _C_DECODE_MISSES.inc()
+        else:
+            self.decode_hits += 1
+            _C_DECODE_HITS.inc()
         return cached.copy()
 
     def has_page(self, pid: PID) -> bool:

@@ -27,6 +27,7 @@ import tempfile
 from pathlib import Path
 from typing import Union
 
+from ..obs import metrics as _metrics
 from .errors import BackendMissingError
 
 MANIFEST = "MANIFEST"
@@ -62,6 +63,15 @@ class MediaBackend:
         except KeyError:
             return False
 
+    def _init_metrics(self, kind: str) -> None:
+        """Blob-I/O probes, labelled per backend kind; subclasses call
+        this from ``__init__`` and count through the cached handles."""
+        self._c_put = _metrics.counter("media.put_blobs", backend=kind)
+        self._c_put_bytes = _metrics.counter("media.put_bytes", backend=kind)
+        self._c_get = _metrics.counter("media.get_blobs", backend=kind)
+        self._c_get_bytes = _metrics.counter("media.get_bytes", backend=kind)
+        self._c_del = _metrics.counter("media.delete_blobs", backend=kind)
+
 
 class MemoryBackend(MediaBackend):
     """Blobs in a dict: same codec bytes, no disk.  The default backend —
@@ -70,18 +80,25 @@ class MemoryBackend(MediaBackend):
 
     def __init__(self):
         self._blobs: dict[str, bytes] = {}
+        self._init_metrics("memory")
 
     def put(self, name: str, data: bytes) -> None:
         self._blobs[name] = bytes(data)
+        self._c_put.inc()
+        self._c_put_bytes.inc(len(data))
 
     def get(self, name: str) -> bytes:
         try:
-            return self._blobs[name]
+            raw = self._blobs[name]
         except KeyError:
             raise BackendMissingError(name, "MemoryBackend") from None
+        self._c_get.inc()
+        self._c_get_bytes.inc(len(raw))
+        return raw
 
     def delete(self, name: str) -> None:
-        self._blobs.pop(name, None)
+        if self._blobs.pop(name, None) is not None:
+            self._c_del.inc()
 
     def list(self, prefix: str = "") -> list[str]:
         return sorted(n for n in self._blobs if n.startswith(prefix))
@@ -117,6 +134,7 @@ class DirectoryBackend(MediaBackend):
     def __init__(self, root: Union[str, Path]):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self._init_metrics("directory")
         self._names: set[str] = set()
         self._manifest_ops = 0          # lines in the on-disk op log
         self.manifest_bytes_written = 0  # appends + compactions, for the
@@ -192,6 +210,8 @@ class DirectoryBackend(MediaBackend):
     # ---------------------------------------------------------- interface
     def put(self, name: str, data: bytes) -> None:
         self._write_atomic(self._path(name), data)
+        self._c_put.inc()
+        self._c_put_bytes.inc(len(data))
         if name not in self._names:
             self._names.add(name)
             self._append_manifest(f"+{name}")
@@ -199,7 +219,10 @@ class DirectoryBackend(MediaBackend):
     def get(self, name: str) -> bytes:
         if name not in self._names:
             raise BackendMissingError(name, f"DirectoryBackend({self.root})")
-        return self._path(name).read_bytes()
+        raw = self._path(name).read_bytes()
+        self._c_get.inc()
+        self._c_get_bytes.inc(len(raw))
+        return raw
 
     def get_head(self, name: str, n: int) -> bytes:
         if name not in self._names:
@@ -210,6 +233,7 @@ class DirectoryBackend(MediaBackend):
     def delete(self, name: str) -> None:
         if name not in self._names:
             return
+        self._c_del.inc()
         self._names.discard(name)
         self._append_manifest(f"-{name}")   # unlist first: a crash leaves
         try:                                # garbage, never a listed-but-

@@ -33,6 +33,7 @@ from ..archive.snapshot import RestoreStats, SnapshotStore
 from ..core.log import LogManager
 from ..core.records import LSN
 from ..core.tc import Database
+from ..obs.trace import TRACER as _TRACER
 from .backend import MediaBackend, open_backend
 
 BackendLike = Union[str, Path, MediaBackend]
@@ -63,15 +64,18 @@ def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
     (window + in-flight straddlers + LRU), independent of archive length —
     an archive much larger than RAM restores without materializing it.
     ``streaming=False`` keeps the materializing reference path."""
-    backend, archive, store = load_media(where, cache_segments=cache_segments)
-    if target_lsn is None:
-        target_lsn = archive.archived_upto
-        if target_lsn == 0:
-            raise ValueError(
-                f"nothing to restore: backend {where!r} holds no sealed "
-                "segments (was the archiver ever run?)")
-    return store.restore(target_lsn, streaming=streaming,
-                         apply_window=apply_window, **db_kwargs)
+    with _TRACER.span("cold_restore", streaming=streaming) as sp:
+        backend, archive, store = load_media(where,
+                                             cache_segments=cache_segments)
+        if target_lsn is None:
+            target_lsn = archive.archived_upto
+            if target_lsn == 0:
+                raise ValueError(
+                    f"nothing to restore: backend {where!r} holds no sealed "
+                    "segments (was the archiver ever run?)")
+        sp.set(target_lsn=target_lsn, segments=len(archive.segments))
+        return store.restore(target_lsn, streaming=streaming,
+                             apply_window=apply_window, **db_kwargs)
 
 
 def cold_restore_replica(where: BackendLike, replica_id: str, *,

@@ -1,0 +1,52 @@
+"""Unified observability layer: metrics registry + span/event tracer +
+recovery-timeline renderer.
+
+Quick tour::
+
+    from repro import obs
+
+    obs.enable()                         # tracing on (metrics are always on)
+    db, stats = recover(image, Strategy.LOG1, batched=True)
+    obs.disable()
+
+    print(obs.render_timeline(snapshot=obs.snapshot()))
+    obs.trace.export_jsonl("artifacts/recovery_trace.jsonl")
+
+    obs.snapshot("recovery")             # {'recovery.redo_wall_ms': ..., ...}
+    obs.reset()                          # zero metrics + drop trace events
+
+Metrics (counters/gauges/histograms) are always on — a probe costs one
+attribute increment, same as the ``self.x += 1`` counters it unifies.
+Tracing is off by default; every tracing probe no-ops behind a shared null
+span / an ``if TRACER.enabled`` guard, and the bound is CI-asserted (see
+``benchmarks/recovery_bench.bench_probe_overhead``).
+"""
+from . import metrics, timeline, trace
+from .metrics import (REGISTRY, counter, gauge, histogram, load_dataclass,
+                      publish_dataclass, snapshot, value)
+from .timeline import build_tree, load_jsonl, render_timeline
+from .trace import TRACER, event, span
+
+__all__ = [
+    "metrics", "trace", "timeline",
+    "REGISTRY", "counter", "gauge", "histogram", "value", "snapshot",
+    "publish_dataclass", "load_dataclass",
+    "TRACER", "span", "event",
+    "render_timeline", "build_tree", "load_jsonl",
+    "enable", "disable", "reset",
+]
+
+
+def enable() -> None:
+    """Turn tracing on (metrics need no enabling)."""
+    trace.TRACER.enabled = True
+
+
+def disable() -> None:
+    trace.TRACER.enabled = False
+
+
+def reset() -> None:
+    """Zero every metric in place and drop all trace events."""
+    metrics.REGISTRY.reset()
+    trace.TRACER.clear()

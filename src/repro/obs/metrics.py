@@ -1,0 +1,230 @@
+"""Process-wide metrics registry: counters, gauges, histograms.
+
+One registry (``REGISTRY``) spans every subsystem so a single recovery run
+can be read as one coherent story — redo phase walls next to archive LRU
+hits next to replica watermark lag — instead of per-object tallies that
+die with their objects.  Design constraints, in order:
+
+  * The *hot-path* cost of a probe must match the ``self.x += 1`` idiom it
+    sits beside: call sites resolve their ``Counter`` once (module scope or
+    ``__init__``) and then pay one attribute increment per event.  For that
+    to be safe, ``reset()`` zeroes metric objects **in place** — it never
+    replaces them — so cached references stay live across resets.
+  * Metrics are identified by ``name`` plus optional labels, flattened into
+    one key string (``repl.shard.lag{replica=r1,shard=2}``) with labels
+    sorted for stability.  ``snapshot()`` returns plain JSON-able data.
+  * No dependency on anything else in ``repro`` (everything else imports
+    *us*).
+
+``publish_dataclass`` / ``load_dataclass`` bridge the legacy stats
+dataclasses (``RecoveryStats``, ``RestoreStats``): every numeric field —
+recursing into nested stats — lands as a ``<prefix>.<field>`` gauge, and a
+fresh dataclass can be rebuilt from the registry, making the dataclasses
+views over the registry without giving up their cheap local tallying.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Union
+
+
+class Counter:
+    """Monotonic within a reset epoch; ``reset()`` starts a new epoch."""
+    __slots__ = ("value",)
+    kind = "counter"
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def reset(self) -> None:
+        self.value = 0
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+    __slots__ = ("value",)
+    kind = "gauge"
+
+    def __init__(self):
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+    def reset(self) -> None:
+        self.value = 0
+
+
+class Histogram:
+    """Streaming count/sum/min/max — enough for window-size and latency
+    distributions without bucket-boundary bikeshedding."""
+    __slots__ = ("count", "total", "min", "max")
+    kind = "histogram"
+
+    def __init__(self):
+        self.reset()
+
+    def observe(self, v) -> None:
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def reset(self) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def summary(self) -> dict:
+        if not self.count:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "avg": 0.0}
+        return {"count": self.count, "sum": round(self.total, 6),
+                "min": self.min, "max": self.max,
+                "avg": round(self.total / self.count, 6)}
+
+
+Metric = Union[Counter, Gauge, Histogram]
+
+
+class MetricsRegistry:
+    def __init__(self):
+        self._metrics: Dict[str, Metric] = {}
+
+    # ----------------------------------------------------------------- keys
+    @staticmethod
+    def key(name: str, labels: dict) -> str:
+        if not labels:
+            return name
+        inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+        return f"{name}{{{inner}}}"
+
+    # ------------------------------------------------------------ accessors
+    def _get(self, cls, name: str, labels: dict) -> Metric:
+        k = self.key(name, labels)
+        m = self._metrics.get(k)
+        if m is None:
+            m = self._metrics[k] = cls()
+        elif type(m) is not cls:
+            raise TypeError(f"metric {k!r} already registered as "
+                            f"{type(m).__name__}, requested {cls.__name__}")
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get(Histogram, name, labels)
+
+    def value(self, name: str, **labels):
+        """Current value (counters/gauges) or summary dict (histograms);
+        0 for a metric nothing has touched yet."""
+        m = self._metrics.get(self.key(name, labels))
+        if m is None:
+            return 0
+        return m.summary() if isinstance(m, Histogram) else m.value
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._metrics
+
+    def __len__(self) -> int:
+        return len(self._metrics)
+
+    # -------------------------------------------------------- bulk actions
+    def snapshot(self, prefix: str = "") -> dict:
+        """Plain-data view of every metric whose key starts with
+        ``prefix``, sorted by key — what ``benchmarks/run.py`` embeds in
+        each bench artifact."""
+        out = {}
+        for k in sorted(self._metrics):
+            if not k.startswith(prefix):
+                continue
+            m = self._metrics[k]
+            out[k] = m.summary() if isinstance(m, Histogram) else m.value
+        return out
+
+    def reset(self, prefix: str = "") -> None:
+        """Zero matching metrics *in place* — cached Counter/Gauge
+        references at call sites stay valid across resets."""
+        for k, m in self._metrics.items():
+            if k.startswith(prefix):
+                m.reset()
+
+
+#: the process-wide registry; import-site convenience shims below
+REGISTRY = MetricsRegistry()
+
+
+def counter(name: str, **labels) -> Counter:
+    return REGISTRY.counter(name, **labels)
+
+
+def gauge(name: str, **labels) -> Gauge:
+    return REGISTRY.gauge(name, **labels)
+
+
+def histogram(name: str, **labels) -> Histogram:
+    return REGISTRY.histogram(name, **labels)
+
+
+def value(name: str, **labels):
+    return REGISTRY.value(name, **labels)
+
+
+def snapshot(prefix: str = "") -> dict:
+    return REGISTRY.snapshot(prefix)
+
+
+def reset(prefix: str = "") -> None:
+    REGISTRY.reset(prefix)
+
+
+# --------------------------------------------------------------------------
+# dataclass <-> registry bridge
+def publish_dataclass(obj, prefix: str,
+                      registry: MetricsRegistry = None) -> None:
+    """Publish every numeric field of a dataclass (recursing into nested
+    dataclasses) as ``<prefix>.<field>`` gauges.  Non-numeric fields
+    (strategy names, etc.) are skipped: the registry is numeric."""
+    reg = registry if registry is not None else REGISTRY
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        name = f"{prefix}.{f.name}"
+        if dataclasses.is_dataclass(v) and not isinstance(v, type):
+            publish_dataclass(v, name, reg)
+        elif isinstance(v, bool):
+            reg.gauge(name).set(int(v))
+        elif isinstance(v, (int, float)):
+            reg.gauge(name).set(v)
+
+
+def load_dataclass(cls, prefix: str, registry: MetricsRegistry = None):
+    """Rebuild a stats dataclass from its published gauges — the
+    'dataclass as a view over the registry' direction.  Fields never
+    published keep their defaults."""
+    reg = registry if registry is not None else REGISTRY
+    obj = cls()
+    for f in dataclasses.fields(obj):
+        cur = getattr(obj, f.name)
+        name = f"{prefix}.{f.name}"
+        if dataclasses.is_dataclass(cur) and not isinstance(cur, type):
+            setattr(obj, f.name, load_dataclass(type(cur), name, reg))
+        elif isinstance(cur, bool):
+            if reg.key(name, {}) in reg:
+                setattr(obj, f.name, bool(reg.value(name)))
+        elif isinstance(cur, (int, float)):
+            if reg.key(name, {}) in reg:
+                setattr(obj, f.name, type(cur)(reg.value(name)))
+    return obj

@@ -1,0 +1,149 @@
+"""Human-readable recovery timeline: span tree + cache hit-rate footer.
+
+``render_timeline`` consumes the flat tracer event list (live from
+``TRACER.events`` or re-read from a JSONL export) and draws the span tree
+with durations and attributes; point events are aggregated per parent span
+(count + sums of small numeric attributes) so a thousand ``io.demand``
+events render as one line, not a thousand.  An optional metrics snapshot
+adds a footer with the decode-cache hit rates that explain the walls.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional
+
+# point-event attrs worth summing in the aggregate line
+_SUMMED_ATTRS = ("records", "ops", "spans", "stall_ms")
+
+
+class SpanNode:
+    __slots__ = ("span_id", "name", "t_ms", "dur_ms", "attrs", "children",
+                 "event_counts", "event_sums")
+
+    def __init__(self, span_id: int, name: str, t_ms: float):
+        self.span_id = span_id
+        self.name = name
+        self.t_ms = t_ms
+        self.dur_ms: Optional[float] = None      # None: never closed
+        self.attrs: dict = {}
+        self.children: List["SpanNode"] = []
+        self.event_counts: dict = {}             # name -> count
+        self.event_sums: dict = {}               # (name, attr) -> sum
+
+    def _note_event(self, ev: dict) -> None:
+        name = ev["name"]
+        self.event_counts[name] = self.event_counts.get(name, 0) + 1
+        for k in _SUMMED_ATTRS:
+            v = ev.get("attrs", {}).get(k)
+            if isinstance(v, (int, float)):
+                key = (name, k)
+                self.event_sums[key] = self.event_sums.get(key, 0) + v
+
+
+def build_tree(events: List[dict]) -> List[SpanNode]:
+    """Rebuild the span forest from the flat begin/end/event list; returns
+    root spans in begin order.  Unclosed spans (trace cut mid-run) keep
+    ``dur_ms=None`` and render with an ellipsis."""
+    roots: List[SpanNode] = []
+    by_id: dict = {}
+    for ev in events:
+        t = ev["type"]
+        if t == "begin":
+            node = SpanNode(ev["span"], ev["name"], ev["t_ms"])
+            node.attrs.update(ev.get("attrs", {}))
+            by_id[ev["span"]] = node
+            parent = by_id.get(ev.get("parent", 0))
+            (parent.children if parent else roots).append(node)
+        elif t == "end":
+            node = by_id.get(ev["span"])
+            if node is not None:
+                node.dur_ms = ev.get("dur_ms")
+                node.attrs.update(ev.get("attrs", {}))
+        elif t == "event":
+            parent = by_id.get(ev.get("parent", 0))
+            if parent is not None:
+                parent._note_event(ev)
+    return roots
+
+
+def _fmt_attrs(attrs: dict) -> str:
+    parts = []
+    for k, v in attrs.items():
+        if isinstance(v, float):
+            v = round(v, 3)
+        parts.append(f"{k}={v}")
+    return "  ".join(parts)
+
+
+def _render_node(node: SpanNode, lines: List[str], prefix: str,
+                 is_last: bool, is_root: bool) -> None:
+    dur = "…" if node.dur_ms is None else f"{node.dur_ms:.2f}ms"
+    attrs = _fmt_attrs(node.attrs)
+    head = "" if is_root else ("└─ " if is_last else "├─ ")
+    lines.append(f"{prefix}{head}{node.name}  {dur}"
+                 + (f"  [{attrs}]" if attrs else ""))
+    child_prefix = prefix if is_root else prefix + ("   " if is_last
+                                                    else "│  ")
+    # aggregated point events first, then child spans
+    tails: List[str] = []
+    for name in sorted(node.event_counts):
+        sums = "  ".join(
+            f"{k}={round(v, 3)}" for (n, k), v in sorted(node.event_sums.items())
+            if n == name)
+        tails.append(f"{node.event_counts[name]}x {name}"
+                     + (f"  [{sums}]" if sums else ""))
+    items = tails + node.children
+    for i, item in enumerate(items):
+        last = i == len(items) - 1
+        if isinstance(item, str):
+            lines.append(f"{child_prefix}{'└─ ' if last else '├─ '}{item}")
+        else:
+            _render_node(item, lines, child_prefix, last, False)
+
+
+def _cache_footer(snap: dict) -> List[str]:
+    """Hit-rate lines for the decode caches, from a metrics snapshot."""
+    lines = []
+    pairs = [
+        ("pagestore decode cache", "pagestore.decode_hits",
+         "pagestore.decode_misses", "misses"),
+        ("archive segment LRU", "archive.cache_hits",
+         "archive.segment_decodes", "decodes"),
+    ]
+    for label, hit_key, miss_key, miss_word in pairs:
+        hits = snap.get(hit_key, 0)
+        misses = snap.get(miss_key, 0)
+        total = hits + misses
+        if not total:
+            continue
+        lines.append(f"cache: {label}  {hits} hits / {misses} {miss_word}"
+                     f"  ({100.0 * hits / total:.1f}% hit)")
+    return lines
+
+
+def render_timeline(events: Optional[List[dict]] = None,
+                    snapshot: Optional[dict] = None) -> str:
+    """Render the trace as an indented tree.  ``events`` defaults to the
+    live ``TRACER.events``; pass a metrics ``snapshot`` to append the
+    cache hit-rate footer."""
+    if events is None:
+        from .trace import TRACER
+        events = TRACER.events
+    lines: List[str] = []
+    for root in build_tree(events):
+        _render_node(root, lines, "", True, True)
+    if snapshot:
+        footer = _cache_footer(snapshot)
+        if footer:
+            if lines:
+                lines.append("")
+            lines.extend(footer)
+    return "\n".join(lines)
+
+
+def load_jsonl(path) -> List[dict]:
+    """Read back an ``export_jsonl`` trace."""
+    return [json.loads(line)
+            for line in Path(path).read_text(encoding="utf-8").splitlines()
+            if line]

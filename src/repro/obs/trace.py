@@ -1,0 +1,167 @@
+"""Structured span/event tracer with a no-op fast path.
+
+Tracing is **off by default** and every probe in the hot paths is written
+as either ``with TRACER.span(...)`` (which returns a shared no-op span when
+disabled) or ``if TRACER.enabled: TRACER.event(...)`` (so the kwargs dict
+is never even built).  The CI-asserted bound in
+``benchmarks/recovery_bench.bench_probe_overhead`` keeps this honest.
+
+Event model — a flat list of dicts, one per line in the JSONL export:
+
+  {"type": "begin", "span": 7, "parent": 3, "name": "redo.window",
+   "t_ms": 12.301, "wall": 1754550000.123, "attrs": {...}}
+  {"type": "end",   "span": 7, "name": "redo.window",
+   "t_ms": 14.875, "dur_ms": 2.574, "attrs": {...}}
+  {"type": "event", "parent": 7, "name": "io.demand",
+   "t_ms": 13.002, "attrs": {"pid": 91, "outcome": "sync"}}
+
+``t_ms`` is monotonic (``perf_counter`` relative to the tracer epoch — the
+construction or last ``clear()``); ``wall`` on begin events anchors the
+trace to wall-clock time.  Span ids are per-tracer-epoch; ``parent`` is the
+innermost open span at emit time (0 = root).  Attributes set *during* a
+span (``span.set(...)``) appear on its end event.
+
+``TRACER`` is a process-wide singleton; toggle ``TRACER.enabled`` (or the
+``enable()``/``disable()`` shims) — never rebind the name, call sites
+capture the object at import.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import List, Union
+
+
+class _NullSpan:
+    """Shared no-op span returned while tracing is disabled."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+    def set(self, **attrs):
+        return self
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tr", "name", "attrs", "span_id", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict):
+        self._tr = tracer
+        self.name = name
+        self.attrs = attrs
+        self.span_id = 0
+        self._t0 = 0.0
+
+    def __enter__(self):
+        tr = self._tr
+        self.span_id = tr._next_id
+        tr._next_id += 1
+        self._t0 = tr.now_ms()
+        tr.events.append({
+            "type": "begin", "span": self.span_id,
+            "parent": tr._stack[-1] if tr._stack else 0,
+            "name": self.name, "t_ms": round(self._t0, 3),
+            "wall": time.time(), "attrs": dict(self.attrs)})
+        tr._stack.append(self.span_id)
+        return self
+
+    def set(self, **attrs) -> "_Span":
+        """Attach/refresh attributes; they ride on the end event."""
+        self.attrs.update(attrs)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        tr = self._tr
+        t1 = tr.now_ms()
+        if tr._stack and tr._stack[-1] == self.span_id:
+            tr._stack.pop()
+        ev = {"type": "end", "span": self.span_id, "name": self.name,
+              "t_ms": round(t1, 3), "dur_ms": round(t1 - self._t0, 3),
+              "attrs": self.attrs}
+        if exc_type is not None:
+            ev["error"] = exc_type.__name__
+        tr.events.append(ev)
+        return False
+
+
+class Tracer:
+    def __init__(self, enabled: bool = False):
+        self.enabled = enabled
+        self.events: List[dict] = []
+        self._stack: List[int] = []
+        self._next_id = 1
+        self._epoch = time.perf_counter()
+
+    def now_ms(self) -> float:
+        return (time.perf_counter() - self._epoch) * 1e3
+
+    # ------------------------------------------------------------- emission
+    def span(self, name: str, **attrs) -> Union[_Span, _NullSpan]:
+        """Context manager for a nested span; no-op when disabled."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, attrs)
+
+    def event(self, name: str, **attrs) -> None:
+        """Point event, parented to the innermost open span.  Hot paths
+        must guard the *call* with ``if TRACER.enabled`` so the kwargs
+        dict is never built when tracing is off."""
+        if not self.enabled:
+            return
+        self.events.append({
+            "type": "event", "parent": self._stack[-1] if self._stack else 0,
+            "name": name, "t_ms": round(self.now_ms(), 3), "attrs": attrs})
+
+    # ------------------------------------------------------------ lifecycle
+    def clear(self) -> None:
+        """Drop all events and start a new epoch (span ids restart, t_ms
+        rebases to now)."""
+        self.events.clear()
+        self._stack.clear()
+        self._next_id = 1
+        self._epoch = time.perf_counter()
+
+    def export_jsonl(self, path) -> Path:
+        """One event per line; returns the path written."""
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        with open(p, "w", encoding="utf-8") as f:
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+        return p
+
+
+#: the process-wide tracer; import-site convenience shims below
+TRACER = Tracer()
+
+
+def span(name: str, **attrs):
+    return TRACER.span(name, **attrs)
+
+
+def event(name: str, **attrs) -> None:
+    TRACER.event(name, **attrs)
+
+
+def enable() -> None:
+    TRACER.enabled = True
+
+
+def disable() -> None:
+    TRACER.enabled = False
+
+
+def clear() -> None:
+    TRACER.clear()
+
+
+def export_jsonl(path) -> Path:
+    return TRACER.export_jsonl(path)

@@ -46,7 +46,9 @@ from typing import Callable, Optional, Union
 
 from ..core.dc import make_key, table_range
 from ..core.records import LSN, NULL_LSN, UpdateRec
-from .replica import REPL_KEY, REPL_TABLE, Replica, pack_watermark
+from ..obs import metrics as _metrics
+from .replica import (REPL_KEY, REPL_TABLE, _C_APPLIED_OPS, _C_APPLIED_TXNS,
+                      Replica, pack_watermark)
 
 Partitioner = Callable[[str, bytes], int]
 
@@ -184,6 +186,7 @@ class ShardedApplier(Replica):
             self._dispatched_lsn = commit_lsn
             self._since_barrier += 1
             self.applied_txns += 1
+            _C_APPLIED_TXNS.inc()
         if self._since_barrier >= self.epoch_txns:
             self.barrier()
         return n
@@ -194,6 +197,7 @@ class ShardedApplier(Replica):
             self.pump()
             if not batch.has_more and self._since_barrier:
                 self.barrier()      # end of stream closes the open epoch
+        self.publish_metrics()
         return n
 
     # ------------------------------------------------------- pump / barrier
@@ -229,6 +233,7 @@ class ShardedApplier(Replica):
         s.applied_subtxns += 1
         s.applied_ops += len(ops)
         self.applied_ops += len(ops)
+        _C_APPLIED_OPS.inc(len(ops))
 
     def barrier(self) -> LSN:
         """Epoch barrier: drain every shard through the newest dispatched
@@ -327,6 +332,31 @@ class ShardedApplier(Replica):
     # ----------------------------------------------------------- inspection
     def queued_slices(self) -> int:
         return sum(len(s.queue) for s in self.shards)
+
+    def publish_metrics(self) -> None:
+        """Refresh the live per-shard gauges: dispatched ops, dispatch
+        share (ops relative to the perfectly balanced share), volatile
+        watermark, and lag behind the newest dispatched commit — plus the
+        overall dispatch-imbalance gauge the ROADMAP's adaptive
+        re-partitioning follow-on will act on.  Runs after every applied
+        batch on the auto-pump path; manual pump/barrier drivers call it
+        directly."""
+        total = sum(s.dispatched_ops for s in self.shards)
+        fair = total / self.n_shards if total else 0.0
+        newest = self._dispatched_lsn
+        for s in self.shards:
+            wm = self.shard_watermark(s.idx)
+            labels = {"replica": self.replica_id, "shard": s.idx}
+            _metrics.gauge("repl.shard.dispatched_ops",
+                           **labels).set(s.dispatched_ops)
+            _metrics.gauge("repl.shard.dispatch_share", **labels).set(
+                round(s.dispatched_ops / fair, 4) if fair else 1.0)
+            _metrics.gauge("repl.shard.watermark", **labels).set(wm)
+            _metrics.gauge("repl.shard.lag", **labels).set(
+                max(0, newest - wm) if newest != NULL_LSN else 0)
+        _metrics.gauge("repl.dispatch_imbalance",
+                       replica=self.replica_id).set(round(self.imbalance(),
+                                                          4))
 
     def imbalance(self) -> float:
         """Dispatch skew: max over shards of dispatched ops, relative to the

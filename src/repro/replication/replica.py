@@ -46,7 +46,11 @@ from ..core.records import (LSN, NULL_LSN, AbortRec, CommitRec, LogRec,
                             UpdateRec)
 from ..core.recovery import RecoveryStats, Strategy, recover
 from ..core.tc import CrashImage, Database
+from ..obs import metrics as _metrics
 from .shipper import LogShipper, ShipBatch
+
+_C_APPLIED_TXNS = _metrics.counter("repl.applied_txns")
+_C_APPLIED_OPS = _metrics.counter("repl.applied_ops")
 
 REPL_TABLE = "__repl"
 REPL_KEY = b"applied"
@@ -208,7 +212,9 @@ class ApplyEngine:
         *stable commit* (non-commit tail records — in-flight work, abort
         trails — cannot make a committed-only replica stale, and neither can
         a commit record sitting past the stable point: it never shipped)."""
-        return max(0, primary_log.last_stable_commit_lsn - self.catchup_lsn())
+        lag = max(0, primary_log.last_stable_commit_lsn - self.catchup_lsn())
+        _metrics.gauge("repl.lag", replica=self.replica_id).set(lag)
+        return lag
 
 
 class Replica(ApplyEngine):
@@ -286,6 +292,10 @@ class Replica(ApplyEngine):
         self.applied_lsn, self.resume_lsn = commit_lsn, resume
         self.applied_txns += 1
         self.applied_ops += len(ops)
+        _C_APPLIED_TXNS.inc()
+        _C_APPLIED_OPS.inc(len(ops))
+        _metrics.gauge("repl.applied_lsn",
+                       replica=self.replica_id).set(commit_lsn)
         return len(ops)
 
     # --------------------------------------------------------------- reads

@@ -24,6 +24,10 @@ from typing import List, Optional, Union
 from ..archive.errors import SnapshotRequired
 from ..core.log import LogManager, TruncatedLogError
 from ..core.records import LSN, AbortRec, CommitRec, LogRec, UpdateRec
+from ..obs import metrics as _metrics
+
+_C_SHIPPED = _metrics.counter("ship.shipped_records")
+_C_POLLS = _metrics.counter("ship.polls")
 
 # What crosses the wire: the TC-logical records a committed-only consumer
 # needs.  DC-private physical records (Delta, BW, SMO, RSSP) and checkpoint
@@ -146,6 +150,10 @@ class LogShipper:
         self.cursors[replica_id] = nxt
         self.shipped_records += len(shipped)
         self.polls += 1
+        _C_SHIPPED.inc(len(shipped))
+        _C_POLLS.inc()
+        _metrics.gauge("ship.backlog", replica=replica_id).set(
+            max(0, self.log.stable_lsn - (nxt - 1)))
         return ShipBatch(records=shipped, from_lsn=cur, next_lsn=nxt,
                          has_more=nxt <= self.log.stable_lsn)
 
