@@ -1,6 +1,6 @@
 """Bench-artifact regression gate.
 
-    PYTHONPATH=src python -m benchmarks.diff        (or: make bench-diff)
+    PYTHONPATH=src python -m benchmarks.diff [--json]   (or: make bench-diff)
 
 Compares the newest ``artifacts/bench_<n>.json`` against the previous run
 *of the same mode* (fast vs full — their absolute numbers are not
@@ -10,6 +10,16 @@ oracles are gated: a 2x slide there is a real pipeline regression, not a
 tuning drift in an informational table.  With fewer than two comparable
 artifacts the gate is a no-op pass — the first run of a fresh checkout
 has nothing to diff against.
+
+Artifact hygiene: a bench_<n>.json that cannot be read or parsed (a
+truncated write, a corrupted checkout) is *warned about by name*, never
+silently skipped — a gate that quietly ignores its own baseline is not a
+gate.  If the artifact that cannot be read is the newest one, there is
+nothing trustworthy to judge, so the gate warns and no-op passes rather
+than judging the current commit against a stale pair.
+
+``--json`` emits one machine-readable verdict object (same spirit as
+``reprolint --json``) so CI consumes every gate in a uniform shape.
 """
 from __future__ import annotations
 
@@ -17,6 +27,7 @@ import json
 import re
 import sys
 from pathlib import Path
+from typing import Optional
 
 ART_ROOT = Path(__file__).resolve().parents[1] / "artifacts"
 
@@ -29,19 +40,38 @@ THRESHOLD = 2.0
 MIN_US = 50.0
 
 
-def load_runs(root: Path = ART_ROOT) -> list[dict]:
-    """All bench summaries, oldest first."""
-    runs = []
+def scan_artifacts(root: Optional[Path] = None
+                   ) -> tuple[list[dict], list[str], bool]:
+    """``(summaries oldest-first, warnings, newest_unreadable)``.
+
+    Every ``bench_<n>.json`` that matches the name pattern but cannot be
+    read/parsed produces a warning naming the file and the error;
+    ``newest_unreadable`` is True when the artifact with the highest run
+    index is among them (the gate's subject is untrustworthy)."""
+    root = ART_ROOT if root is None else root
+    entries: list[tuple[int, Optional[dict]]] = []
+    warnings: list[str] = []
     for p in sorted(root.glob("bench_*.json")):
         m = re.fullmatch(r"bench_(\d+)\.json", p.name)
         if not m:
             continue
         try:
-            runs.append((int(m.group(1)), json.loads(p.read_text())))
-        except (OSError, json.JSONDecodeError):
-            continue
-    runs.sort(key=lambda t: t[0])
-    return [r for _, r in runs]
+            entries.append((int(m.group(1)), json.loads(p.read_text())))
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as exc:
+            warnings.append(f"unreadable bench artifact {p.name}: "
+                            f"{type(exc).__name__}: {exc}")
+            entries.append((int(m.group(1)), None))
+    entries.sort(key=lambda t: t[0])
+    newest_unreadable = bool(entries) and entries[-1][1] is None
+    return ([r for _, r in entries if r is not None], warnings,
+            newest_unreadable)
+
+
+def load_runs(root: Optional[Path] = None) -> list[dict]:
+    """All readable bench summaries, oldest first (compat shim over
+    ``scan_artifacts`` — warnings are the caller's job there)."""
+    runs, _, _ = scan_artifacts(root)
+    return runs
 
 
 def compare_runs(old: dict, new: dict,
@@ -67,24 +97,61 @@ def compare_runs(old: dict, new: dict,
     return regressions
 
 
-def main() -> int:
-    runs = load_runs()
+def diff(root: Optional[Path] = None) -> dict:
+    """The gate as data: ``{ok, status, detail, warnings, regressions,
+    old_run, new_run, mode, threshold}``.  ``ok`` is False only for real
+    regressions — missing/unreadable baselines degrade to a loud pass."""
+    out = {"ok": True, "status": "", "detail": "", "warnings": [],
+           "regressions": [], "old_run": None, "new_run": None,
+           "mode": None, "threshold": THRESHOLD}
+    runs, warnings, newest_unreadable = scan_artifacts(root)
+    out["warnings"] = warnings
+    if newest_unreadable:
+        out["status"] = "newest-unreadable"
+        out["detail"] = ("the newest bench artifact is unreadable — "
+                         "nothing trustworthy to judge; re-run "
+                         "`make bench-smoke` to lay down a fresh baseline")
+        return out
     if not runs:
-        print("bench-diff: no bench artifacts yet — nothing to compare")
-        return 0
+        out["status"] = "no-artifacts"
+        out["detail"] = "no bench artifacts yet — nothing to compare"
+        return out
     new = runs[-1]
+    out["new_run"], out["mode"] = new.get("run"), new.get("mode")
     olds = [r for r in runs[:-1] if r.get("mode") == new.get("mode")]
     if not olds:
-        print(f"bench-diff: run {new.get('run')} is the first "
-              f"{new.get('mode')}-mode artifact — nothing to compare")
-        return 0
+        out["status"] = "first-of-mode"
+        out["detail"] = (f"run {new.get('run')} is the first "
+                         f"{new.get('mode')}-mode artifact — nothing "
+                         "to compare")
+        return out
     old = olds[-1]
-    regressions = compare_runs(old, new)
-    label = (f"run {old.get('run')} -> {new.get('run')} "
-             f"({new.get('mode')} mode)")
-    if regressions:
-        print(f"bench-diff: {len(regressions)} regression(s) {label}:")
-        for line in regressions:
+    out["old_run"] = old.get("run")
+    out["regressions"] = compare_runs(old, new)
+    out["ok"] = not out["regressions"]
+    out["status"] = "regressions" if out["regressions"] else "clean"
+    return out
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    as_json = "--json" in args
+    verdict = diff()
+    if as_json:
+        print(json.dumps(verdict, indent=1))
+        return 0 if verdict["ok"] else 1
+    for w in verdict["warnings"]:
+        print(f"bench-diff: WARNING: {w}", file=sys.stderr)
+    if verdict["status"] in ("newest-unreadable", "no-artifacts",
+                             "first-of-mode"):
+        print(f"bench-diff: {verdict['detail']}")
+        return 0
+    label = (f"run {verdict['old_run']} -> {verdict['new_run']} "
+             f"({verdict['mode']} mode)")
+    if verdict["regressions"]:
+        print(f"bench-diff: {len(verdict['regressions'])} "
+              f"regression(s) {label}:")
+        for line in verdict["regressions"]:
             print(f"  REGRESSION {line}")
         return 1
     print(f"bench-diff: no >{THRESHOLD:.0f}x regressions in "

@@ -28,11 +28,23 @@ ART = ART_ROOT / "bench"
 
 
 def _next_run_index() -> int:
+    """Next monotonic run index.  A truncated/corrupt bench_<n>.json still
+    claims its index (so we never overwrite evidence of the torn write)
+    but is warned about loudly — bench-diff will skip it, and a silent
+    skip here would leave the perf trajectory with an unexplained hole."""
     mx = 0
     for p in ART_ROOT.glob("bench_*.json"):
         m = re.fullmatch(r"bench_(\d+)\.json", p.name)
-        if m:
-            mx = max(mx, int(m.group(1)))
+        if not m:
+            continue
+        mx = max(mx, int(m.group(1)))
+        try:
+            json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as exc:
+            print(f"bench: WARNING: existing artifact {p.name} is "
+                  f"unreadable ({type(exc).__name__}: {exc}) — keeping "
+                  "its run index, bench-diff will not use it as a "
+                  "baseline", file=sys.stderr)
     return mx + 1
 
 

@@ -159,6 +159,7 @@ class LogArchive:
         return arch
 
     def _save_meta(self) -> None:
+        # reprolint: allow(wal-discipline) — archive meta records what seal/prune already did; seal clamps its segment cut to stable_lsn before this runs, and prune only ever shrinks retention
         self.backend.put(META_NAME, encode_archive_meta(
             self._retained_from, self._archived_upto, self.pruned_records))
 

@@ -229,6 +229,7 @@ class LogManager:
         if backend is None:
             raise ValueError("save_master needs a MediaBackend (none given "
                              "and no backend-backed archive is attached)")
+        # reprolint: allow(wal-discipline) — the master pointer is the recovery bootstrap, not data: it only names LSNs that seal() already clamped to stable_lsn, and a stale master is always safe (recovery just scans further)
         backend.put("master", encode_master(self.master))
 
     @staticmethod

@@ -261,6 +261,7 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
                             pace_pf_list(i)
                     else:
                         iosim.work(work_ms_per_op * len(window))
+                    # reprolint: allow(sorted-stream) — the redo window is cut from a single forward log scan, so it is LSN-ordered by construction
                     dc.apply_batch(window,
                                    mode="dpt" if strategy.uses_dpt
                                    else "basic",

@@ -12,7 +12,6 @@ background flushing, and crash-image capture.
 """
 from __future__ import annotations
 
-import random
 from dataclasses import dataclass, field
 from typing import Optional
 

@@ -104,7 +104,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
                 collective_bytes=coll["total_bytes"] * n_dev,
                 n_devices=n_dev, cfg=cfg, shape=shape),
         )
-    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+    # reprolint: allow(loud-corruption) — a failing sweep cell is a result to record, not a crash: the error and traceback land in the cell artifact
+    except Exception as e:
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])
     out.parent.mkdir(parents=True, exist_ok=True)

@@ -41,7 +41,7 @@ __all__ = [
 ]
 
 
-def __getattr__(name):
+def __getattr__(name: str) -> object:
     if name in _LAZY:
         from . import restore
         return getattr(restore, name)

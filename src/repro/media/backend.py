@@ -78,7 +78,7 @@ class MemoryBackend(MediaBackend):
     everything PR 3 did in-process keeps exactly its old semantics, just
     with encoded segments instead of shared record references."""
 
-    def __init__(self):
+    def __init__(self) -> None:
         self._blobs: dict[str, bytes] = {}
         self._init_metrics("memory")
 
@@ -131,7 +131,7 @@ class DirectoryBackend(MediaBackend):
     # rewriting a tiny manifest over and over)
     COMPACT_MIN_OPS = 64
 
-    def __init__(self, root: Union[str, Path]):
+    def __init__(self, root: Union[str, Path]) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._init_metrics("directory")
@@ -181,6 +181,7 @@ class DirectoryBackend(MediaBackend):
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
+        # reprolint: allow(loud-corruption) — unlink-the-temp cleanup that re-raises unconditionally; BaseException so KeyboardInterrupt cannot leak a torn temp file
         except BaseException:
             try:
                 os.unlink(tmp)

@@ -36,13 +36,16 @@ from __future__ import annotations
 
 import struct
 import zlib
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 from ..core.log import Master
 from ..core.records import (AbortRec, BWRec, BeginCkptRec, CLRRec, CommitRec,
                             DeltaRec, EndCkptRec, LogRec, RSSPRec, RecKind,
                             SMORec, SnapshotRec, UpdateRec)
 from .errors import CorruptSegmentError, UnknownFormatError
+
+if TYPE_CHECKING:   # import cycle: archive imports the codec at runtime
+    from ..archive.snapshot import Snapshot
 
 FORMAT_VERSION = 1
 # segments evolved past the other blob kinds: v2 adds the feature byte
@@ -64,7 +67,7 @@ _FRAME = struct.Struct("<II")      # length, crc32
 class _Writer:
     __slots__ = ("parts",)
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.parts: list[bytes] = []
 
     def u32(self, v: int) -> None:
@@ -94,7 +97,7 @@ class _Writer:
 class _Reader:
     __slots__ = ("buf", "pos", "what")
 
-    def __init__(self, buf: bytes, what: str = "payload"):
+    def __init__(self, buf: bytes, what: str = "payload") -> None:
         self.buf = buf
         self.pos = 0
         self.what = what
@@ -507,7 +510,7 @@ def encode_snapshot(snap) -> bytes:
     return b"".join(parts)
 
 
-def decode_snapshot(blob: bytes):
+def decode_snapshot(blob: bytes) -> "Snapshot":
     """Decode a snapshot blob back into an ``archive.Snapshot``."""
     from ..archive.snapshot import Snapshot  # codec stays import-light
     r = _Reader(blob, "snapshot")

@@ -29,7 +29,7 @@ class BackendMissingError(MediaError, KeyError):
     """A named blob is absent from the backend (deleted, never sealed, or
     the wrong directory was opened)."""
 
-    def __init__(self, name: str, backend: str):
+    def __init__(self, name: str, backend: str) -> None:
         self.name = name
         super().__init__(f"blob {name!r} not found in {backend}")
 

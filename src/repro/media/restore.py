@@ -52,7 +52,7 @@ def load_media(where: BackendLike, *, cache_segments: int = 8
 def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
                  *, cache_segments: int = 8, streaming: bool = True,
                  apply_window: int = 1024,
-                 **db_kwargs) -> tuple[Database, RestoreStats]:
+                 **db_kwargs: object) -> tuple[Database, RestoreStats]:
     """Point-in-time restore in a fresh process: a writable ``Database``
     equal to the committed prefix <= ``target_lsn``, built from the
     backend at ``where`` (directory path or ``MediaBackend``) and nothing
@@ -80,7 +80,8 @@ def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
 
 def cold_restore_replica(where: BackendLike, replica_id: str, *,
                          target_lsn: Optional[LSN] = None,
-                         replica_cls=None, **replica_kwargs):
+                         replica_cls: Optional[type] = None,
+                         **replica_kwargs: object) -> object:
     """Standby form of ``cold_restore``: a replica pre-seeded from the
     newest snapshot on the backend (<= ``target_lsn`` when given), its
     durable watermark at the snapshot window — subscribe it at

@@ -40,21 +40,21 @@ def shard_hint(x: Array, *axes) -> Array:
         m = _mesh_lib.thread_resources.env.physical_mesh
         if m is not None and not m.empty:
             names = set(m.axis_names)
-    except Exception:
+    except (ImportError, AttributeError):
         pass
     if not names:
         try:                               # new explicit-sharding context
             m = jax.sharding.get_abstract_mesh()
             if m is not None and m.axis_names:
                 names = set(m.axis_names)
-        except Exception:
+        except (ImportError, AttributeError):
             pass
     if not names:
         return x
     try:
         from repro.parallel.sharding import LAYOUT
         layout = LAYOUT.get()
-    except Exception:
+    except (ImportError, AttributeError, LookupError):
         layout = "tp"
     fsdp = layout in ("fsdp", "ep")    # no TP on feature dims
     batch_gets_model = layout == "fsdp"
@@ -86,6 +86,7 @@ def shard_hint(x: Array, *axes) -> Array:
     try:
         return jax.lax.with_sharding_constraint(
             x, jax.sharding.PartitionSpec(*spec))
+    # reprolint: allow(loud-corruption) — sharding hints are best-effort: outside a mesh context the constraint is meaningless and the identity is the correct degradation
     except Exception:
         return x
 

@@ -25,7 +25,7 @@ views over the registry without giving up their cheap local tallying.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Union
+from typing import Any, Dict, Type, TypeVar, Union
 
 
 class Counter:
@@ -33,7 +33,7 @@ class Counter:
     __slots__ = ("value",)
     kind = "counter"
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.value = 0
 
     def inc(self, n: int = 1) -> None:
@@ -48,13 +48,13 @@ class Gauge:
     __slots__ = ("value",)
     kind = "gauge"
 
-    def __init__(self):
-        self.value = 0
+    def __init__(self) -> None:
+        self.value: float = 0
 
-    def set(self, v) -> None:
+    def set(self, v: float) -> None:
         self.value = v
 
-    def inc(self, n=1) -> None:
+    def inc(self, n: float = 1) -> None:
         self.value += n
 
     def reset(self) -> None:
@@ -67,10 +67,10 @@ class Histogram:
     __slots__ = ("count", "total", "min", "max")
     kind = "histogram"
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.reset()
 
-    def observe(self, v) -> None:
+    def observe(self, v: float) -> None:
         self.count += 1
         self.total += v
         if v < self.min:
@@ -84,7 +84,7 @@ class Histogram:
         self.min = float("inf")
         self.max = float("-inf")
 
-    def summary(self) -> dict:
+    def summary(self) -> Dict[str, float]:
         if not self.count:
             return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
                     "avg": 0.0}
@@ -94,41 +94,47 @@ class Histogram:
 
 
 Metric = Union[Counter, Gauge, Histogram]
+_M = TypeVar("_M", Counter, Gauge, Histogram)
+#: what ``value()`` yields: a scalar, or a histogram summary dict
+Value = Union[float, Dict[str, float]]
 
 
 class MetricsRegistry:
-    def __init__(self):
+    def __init__(self) -> None:
         self._metrics: Dict[str, Metric] = {}
 
     # ----------------------------------------------------------------- keys
     @staticmethod
-    def key(name: str, labels: dict) -> str:
+    def key(name: str, labels: Dict[str, object]) -> str:
         if not labels:
             return name
         inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
         return f"{name}{{{inner}}}"
 
     # ------------------------------------------------------------ accessors
-    def _get(self, cls, name: str, labels: dict) -> Metric:
+    def _get(self, cls: Type[_M], name: str,
+             labels: Dict[str, object]) -> _M:
         k = self.key(name, labels)
         m = self._metrics.get(k)
         if m is None:
-            m = self._metrics[k] = cls()
-        elif type(m) is not cls:
+            new = cls()
+            self._metrics[k] = new
+            return new
+        if type(m) is not cls:
             raise TypeError(f"metric {k!r} already registered as "
                             f"{type(m).__name__}, requested {cls.__name__}")
         return m
 
-    def counter(self, name: str, **labels) -> Counter:
+    def counter(self, name: str, **labels: object) -> Counter:
         return self._get(Counter, name, labels)
 
-    def gauge(self, name: str, **labels) -> Gauge:
+    def gauge(self, name: str, **labels: object) -> Gauge:
         return self._get(Gauge, name, labels)
 
-    def histogram(self, name: str, **labels) -> Histogram:
+    def histogram(self, name: str, **labels: object) -> Histogram:
         return self._get(Histogram, name, labels)
 
-    def value(self, name: str, **labels):
+    def value(self, name: str, **labels: object) -> Value:
         """Current value (counters/gauges) or summary dict (histograms);
         0 for a metric nothing has touched yet."""
         m = self._metrics.get(self.key(name, labels))
@@ -143,11 +149,11 @@ class MetricsRegistry:
         return len(self._metrics)
 
     # -------------------------------------------------------- bulk actions
-    def snapshot(self, prefix: str = "") -> dict:
+    def snapshot(self, prefix: str = "") -> Dict[str, Value]:
         """Plain-data view of every metric whose key starts with
         ``prefix``, sorted by key — what ``benchmarks/run.py`` embeds in
         each bench artifact."""
-        out = {}
+        out: Dict[str, Value] = {}
         for k in sorted(self._metrics):
             if not k.startswith(prefix):
                 continue
@@ -167,23 +173,23 @@ class MetricsRegistry:
 REGISTRY = MetricsRegistry()
 
 
-def counter(name: str, **labels) -> Counter:
+def counter(name: str, **labels: object) -> Counter:
     return REGISTRY.counter(name, **labels)
 
 
-def gauge(name: str, **labels) -> Gauge:
+def gauge(name: str, **labels: object) -> Gauge:
     return REGISTRY.gauge(name, **labels)
 
 
-def histogram(name: str, **labels) -> Histogram:
+def histogram(name: str, **labels: object) -> Histogram:
     return REGISTRY.histogram(name, **labels)
 
 
-def value(name: str, **labels):
+def value(name: str, **labels: object) -> Value:
     return REGISTRY.value(name, **labels)
 
 
-def snapshot(prefix: str = "") -> dict:
+def snapshot(prefix: str = "") -> Dict[str, Value]:
     return REGISTRY.snapshot(prefix)
 
 
@@ -193,8 +199,8 @@ def reset(prefix: str = "") -> None:
 
 # --------------------------------------------------------------------------
 # dataclass <-> registry bridge
-def publish_dataclass(obj, prefix: str,
-                      registry: MetricsRegistry = None) -> None:
+def publish_dataclass(obj: Any, prefix: str,
+                      registry: "MetricsRegistry | None" = None) -> None:
     """Publish every numeric field of a dataclass (recursing into nested
     dataclasses) as ``<prefix>.<field>`` gauges.  Non-numeric fields
     (strategy names, etc.) are skipped: the registry is numeric."""
@@ -210,7 +216,11 @@ def publish_dataclass(obj, prefix: str,
             reg.gauge(name).set(v)
 
 
-def load_dataclass(cls, prefix: str, registry: MetricsRegistry = None):
+_T = TypeVar("_T")
+
+
+def load_dataclass(cls: Type[_T], prefix: str,
+                   registry: "MetricsRegistry | None" = None) -> _T:
     """Rebuild a stats dataclass from its published gauges — the
     'dataclass as a view over the registry' direction.  Fields never
     published keep their defaults."""

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import List, Optional
+from typing import Any, Dict, List, Optional
 
 # point-event attrs worth summing in the aggregate line
 _SUMMED_ATTRS = ("records", "ops", "spans", "stall_ms")
@@ -21,12 +21,12 @@ class SpanNode:
     __slots__ = ("span_id", "name", "t_ms", "dur_ms", "attrs", "children",
                  "event_counts", "event_sums")
 
-    def __init__(self, span_id: int, name: str, t_ms: float):
+    def __init__(self, span_id: int, name: str, t_ms: float) -> None:
         self.span_id = span_id
         self.name = name
         self.t_ms = t_ms
         self.dur_ms: Optional[float] = None      # None: never closed
-        self.attrs: dict = {}
+        self.attrs: Dict[str, Any] = {}
         self.children: List["SpanNode"] = []
         self.event_counts: dict = {}             # name -> count
         self.event_sums: dict = {}               # (name, attr) -> sum

@@ -30,20 +30,23 @@ from __future__ import annotations
 import json
 import time
 from pathlib import Path
-from typing import List, Union
+from types import TracebackType
+from typing import Any, Dict, List, Optional, Type, Union
 
 
 class _NullSpan:
     """Shared no-op span returned while tracing is disabled."""
     __slots__ = ()
 
-    def __enter__(self):
+    def __enter__(self) -> "_NullSpan":
         return self
 
-    def __exit__(self, exc_type, exc, tb):
+    def __exit__(self, exc_type: Optional[Type[BaseException]],
+                 exc: Optional[BaseException],
+                 tb: Optional[TracebackType]) -> bool:
         return False
 
-    def set(self, **attrs):
+    def set(self, **attrs: object) -> "_NullSpan":
         return self
 
 
@@ -53,14 +56,15 @@ _NULL_SPAN = _NullSpan()
 class _Span:
     __slots__ = ("_tr", "name", "attrs", "span_id", "_t0")
 
-    def __init__(self, tracer: "Tracer", name: str, attrs: dict):
+    def __init__(self, tracer: "Tracer", name: str,
+                 attrs: Dict[str, Any]):
         self._tr = tracer
         self.name = name
         self.attrs = attrs
         self.span_id = 0
         self._t0 = 0.0
 
-    def __enter__(self):
+    def __enter__(self) -> "_Span":
         tr = self._tr
         self.span_id = tr._next_id
         tr._next_id += 1
@@ -73,17 +77,20 @@ class _Span:
         tr._stack.append(self.span_id)
         return self
 
-    def set(self, **attrs) -> "_Span":
+    def set(self, **attrs: object) -> "_Span":
         """Attach/refresh attributes; they ride on the end event."""
         self.attrs.update(attrs)
         return self
 
-    def __exit__(self, exc_type, exc, tb):
+    def __exit__(self, exc_type: Optional[Type[BaseException]],
+                 exc: Optional[BaseException],
+                 tb: Optional[TracebackType]) -> bool:
         tr = self._tr
         t1 = tr.now_ms()
         if tr._stack and tr._stack[-1] == self.span_id:
             tr._stack.pop()
-        ev = {"type": "end", "span": self.span_id, "name": self.name,
+        ev: Dict[str, Any] = {
+            "type": "end", "span": self.span_id, "name": self.name,
               "t_ms": round(t1, 3), "dur_ms": round(t1 - self._t0, 3),
               "attrs": self.attrs}
         if exc_type is not None:
@@ -95,7 +102,7 @@ class _Span:
 class Tracer:
     def __init__(self, enabled: bool = False):
         self.enabled = enabled
-        self.events: List[dict] = []
+        self.events: List[Dict[str, Any]] = []
         self._stack: List[int] = []
         self._next_id = 1
         self._epoch = time.perf_counter()
@@ -104,13 +111,14 @@ class Tracer:
         return (time.perf_counter() - self._epoch) * 1e3
 
     # ------------------------------------------------------------- emission
-    def span(self, name: str, **attrs) -> Union[_Span, _NullSpan]:
+    def span(self, name: str,
+             **attrs: object) -> Union[_Span, _NullSpan]:
         """Context manager for a nested span; no-op when disabled."""
         if not self.enabled:
             return _NULL_SPAN
         return _Span(self, name, attrs)
 
-    def event(self, name: str, **attrs) -> None:
+    def event(self, name: str, **attrs: object) -> None:
         """Point event, parented to the innermost open span.  Hot paths
         must guard the *call* with ``if TRACER.enabled`` so the kwargs
         dict is never built when tracing is off."""
@@ -129,7 +137,7 @@ class Tracer:
         self._next_id = 1
         self._epoch = time.perf_counter()
 
-    def export_jsonl(self, path) -> Path:
+    def export_jsonl(self, path: Union[str, Path]) -> Path:
         """One event per line; returns the path written."""
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
@@ -143,11 +151,12 @@ class Tracer:
 TRACER = Tracer()
 
 
-def span(name: str, **attrs):
+def span(name: str, **attrs: object) -> Union[_Span, _NullSpan]:
     return TRACER.span(name, **attrs)
 
 
-def event(name: str, **attrs) -> None:
+def event(name: str, **attrs: object) -> None:
+    # reprolint: allow(tracer-guard) — the module-level convenience shim IS the unguarded form; hot paths import TRACER and guard at the call site
     TRACER.event(name, **attrs)
 
 
@@ -163,5 +172,5 @@ def clear() -> None:
     TRACER.clear()
 
 
-def export_jsonl(path) -> Path:
+def export_jsonl(path: Union[str, Path]) -> Path:
     return TRACER.export_jsonl(path)

@@ -222,8 +222,10 @@ class ShardedApplier(Replica):
             # same leaf-resident batched engine as the serial path — a
             # shard's slice is committed absolute after-images in source
             # LSN order, exactly what apply_shipped_batch reorders safely
+            # reprolint: allow(sorted-stream) — a shard slice arrives in source LSN order by construction (the router drains per-shard queues in ship order)
             self.db.tc.apply_shipped_batch(txn, ops)
             self.db.note_updates(len(ops))
+        # reprolint: allow(loud-corruption) — aborts the partial slice then re-raises unconditionally; the durable watermark re-ships it after recovery
         except Exception:
             # undo the partial slice; the queue still holds it, and the
             # durable watermark (last barrier) re-ships it after recovery
@@ -278,6 +280,7 @@ class ShardedApplier(Replica):
         when the key does not map cleanly onto a shard."""
         try:
             idx = self._shard_of(table, key)
+        # reprolint: allow(loud-corruption) — LookupError here is the partitioner's documented "no clean shard" signal, answered with the conservative min-over-shards barrier; media's BackendMissingError cannot reach a shard-map probe
         except LookupError:
             # "does not map cleanly" only (e.g. a table-map partitioner that
             # has no entry for this key) — anything else, including the

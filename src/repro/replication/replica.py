@@ -254,6 +254,7 @@ class Replica(ApplyEngine):
         first = self._first_lsn.pop(txn, None)
         try:
             return self._apply_commit(txn, commit_lsn, self._bufs.pop(txn, []))
+        # reprolint: allow(loud-corruption) — restores the in-flight buffer bookkeeping, then re-raises unconditionally: nothing is swallowed
         except Exception:
             if first is not None:    # ops are back in the buffer: still
                 self._first_lsn[txn] = first    # in-flight for resume/losers
@@ -275,10 +276,12 @@ class Replica(ApplyEngine):
         try:
             # one sorted walk through the leaf-resident batched engine
             # (shared with recovery redo and snapshot heal-replay)
+            # reprolint: allow(sorted-stream) — ops is a per-txn ship buffer appended in primary log order, and apply_shipped_batch re-sorts by (table, key, lsn) internally
             self.db.tc.apply_shipped_batch(txn, ops)
             self.db.note_updates(len(ops))       # replica-local Delta-records
             self.db.tc.update(txn, REPL_TABLE, REPL_KEY,
                               pack_watermark(commit_lsn, resume))
+        # reprolint: allow(loud-corruption) — prefix-undo abort then unconditional re-raise: the failure surfaces to the shipping loop
         except Exception:
             # keep the replica committed-only consistent: logically undo the
             # partially applied prefix (before-images are on the local log),

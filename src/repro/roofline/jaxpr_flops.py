@@ -39,14 +39,14 @@ class Counts:
 def _size(aval) -> int:
     try:
         return int(np.prod(aval.shape)) if aval.shape else 1
-    except Exception:
+    except (TypeError, ValueError, AttributeError, OverflowError):
         return 0
 
 
 def _bytes(aval) -> int:
     try:
         return _size(aval) * aval.dtype.itemsize
-    except Exception:
+    except (TypeError, ValueError, AttributeError, OverflowError):
         return 0
 
 

@@ -1,6 +1,7 @@
 """Observability layer: registry/tracer units, traced-recovery acceptance,
 Log2 pacing parity, decode-cache counters, shard gauges, bench-diff gate."""
 import dataclasses
+import json
 import random
 import sys
 from pathlib import Path
@@ -429,3 +430,42 @@ def test_bench_diff_gate_is_graceful_without_history(tmp_path,
     (tmp_path / "bench_2.json").write_text(
         '{"run": 2, "mode": "full", "rows": []}')
     assert bench_diff.main() == 0            # different mode: still no pair
+
+
+def test_bench_diff_warns_on_unreadable_artifact(tmp_path, monkeypatch,
+                                                 capsys):
+    monkeypatch.setattr(bench_diff, "ART_ROOT", tmp_path)
+    (tmp_path / "bench_1.json").write_text('{"run": 1, "mo')   # torn write
+    (tmp_path / "bench_2.json").write_text(
+        '{"run": 2, "mode": "fast", "rows": []}')
+    assert bench_diff.main() == 0
+    err = capsys.readouterr().err
+    assert "WARNING" in err and "bench_1.json" in err       # loud, by name
+
+
+def test_bench_diff_newest_unreadable_is_loud_noop_pass(tmp_path,
+                                                        monkeypatch,
+                                                        capsys):
+    monkeypatch.setattr(bench_diff, "ART_ROOT", tmp_path)
+    (tmp_path / "bench_1.json").write_text(
+        '{"run": 1, "mode": "fast", "rows": []}')
+    (tmp_path / "bench_2.json").write_text('{"run": 2,')       # truncated
+    assert bench_diff.main() == 0            # no-op pass, never a crash
+    out = capsys.readouterr()
+    assert "bench_2.json" in out.err         # the culprit is named
+    assert "unreadable" in out.out           # and the verdict says why
+
+
+def test_bench_diff_json_verdict(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr(bench_diff, "ART_ROOT", tmp_path)
+    rows = ('[{"module": "media", "name": "blob", "us_per_call": %s}]')
+    (tmp_path / "bench_1.json").write_text(
+        '{"run": 1, "mode": "fast", "rows": %s}' % (rows % "100.0"))
+    (tmp_path / "bench_2.json").write_text(
+        '{"run": 2, "mode": "fast", "rows": %s}' % (rows % "300.0"))
+    assert bench_diff.main(["--json"]) == 1
+    verdict = json.loads(capsys.readouterr().out)
+    assert verdict["ok"] is False and verdict["status"] == "regressions"
+    assert verdict["old_run"] == 1 and verdict["new_run"] == 2
+    assert len(verdict["regressions"]) == 1
+    assert "media/blob" in verdict["regressions"][0]

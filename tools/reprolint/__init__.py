@@ -1,0 +1,27 @@
+"""reprolint — AST-based checker for this repo's recovery invariants.
+
+The recovery protocol has no page LSNs on the log to catch mistakes at
+runtime: WAL ordering, LSN-monotone redo and exactly-once idempotent
+apply are *conventions*, spread across ~15 modules and enforced — before
+this tool — only by reviewer memory.  reprolint machine-checks them:
+
+  codec-parity        every RecKind / record field survives the codec
+  loud-corruption     corruption errors are never swallowed
+  wal-discipline      backend writes sit behind a stable-LSN check
+  sorted-stream       batched apply call sites prove their ordering
+  tracer-guard        hot-path event probes cost nothing when disabled
+  metric-name         registry names are canonical, kinds consistent
+  determinism         no wall clocks / unseeded randomness in the engine
+  dataclass-hygiene   no mutable defaults; memo fields are compare=False
+
+Violations are suppressed per line with a *reasoned* pragma:
+
+    # reprolint: allow(rule-name) — why this site is exempt
+
+A pragma without a reason is itself a violation.  See ``README.md``
+("Static analysis") and ``CONTRIBUTING.md`` for the rule table and the
+policy on adding rules / granting pragmas.
+"""
+from .engine import DEFAULT_ROOTS, Report, Violation, run
+
+__all__ = ["DEFAULT_ROOTS", "Report", "Violation", "run"]

@@ -1,0 +1,59 @@
+"""CLI:  python -m tools.reprolint [paths...] [options]
+
+With no paths, lints the default roots (src/repro, tools, benchmarks).
+With paths (pre-commit hands us changed files), reports only those files
+— cross-file analysis still covers the whole tree so nothing is missed
+for lack of context.
+
+Exit codes: 0 clean, 1 violations (or parse errors), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .engine import run, render_human, render_json
+from .rules import ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST-based recovery-invariant checker for this repo")
+    ap.add_argument("paths", nargs="*",
+                    help="files to report on (default: whole tree)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto — the directory "
+                         "containing tools/reprolint)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable JSON on stdout (same shape "
+                         "as benchmarks.diff --json)")
+    ap.add_argument("--stats", action="store_true",
+                    help="append pragma statistics (total, per rule, "
+                         "unused) to the report")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print each rule and the invariant it protects")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name}\n    {rule.invariant}")
+        return 0
+
+    root = Path(args.root).resolve() if args.root else \
+        Path(__file__).resolve().parents[2]
+    try:
+        report = run(root, paths=args.paths or None)
+    except FileNotFoundError as exc:
+        print(f"reprolint: {exc}", file=sys.stderr)
+        return 2
+    if args.as_json:
+        print(render_json(report))
+    else:
+        print(render_human(report, stats=args.stats))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,153 @@
+"""Small AST helpers shared by the rules.
+
+Everything here is name-based heuristics over a single parse — reprolint
+resolves no imports and runs no code.  The helpers therefore answer
+"what does this syntax *say*", and the rules are written so that the
+approximation errs toward asking for a pragma, never toward silence.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+
+def receiver_tail(node: ast.AST) -> Optional[str]:
+    """Final identifier of an attribute chain: ``self.archive.backend``
+    -> ``"backend"``, ``backend`` -> ``"backend"``.  ``None`` when the
+    chain bottoms out in a call/subscript (e.g. ``super().x``)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """Bare name of the called function/method (``foo`` / ``x.foo``)."""
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def exception_names(handler: ast.ExceptHandler) -> tuple[str, ...]:
+    """Names caught by an ``except`` clause; empty tuple for a bare
+    ``except:``."""
+    t = handler.type
+    if t is None:
+        return ()
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    out = []
+    for e in elts:
+        name = receiver_tail(e)
+        if name is not None:
+            out.append(name)
+    return tuple(out)
+
+
+def contains_raise(node: ast.AST) -> bool:
+    """Does the body re-raise (any ``raise``), even from nested
+    statements?  Nested function bodies do not count — a ``raise``
+    inside a closure does not propagate the caught exception."""
+    for child in _walk_no_funcs(node):
+        if isinstance(child, ast.Raise):
+            return True
+    return False
+
+
+def _walk_no_funcs(node: ast.AST) -> Iterator[ast.AST]:
+    """``ast.walk`` that does not descend into nested function/class
+    definitions."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+def walk_functions(tree: ast.AST) -> Iterator[tuple[str, ast.AST]]:
+    """Yield ``(qualname, funcdef)`` for every (nested) function, with
+    ``Class.method`` qualnames."""
+    def _walk(node: ast.AST, prefix: str) -> Iterator[tuple[str, ast.AST]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield q, child
+                yield from _walk(child, f"{q}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from _walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from _walk(child, prefix)
+    yield from _walk(tree, "")
+
+
+def body_names(func: ast.AST) -> set[str]:
+    """Every bare identifier and attribute name appearing in a function
+    body (not descending into nested defs)."""
+    out: set[str] = set()
+    for n in _walk_no_funcs(func):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def build_parents(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    """Child -> parent map for ancestor walks (guard detection)."""
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def enclosing_function(node: ast.AST,
+                       parents: dict[ast.AST, ast.AST]) -> Optional[ast.AST]:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def under_enabled_guard(node: ast.AST,
+                        parents: dict[ast.AST, ast.AST]) -> bool:
+    """Is ``node`` inside an ``if`` whose test mentions ``.enabled`` (the
+    ``if TRACER.enabled:`` idiom)?  The guard must be in the same
+    function — an enabled-check in a caller does not make the kwargs
+    free at this call site."""
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        if isinstance(cur, ast.If):
+            for n in ast.walk(cur.test):
+                if isinstance(n, ast.Attribute) and n.attr == "enabled":
+                    return True
+                if isinstance(n, ast.Name) and n.id == "enabled":
+                    return True
+        cur = parents.get(cur)
+    return False
+
+
+def decorator_names(cls: ast.ClassDef) -> set[str]:
+    out = set()
+    for d in cls.decorator_list:
+        target = d.func if isinstance(d, ast.Call) else d
+        name = receiver_tail(target)
+        if name is not None:
+            out.add(name)
+    return out
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

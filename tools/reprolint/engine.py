@@ -1,0 +1,259 @@
+"""reprolint driver: file discovery, rule dispatch, pragma suppression,
+human/JSON output, exit-code gating.
+
+Two pass shapes:
+
+  per-file    ``Rule.check_file(ctx)`` sees one parsed file at a time.
+  cross-file  ``Rule.finish(project)`` runs after every file is parsed
+              and may correlate files (codec parity, call-graph WAL
+              reachability, metric-kind consistency).
+
+Cross-file rules always analyse the *full* default tree even when the
+CLI selects a subset of files (pre-commit hands us only what changed);
+their findings are then filtered to the selection.  Analysing a subset
+would manufacture false positives — a write whose stable-LSN check
+lives in an unselected caller would look unguarded.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from .pragmas import Pragma, find_pragma, scan_pragmas
+
+#: scanned when no explicit paths are given; tests/ is deliberately out
+#: (rule fixtures there must be able to violate on purpose)
+DEFAULT_ROOTS = ("src/repro", "tools", "benchmarks")
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "artifacts"}
+
+
+@dataclass
+class Violation:
+    rule: str
+    path: str                  # repo-relative, posix separators
+    line: int
+    message: str
+    suppressed: bool = False
+    reason: str = ""           # pragma reason when suppressed
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        out = {"rule": self.rule, "path": self.path, "line": self.line,
+               "message": self.message}
+        if self.suppressed:
+            out["suppressed"] = True
+            out["reason"] = self.reason
+        return out
+
+
+class FileCtx:
+    """One parsed file: source, AST, pragmas, lazy parent map."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree = ast.parse(source)
+        except (SyntaxError, ValueError) as exc:
+            self.parse_error = str(exc)
+        self.pragmas, self.pragma_problems = scan_pragmas(source)
+        self._parents: Optional[dict] = None
+
+    @property
+    def parents(self) -> dict:
+        if self._parents is None:
+            from .astutil import build_parents
+            self._parents = build_parents(self.tree) if self.tree else {}
+        return self._parents
+
+    def in_dir(self, *prefixes: str) -> bool:
+        return any(self.path.startswith(p) for p in prefixes)
+
+
+class Project:
+    """All parsed files plus the root they are relative to."""
+
+    def __init__(self, root: Path, files: Dict[str, FileCtx]):
+        self.root = root
+        self.files = files
+
+    def find(self, suffix: str) -> Optional[FileCtx]:
+        """The unique file whose path ends with ``suffix`` (anchor files
+        for cross-file rules — suffix-matched so test fixtures can live
+        under a tmp root with the same layout)."""
+        hits = [c for p, c in self.files.items() if p.endswith(suffix)]
+        return hits[0] if len(hits) == 1 else None
+
+
+class Rule:
+    """Base rule.  ``name`` is the pragma token; ``invariant`` is the
+    one-line statement of what the rule protects (surfaced in --list-rules
+    and the README table)."""
+    name = "abstract"
+    invariant = ""
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        return ()
+
+    def finish(self, project: Project) -> Iterable[Violation]:
+        return ()
+
+
+@dataclass
+class Report:
+    violations: List[Violation] = field(default_factory=list)   # live
+    suppressed: List[Violation] = field(default_factory=list)   # pragma'd
+    checked_files: int = 0
+    pragma_count: int = 0
+    pragmas_by_rule: Dict[str, int] = field(default_factory=dict)
+    unused_pragmas: List[str] = field(default_factory=list)     # "path:line"
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {
+            "ok": self.ok,
+            "checked_files": self.checked_files,
+            "violation_count": len(self.violations),
+            "violations": [v.to_json() for v in self.violations],
+            "suppressed_count": len(self.suppressed),
+            "suppressed": [v.to_json() for v in self.suppressed],
+            "stats": {
+                "pragma_count": self.pragma_count,
+                "pragmas_by_rule": dict(sorted(
+                    self.pragmas_by_rule.items())),
+                "unused_pragmas": self.unused_pragmas,
+            },
+        }
+
+
+def _discover(root: Path, rel_roots: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for rel in rel_roots:
+        base = root / rel
+        if base.is_file():
+            out.append(base)
+            continue
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if not any(part in _SKIP_DIRS for part in p.parts):
+                out.append(p)
+    return out
+
+
+def load_project(root: Path,
+                 rel_roots: Sequence[str] = DEFAULT_ROOTS) -> Project:
+    files: Dict[str, FileCtx] = {}
+    for p in _discover(root, rel_roots):
+        rel = p.relative_to(root).as_posix()
+        try:
+            files[rel] = FileCtx(rel, p.read_text(encoding="utf-8"))
+        except (OSError, UnicodeDecodeError) as exc:
+            ctx = FileCtx(rel, "")
+            ctx.parse_error = f"unreadable: {exc}"
+            files[rel] = ctx
+    return Project(root, files)
+
+
+def run(root: Path, paths: Optional[Sequence[str]] = None,
+        rules: Optional[Sequence[Rule]] = None) -> Report:
+    """Lint ``root``.  ``paths`` (repo-relative) restricts which files
+    violations are *reported* for; analysis always covers the default
+    tree so cross-file rules see whole invariants."""
+    from .rules import ALL_RULES
+    active = list(rules) if rules is not None else [r() for r in ALL_RULES]
+
+    project = load_project(root)
+    selected: Optional[set] = None
+    if paths is not None:
+        selected = set()
+        for raw in paths:
+            p = Path(raw)
+            rel = (p if not p.is_absolute()
+                   else p.relative_to(root)).as_posix()
+            selected.add(rel)
+            # a selected file outside the default roots is parsed too,
+            # so `reprolint some/new/file.py` just works
+            if rel not in project.files:
+                full = root / rel
+                if full.is_file():
+                    project.files[rel] = FileCtx(
+                        rel, full.read_text(encoding="utf-8"))
+
+    report = Report(checked_files=len(project.files))
+    raw: List[Violation] = []
+
+    for ctx in project.files.values():
+        if ctx.parse_error is not None:
+            raw.append(Violation("parse", ctx.path, 1,
+                                 f"cannot parse: {ctx.parse_error}"))
+            continue
+        for line, msg in ctx.pragma_problems:
+            raw.append(Violation("pragma-reason", ctx.path, line, msg))
+        for rule in active:
+            raw.extend(rule.check_file(ctx))
+    for rule in active:
+        raw.extend(rule.finish(project))
+
+    # pragma suppression + bookkeeping
+    for v in raw:
+        ctx = project.files.get(v.path)
+        pragma: Optional[Pragma] = None
+        if ctx is not None and v.rule not in ("parse", "pragma-reason"):
+            pragma = find_pragma(ctx.pragmas, v.rule, v.line)
+        if pragma is not None:
+            pragma.used = True
+            v.suppressed, v.reason = True, pragma.reason
+    for ctx in project.files.values():
+        for pragma in ctx.pragmas.values():
+            report.pragma_count += 1
+            for r in pragma.rules:
+                report.pragmas_by_rule[r] = \
+                    report.pragmas_by_rule.get(r, 0) + 1
+            if not pragma.used:
+                report.unused_pragmas.append(f"{ctx.path}:{pragma.line}")
+
+    def _want(v: Violation) -> bool:
+        return selected is None or v.path in selected
+    order = (lambda v: (v.path, v.line, v.rule))
+    report.violations = sorted((v for v in raw
+                                if not v.suppressed and _want(v)), key=order)
+    report.suppressed = sorted((v for v in raw
+                                if v.suppressed and _want(v)), key=order)
+    return report
+
+
+def render_human(report: Report, stats: bool = False) -> str:
+    lines: List[str] = [v.format() for v in report.violations]
+    if stats:
+        lines.append("")
+        lines.append(f"reprolint: {report.checked_files} files, "
+                     f"{len(report.violations)} violation(s), "
+                     f"{len(report.suppressed)} suppressed, "
+                     f"{report.pragma_count} pragma(s)")
+        for rule, n in sorted(report.pragmas_by_rule.items()):
+            lines.append(f"  pragma allow({rule}): {n}")
+        for loc in report.unused_pragmas:
+            lines.append(f"  unused pragma: {loc}")
+    elif report.ok:
+        lines.append(f"reprolint: {report.checked_files} files clean "
+                     f"({len(report.suppressed)} suppressed by pragma)")
+    else:
+        lines.append(f"reprolint: {len(report.violations)} violation(s) "
+                     f"in {report.checked_files} files")
+    return "\n".join(lines)
+
+
+def render_json(report: Report) -> str:
+    return json.dumps(report.to_json(), indent=1)

@@ -1,0 +1,80 @@
+"""Pragma parsing: ``# reprolint: allow(<rule>[, <rule>]) — <reason>``.
+
+A pragma suppresses matching violations on its own line and on the line
+directly below (so it can ride at the end of the offending statement or
+stand on its own line above it).  The reason is mandatory: a pragma is a
+reviewed exemption from a protocol invariant, and "trust me" is not a
+reason.  Reasonless pragmas surface as ``pragma-reason`` violations.
+
+Comments are found with ``tokenize`` so strings that merely *contain*
+pragma-looking text are never misread as pragmas.
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+# "allow(rule-a, rule-b)" then a separator (em-dash / hyphens / colon)
+# and the reason.  The separator is required so the reason is visibly a
+# reason, not a trailing word soup.
+_PRAGMA_RE = re.compile(
+    r"#\s*reprolint:\s*allow\(\s*(?P<rules>[a-z0-9_,\s-]+?)\s*\)"
+    r"\s*(?:(?:—|--+|-|:)\s*(?P<reason>.*\S))?\s*$")
+# anything that says "reprolint:" but does not parse — flagged, because a
+# silently ignored pragma is worse than none
+_PRAGMA_LIKE_RE = re.compile(r"#\s*reprolint\s*:")
+
+
+@dataclass
+class Pragma:
+    line: int
+    rules: tuple[str, ...]
+    reason: str
+    used: bool = field(default=False, compare=False)
+
+
+def scan_pragmas(source: str) -> tuple[dict[int, Pragma], list[tuple[int, str]]]:
+    """Return ``{line: Pragma}`` plus ``(line, message)`` problems —
+    malformed pragmas and pragmas missing their reason."""
+    pragmas: dict[int, Pragma] = {}
+    problems: list[tuple[int, str]] = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(tok.start[0], tok.string) for tok in tokens
+                    if tok.type == tokenize.COMMENT]
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return pragmas, problems   # the engine reports the parse error
+    for line, text in comments:
+        m = _PRAGMA_RE.search(text)
+        if m is None:
+            if _PRAGMA_LIKE_RE.search(text):
+                problems.append(
+                    (line, "unparseable reprolint pragma — expected "
+                           "'# reprolint: allow(rule) — reason'"))
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",")
+                      if r.strip())
+        reason = (m.group("reason") or "").strip()
+        if not rules:
+            problems.append((line, "pragma allows no rules"))
+            continue
+        if not reason:
+            problems.append(
+                (line, f"pragma allow({', '.join(rules)}) has no reason — "
+                       "a pragma is a reviewed exemption and must say why"))
+            continue
+        pragmas[line] = Pragma(line=line, rules=rules, reason=reason)
+    return pragmas, problems
+
+
+def find_pragma(pragmas: dict[int, Pragma], rule: str,
+                line: int) -> Pragma | None:
+    """The pragma governing a violation of ``rule`` at ``line``: same
+    line, or the line directly above."""
+    for ln in (line, line - 1):
+        p = pragmas.get(ln)
+        if p is not None and rule in p.rules:
+            return p
+    return None

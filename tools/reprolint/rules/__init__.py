@@ -1,0 +1,26 @@
+"""Rule registry.  Adding a rule: write the module, list the class here,
+add a failing + passing + pragma'd fixture trio in
+``tests/test_reprolint.py``, and a row in the README table.  CI's
+meta-test keeps the live tree violation-free, so land the rule and its
+true-positive fixes in the same change."""
+from .codec_parity import CodecParityRule
+from .dataclass_hygiene import DataclassHygieneRule
+from .determinism import DeterminismRule
+from .loud_corruption import LoudCorruptionRule
+from .metric_naming import MetricNamingRule
+from .sorted_stream import SortedStreamRule
+from .tracer_guard import TracerGuardRule
+from .wal_discipline import WalDisciplineRule
+
+ALL_RULES = (
+    CodecParityRule,
+    LoudCorruptionRule,
+    WalDisciplineRule,
+    SortedStreamRule,
+    TracerGuardRule,
+    MetricNamingRule,
+    DeterminismRule,
+    DataclassHygieneRule,
+)
+
+__all__ = ["ALL_RULES"] + [r.__name__ for r in ALL_RULES]

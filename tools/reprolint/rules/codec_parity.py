@@ -1,0 +1,243 @@
+"""codec-parity: every record kind and field survives the media codec.
+
+The bug class this kills: add a field to a record dataclass in
+``core/records.py`` (or a whole new ``RecKind``) and forget
+``media/codec.py`` — every in-memory test stays green, and the field
+silently vanishes on the first archive seal, to be discovered by a cold
+restore that reconstructs the wrong state.  Cross-file checks:
+
+  * every ``RecKind`` member maps to a class in ``REC_CLASSES``;
+  * every mapped class has an ``isinstance`` branch in ``encode_record``
+    and is constructed somewhere in the codec (the decode side);
+  * every *comparable* dataclass field (``compare=False`` fields are
+    derived memos, excluded from equality and from serialization on
+    purpose) is read in its encode branch and written by decode.
+
+A class whose ``kind`` property returns ``self.op`` gets ``op`` credit
+from an access to ``.kind`` (the UPDATE/INSERT/DELETE family encodes the
+op through the kind byte).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..astutil import _walk_no_funcs, receiver_tail
+from ..engine import FileCtx, Project, Rule, Violation
+
+RECORDS_SUFFIX = "core/records.py"
+CODEC_SUFFIX = "media/codec.py"
+
+
+# ------------------------------------------------------- records.py side
+def _field_is_comparable(value: Optional[ast.AST]) -> bool:
+    """False when the default is ``field(..., compare=False)``."""
+    if isinstance(value, ast.Call) and receiver_tail(value.func) == "field":
+        for kw in value.keywords:
+            if kw.arg == "compare" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is False:
+                return False
+    return True
+
+
+class _RecordsInfo:
+    def __init__(self) -> None:
+        self.kinds: Dict[str, int] = {}            # RecKind member -> line
+        self.mapping: Dict[str, str] = {}          # RecKind member -> class
+        self.mapping_line = 0
+        self.classes: Dict[str, Tuple[int, List[str]]] = {}  # name -> (line, fields)
+        self.kind_returns_op: Set[str] = set()     # classes whose .kind is self.op
+
+
+def _parse_records(tree: ast.AST) -> _RecordsInfo:
+    info = _RecordsInfo()
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            bases = {receiver_tail(b) for b in node.bases}
+            if node.name == "RecKind":
+                for stmt in node.body:
+                    if isinstance(stmt, ast.Assign) and \
+                            isinstance(stmt.targets[0], ast.Name):
+                        info.kinds[stmt.targets[0].id] = stmt.lineno
+                continue
+            if "LogRec" not in bases and node.name != "LogRec":
+                continue
+            fields: List[str] = []
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and \
+                        isinstance(stmt.target, ast.Name):
+                    if _field_is_comparable(stmt.value):
+                        fields.append(stmt.target.id)
+                elif isinstance(stmt, ast.FunctionDef) and \
+                        stmt.name == "kind":
+                    for sub in ast.walk(stmt):
+                        if isinstance(sub, ast.Return) and \
+                                isinstance(sub.value, ast.Attribute) and \
+                                sub.value.attr == "op":
+                            info.kind_returns_op.add(node.name)
+            if node.name != "LogRec":
+                info.classes[node.name] = (node.lineno, fields)
+        elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            if any(isinstance(t, ast.Name) and t.id == "REC_CLASSES"
+                   for t in targets) and isinstance(node.value, ast.Dict):
+                info.mapping_line = node.lineno
+                for k, v in zip(node.value.keys, node.value.values):
+                    kname = receiver_tail(k) if k is not None else None
+                    vname = receiver_tail(v)
+                    if kname and vname:
+                        info.mapping[kname] = vname
+    return info
+
+
+# --------------------------------------------------------- codec.py side
+def _encode_accesses(tree: ast.AST
+                     ) -> Tuple[Dict[str, Set[str]], Set[str], int]:
+    """(per-class attribute reads inside its isinstance branch,
+    function-wide reads on the record argument, def line) for
+    ``encode_record``."""
+    per_class: Dict[str, Set[str]] = {}
+    everywhere: Set[str] = set()
+    line = 0
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name == "encode_record"):
+            continue
+        line = node.lineno
+        arg = node.args.args[0].arg if node.args.args else "rec"
+
+        def reads(n: ast.AST) -> Set[str]:
+            return {s.attr for s in ast.walk(n)
+                    if isinstance(s, ast.Attribute)
+                    and isinstance(s.value, ast.Name)
+                    and s.value.id == arg}
+
+        def branch_classes(test: ast.AST) -> List[str]:
+            for c in ast.walk(test):
+                if isinstance(c, ast.Call) and \
+                        receiver_tail(c.func) == "isinstance" and \
+                        len(c.args) == 2:
+                    t = c.args[1]
+                    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                    return [receiver_tail(e) for e in elts
+                            if receiver_tail(e)]
+            return []
+
+        def visit(stmts: List[ast.stmt]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, ast.If):
+                    classes = branch_classes(stmt.test)
+                    got = reads(ast.Module(body=stmt.body,
+                                           type_ignores=[]))
+                    for cls in classes:
+                        per_class.setdefault(cls, set()).update(got)
+                    visit(stmt.orelse)
+                else:
+                    everywhere.update(reads(stmt))
+
+        visit(node.body)
+    return per_class, everywhere, line
+
+
+def _decode_writes(tree: ast.AST) -> Dict[str, Set[str]]:
+    """Per-class set of fields the decode side produces: constructor
+    keywords anywhere, plus ``v.<attr> = ...`` stores on variables
+    assigned from ``Cls.__new__`` within the same function."""
+    writes: Dict[str, Set[str]] = {}
+    class_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = receiver_tail(node.func)
+            if name and name[:1].isupper() and name.endswith("Rec"):
+                class_names.add(name)
+                writes.setdefault(name, set()).update(
+                    kw.arg for kw in node.keywords if kw.arg)
+    # Cls.__new__ fast paths: var = Cls.__new__(Cls); var.f = ...
+    for func in [n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        newvars: Dict[str, str] = {}
+        for stmt in _walk_no_funcs(func):
+            if isinstance(stmt, ast.Assign) and \
+                    isinstance(stmt.value, ast.Call) and \
+                    isinstance(stmt.value.func, ast.Attribute) and \
+                    stmt.value.func.attr == "__new__":
+                cls = receiver_tail(stmt.value.func.value)
+                if cls and isinstance(stmt.targets[0], ast.Name):
+                    newvars[stmt.targets[0].id] = cls
+        if not newvars:
+            continue
+        for stmt in _walk_no_funcs(func):
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id in newvars:
+                        writes.setdefault(newvars[t.value.id],
+                                          set()).add(t.attr)
+    return writes
+
+
+class CodecParityRule(Rule):
+    name = "codec-parity"
+    invariant = ("every RecKind and every comparable record field "
+                 "round-trips through media/codec.py — nothing becomes "
+                 "silently unarchivable")
+
+    def finish(self, project: Project) -> Iterable[Violation]:
+        records = project.find(RECORDS_SUFFIX)
+        codec = project.find(CODEC_SUFFIX)
+        if records is None or codec is None or \
+                records.tree is None or codec.tree is None:
+            return []   # mini-projects without the pair have no parity
+        out: List[Violation] = []
+        info = _parse_records(records.tree)
+        enc_by_class, enc_everywhere, enc_line = \
+            _encode_accesses(codec.tree)
+        dec_writes = _decode_writes(codec.tree)
+
+        for kind, line in info.kinds.items():
+            if kind not in info.mapping:
+                out.append(Violation(
+                    self.name, records.path, line,
+                    f"RecKind.{kind} has no REC_CLASSES entry — the codec "
+                    "coverage contract cannot see it"))
+        for kind, cls in info.mapping.items():
+            if cls not in info.classes:
+                out.append(Violation(
+                    self.name, records.path, info.mapping_line,
+                    f"REC_CLASSES maps RecKind.{kind} to unknown record "
+                    f"class {cls}"))
+
+        for cls in sorted(set(info.mapping.values())):
+            line, fields = info.classes.get(cls, (0, []))
+            if cls not in enc_by_class:
+                out.append(Violation(
+                    self.name, codec.path, enc_line or 1,
+                    f"encode_record has no isinstance branch for {cls}"))
+                continue
+            if cls not in dec_writes:
+                out.append(Violation(
+                    self.name, codec.path, 1,
+                    f"{cls} is never constructed in the codec — decode "
+                    "cannot produce it"))
+                continue
+            enc = enc_by_class[cls] | enc_everywhere
+            if "kind" in enc and cls in info.kind_returns_op:
+                enc.add("op")   # the kind byte IS the op for this family
+            dec = dec_writes[cls]
+            if cls in info.kind_returns_op:
+                dec.add("op")   # fast paths store op from the kind byte
+            for f in fields:
+                if f not in enc:
+                    out.append(Violation(
+                        self.name, records.path, line,
+                        f"{cls}.{f} is never serialized in encode_record "
+                        "— it would vanish on the first archive seal"))
+                if f not in dec and f != "lsn":
+                    # lsn is decoded generically before kind dispatch
+                    out.append(Violation(
+                        self.name, records.path, line,
+                        f"{cls}.{f} is never reconstructed by the codec "
+                        "decode side"))
+        return out

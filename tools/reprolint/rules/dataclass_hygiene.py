@@ -1,0 +1,87 @@
+"""dataclass-hygiene: no shared mutable defaults; memo fields stay out
+of equality.
+
+Two sharp edges this codebase has already cut itself on:
+
+  * a mutable default argument (``def f(x=[])``) is one object shared
+    across calls — on an engine whose objects live as long as a
+    database, the aliasing bug surfaces far from the definition;
+  * record dataclasses carry *derived memo* fields (``UpdateRec.ck``,
+    the cached composite key, marked ``repr=False``).  If such a field
+    participates in ``__eq__``, codec round-trip equality breaks the
+    moment one side has warmed its memo and the other has not — the
+    property tests compare decoded records against originals, so a
+    missing ``compare=False`` turns a cache into a correctness bug.
+    Rule: a ``field(repr=False, ...)`` on a dataclass must also say
+    ``compare=False``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import decorator_names, receiver_tail
+from ..engine import FileCtx, Rule, Violation
+
+MUTABLE_CALLS = {"list", "dict", "set", "bytearray"}
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in MUTABLE_CALLS and not node.args \
+            and not node.keywords:
+        return True
+    return False
+
+
+class DataclassHygieneRule(Rule):
+    name = "dataclass-hygiene"
+    invariant = ("no mutable default arguments; dataclass memo fields "
+                 "(repr=False) set compare=False so codec round-trip "
+                 "equality ignores caches")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None:
+            return []
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defaults = list(node.args.defaults) + \
+                    [d for d in node.args.kw_defaults if d is not None]
+                for d in defaults:
+                    if _is_mutable_literal(d):
+                        out.append(Violation(
+                            self.name, ctx.path, d.lineno,
+                            f"mutable default argument in {node.name}() — "
+                            "one shared object across every call; use "
+                            "None and create it inside"))
+            elif isinstance(node, ast.ClassDef) and \
+                    "dataclass" in decorator_names(node):
+                for stmt in node.body:
+                    if not (isinstance(stmt, ast.AnnAssign)
+                            and isinstance(stmt.value, ast.Call)
+                            and receiver_tail(stmt.value.func) == "field"):
+                        continue
+                    kwargs = {kw.arg: kw.value
+                              for kw in stmt.value.keywords if kw.arg}
+                    repr_off = isinstance(kwargs.get("repr"), ast.Constant) \
+                        and kwargs["repr"].value is False
+                    compare_off = isinstance(kwargs.get("compare"),
+                                             ast.Constant) \
+                        and kwargs["compare"].value is False
+                    if repr_off and not compare_off:
+                        fname = getattr(stmt.target, "id", "?")
+                        out.append(Violation(
+                            self.name, ctx.path, stmt.lineno,
+                            f"dataclass memo field {fname!r} is "
+                            "repr=False but not compare=False — a warm "
+                            "cache would break round-trip equality"))
+                    default = kwargs.get("default")
+                    if default is not None and _is_mutable_literal(default):
+                        out.append(Violation(
+                            self.name, ctx.path, stmt.lineno,
+                            "mutable field(default=...) — use "
+                            "default_factory"))
+        return out

@@ -1,0 +1,75 @@
+"""determinism: the recovery engine computes the same state every run.
+
+Every correctness test in this repo is an oracle test: recover /
+restore / apply, then compare against ``committed_state_oracle``.  That
+methodology (and crash-replay debugging, and the log-shipping contract
+— a replica re-executes the primary's stream and must land on identical
+state) only works if the engine is a pure function of the log.  Wall
+clocks and unseeded randomness are how that dies, one "harmless"
+timestamp at a time.
+
+Inside ``core/ media/ archive/ replication/``, flagged:
+
+  * ``time.time`` / ``time.time_ns`` (``perf_counter`` for *measuring*
+    is fine — timings are reported, never used to compute state);
+  * ``datetime.now`` / ``utcnow`` / ``today``;
+  * importing the stdlib ``random`` module at all — even unused, it is
+    an attractive nuisance on the engine (``jax.random`` is keyed and
+    explicit, and lives outside these dirs anyway).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..engine import FileCtx, Rule, Violation
+
+ENGINE_DIRS = ("src/repro/core/", "src/repro/media/",
+               "src/repro/archive/", "src/repro/replication/")
+WALL_CLOCK = {("time", "time"), ("time", "time_ns")}
+DATETIME_NOW = {("datetime", "now"), ("datetime", "utcnow"),
+                ("datetime", "today")}
+
+
+class DeterminismRule(Rule):
+    name = "determinism"
+    invariant = ("no wall clocks or unseeded randomness in the recovery "
+                 "engine — recovered state is a pure function of the "
+                 "log, which is what every oracle test asserts")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None or not ctx.in_dir(*ENGINE_DIRS):
+            return []
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random":
+                        out.append(Violation(
+                            self.name, ctx.path, node.lineno,
+                            "stdlib `random` imported on the recovery "
+                            "engine — unseeded randomness breaks oracle "
+                            "equality; if you need randomness here, "
+                            "thread an explicit seed"))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "random":
+                    out.append(Violation(
+                        self.name, ctx.path, node.lineno,
+                        "stdlib `random` imported on the recovery "
+                        "engine — unseeded randomness breaks oracle "
+                        "equality"))
+            elif isinstance(node, ast.Attribute) and \
+                    isinstance(node.value, ast.Name):
+                pair = (node.value.id, node.attr)
+                if pair in WALL_CLOCK:
+                    out.append(Violation(
+                        self.name, ctx.path, node.lineno,
+                        "time.time on the recovery engine — state must "
+                        "be a function of the log, not the clock "
+                        "(perf_counter is fine for measuring)"))
+                elif pair in DATETIME_NOW:
+                    out.append(Violation(
+                        self.name, ctx.path, node.lineno,
+                        f"datetime.{node.attr} on the recovery engine — "
+                        "state must be a function of the log"))
+        return out

@@ -1,0 +1,80 @@
+"""loud-corruption: corruption is always loud, broad catches are reviewed.
+
+The media layer's contract (PR 4) is that a torn frame, a bad CRC or an
+unknown format version *always* raises — decoding never returns a short
+stream, scans never silently skip.  One careless ``except`` anywhere on
+the recovery path voids that contract, so:
+
+  * an ``except`` clause that names a corruption error (or, inside the
+    recovery engine, one of its bases) must re-raise;
+  * inside the engine dirs (core/ media/ archive/ replication/) ANY
+    bare/broad except needs a pragma, even if it re-raises — a broad
+    catch there runs cleanup code in contexts its author never
+    enumerated, and the pragma records the protocol reason;
+  * elsewhere under src/repro a broad except that re-raises is fine
+    (cleanup-and-propagate), but one that swallows needs a pragma.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import contains_raise, exception_names
+from ..engine import FileCtx, Rule, Violation
+
+CORRUPTION_ERRORS = {"CorruptSegmentError", "UnknownFormatError",
+                     "TruncatedLogError"}
+#: bases of the corruption errors — catching these inside the engine
+#: swallows corruption just as surely (TruncatedLogError is a
+#: LookupError; CorruptSegmentError/UnknownFormatError are RuntimeErrors)
+CORRUPTION_BASES = {"RuntimeError", "LookupError"}
+BROAD = {"Exception", "BaseException"}
+
+ENGINE_DIRS = ("src/repro/core/", "src/repro/media/",
+               "src/repro/archive/", "src/repro/replication/")
+SRC_PREFIX = "src/repro/"
+
+
+class LoudCorruptionRule(Rule):
+    name = "loud-corruption"
+    invariant = ("CorruptSegmentError / UnknownFormatError / "
+                 "TruncatedLogError are never swallowed; broad excepts "
+                 "on the recovery engine carry a reviewed pragma")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None or not ctx.path.startswith(SRC_PREFIX):
+            return []
+        in_engine = ctx.in_dir(*ENGINE_DIRS)
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            names = exception_names(node)
+            caught_corruption = (
+                set(names) & CORRUPTION_ERRORS
+                or (in_engine and set(names) & CORRUPTION_BASES))
+            reraises = contains_raise(
+                ast.Module(body=node.body, type_ignores=[]))
+            if caught_corruption and not reraises:
+                out.append(Violation(
+                    self.name, ctx.path, node.lineno,
+                    f"except clause catches "
+                    f"{', '.join(sorted(caught_corruption))} without "
+                    "re-raising — corruption must stay loud"))
+                continue
+            broad = (node.type is None) or (set(names) & BROAD)
+            if not broad:
+                continue
+            what = ", ".join(names) if names else "bare except"
+            if in_engine:
+                out.append(Violation(
+                    self.name, ctx.path, node.lineno,
+                    f"broad except ({what}) on a recovery-engine path — "
+                    "narrow it to the exceptions the protocol expects, "
+                    "or pragma it with the protocol reason"))
+            elif not reraises:
+                out.append(Violation(
+                    self.name, ctx.path, node.lineno,
+                    f"broad except ({what}) swallows exceptions — narrow "
+                    "it, re-raise, or pragma it with a reason"))
+        return out

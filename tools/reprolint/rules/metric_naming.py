@@ -1,0 +1,92 @@
+"""metric-name: registry names are canonical and kind-stable.
+
+The metrics registry keys everything by flat name + labels; nothing
+validates the names at runtime beyond kind conflicts *on the same
+process* — two call sites registering ``repl.lag`` as a gauge and
+``repl_lag`` as a counter would just coexist as two metrics and every
+dashboard/bench assertion quietly reads the wrong one.  Checked:
+
+  * literal names match ``subsystem.noun(.noun)*`` —
+    ``^[a-z][a-z0-9_]*(\\.[a-z0-9_]+)+$`` (≥ 2 dot-separated segments,
+    lower_snake each);
+  * label keys are ``lower_snake`` identifiers;
+  * a name keeps one kind (counter/gauge/histogram) across every call
+    site in the tree — cross-file, because the registry only sees one
+    process at a time but the tree is forever.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Tuple
+
+from ..astutil import const_str, receiver_tail
+from ..engine import FileCtx, Project, Rule, Violation
+
+NAME_RE = re.compile(r"^[a-z][a-z0-9_]*(\.[a-z0-9_]+)+$")
+LABEL_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+KINDS = {"counter", "gauge", "histogram"}
+#: receivers that are (aliases of) the metrics registry at call sites
+REGISTRY_NAMES = {"metrics", "_metrics", "obs_metrics", "REGISTRY",
+                  "registry", "reg"}
+#: the registry implementation itself defines the accessors — skip it
+IMPL_SUFFIX = "obs/metrics.py"
+
+
+def _metric_calls(ctx: FileCtx) -> Iterable[Tuple[str, str, ast.Call]]:
+    """(kind, literal-name, call) for registry accessor calls with a
+    string-literal name.  Dynamic names (``reg.gauge(name)`` in the
+    dataclass bridge) are invisible to static checking and skipped."""
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in KINDS
+                and receiver_tail(node.func.value) in REGISTRY_NAMES
+                and node.args):
+            continue
+        name = const_str(node.args[0])
+        if name is not None:
+            yield node.func.attr, name, node
+
+
+class MetricNamingRule(Rule):
+    name = "metric-name"
+    invariant = ("metric names are subsystem.noun(.noun)* with "
+                 "lower_snake labels, and each name keeps one kind "
+                 "(counter/gauge/histogram) across all call sites")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None or ctx.path.endswith(IMPL_SUFFIX):
+            return []
+        out: List[Violation] = []
+        for kind, name, node in _metric_calls(ctx):
+            if not NAME_RE.match(name):
+                out.append(Violation(
+                    self.name, ctx.path, node.lineno,
+                    f"metric name {name!r} is not subsystem.noun(.noun)* "
+                    "(lower_snake segments, at least one dot)"))
+            for kw in node.keywords:
+                if kw.arg is not None and not LABEL_RE.match(kw.arg):
+                    out.append(Violation(
+                        self.name, ctx.path, node.lineno,
+                        f"metric label {kw.arg!r} on {name!r} is not a "
+                        "lower_snake identifier"))
+        return out
+
+    def finish(self, project: Project) -> Iterable[Violation]:
+        first: Dict[str, Tuple[str, str, int]] = {}   # name -> kind, path, line
+        out: List[Violation] = []
+        for path, ctx in sorted(project.files.items()):
+            if ctx.tree is None or path.endswith(IMPL_SUFFIX):
+                continue
+            for kind, name, node in _metric_calls(ctx):
+                seen = first.get(name)
+                if seen is None:
+                    first[name] = (kind, path, node.lineno)
+                elif seen[0] != kind:
+                    out.append(Violation(
+                        self.name, path, node.lineno,
+                        f"metric {name!r} registered as {kind} here but "
+                        f"as {seen[0]} at {seen[1]}:{seen[2]} — one name, "
+                        "one kind"))
+        return out

@@ -1,0 +1,70 @@
+"""sorted-stream: batched-apply call sites prove their ordering.
+
+``DataComponent.apply_batch`` and ``tc.apply_shipped_batch`` are only
+correct for streams whose *per-key LSN order* is preserved: the engines
+run a stable sort keyed on the composite key alone, so records must
+arrive in stream (LSN) order or per-key order is scrambled and redo
+re-executes history out of order (exactly-once apply breaks silently —
+absolute after-images make most scrambles invisible to tests).
+
+The rule makes every call site carry its proof: either a ``sort`` /
+``sorted`` of the stream lexically dominates the call in the same
+function, or the site carries a pragma stating why the stream is
+already LSN-ordered (log-scan windows, commit-ordered buffers, ...).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import (_walk_no_funcs, call_name, enclosing_function,
+                       receiver_tail)
+from ..engine import FileCtx, Rule, Violation
+
+SRC_PREFIX = "src/repro/"
+
+
+def _is_batched_apply(call: ast.Call) -> bool:
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    attr = call.func.attr
+    if attr == "apply_shipped_batch":
+        return True
+    # plain .apply_batch exists on Replica/ShardedApplier too (ship-batch
+    # ingest, no ordering precondition) — only the DC engine is gated
+    return attr == "apply_batch" and \
+        receiver_tail(call.func.value) == "dc"
+
+
+def _sort_before(func: ast.AST, line: int) -> bool:
+    for node in _walk_no_funcs(func):
+        if isinstance(node, ast.Call) and node.lineno <= line:
+            name = call_name(node)
+            if name in ("sorted", "sort"):
+                return True
+    return False
+
+
+class SortedStreamRule(Rule):
+    name = "sorted-stream"
+    invariant = ("streams handed to the batched apply engines are "
+                 "LSN-ordered — proven by a dominating sort or a pragma "
+                 "naming the ordering source")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None or not ctx.path.startswith(SRC_PREFIX):
+            return []
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and _is_batched_apply(node)):
+                continue
+            func = enclosing_function(node, ctx.parents)
+            if func is not None and _sort_before(func, node.lineno):
+                continue
+            target = node.func.attr   # type: ignore[union-attr]
+            out.append(Violation(
+                self.name, ctx.path, node.lineno,
+                f"{target}() call with no dominating sort in this "
+                "function — sort the stream here, or pragma the reason "
+                "it is already LSN-ordered"))
+        return out

@@ -1,0 +1,52 @@
+"""tracer-guard: disabled tracing must cost nothing on hot paths.
+
+``Tracer.event`` returns immediately when disabled — but the *caller*
+has already built the kwargs dict by then.  PR 6's CI-asserted probe
+bound (≤5% on batched Log1 redo) only holds because every per-record
+probe is written as::
+
+    if TRACER.enabled:
+        TRACER.event("io.demand", pid=pid, ...)
+
+This rule pins the idiom: any ``<tracer>.event(...)`` call that passes
+keyword arguments must sit under an ``if ... .enabled`` guard in the
+same function.  (Spans are exempt: ``TRACER.span`` is per-phase, not
+per-record, and returns a shared null span when disabled.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import receiver_tail, under_enabled_guard
+from ..engine import FileCtx, Rule, Violation
+
+SRC_PREFIX = "src/repro/"
+TRACER_NAMES = {"TRACER", "_TRACER", "tracer", "_tracer"}
+
+
+class TracerGuardRule(Rule):
+    name = "tracer-guard"
+    invariant = ("tracer .event(kwargs) calls sit under `if "
+                 "TRACER.enabled` so disabled probes never build the "
+                 "kwargs dict (the PR-6 probe-overhead bound)")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None or not ctx.path.startswith(SRC_PREFIX):
+            return []
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "event"
+                    and receiver_tail(node.func.value) in TRACER_NAMES
+                    and node.keywords):
+                continue
+            if under_enabled_guard(node, ctx.parents):
+                continue
+            out.append(Violation(
+                self.name, ctx.path, node.lineno,
+                "tracer event with kwargs outside an `if "
+                "TRACER.enabled` guard — the kwargs dict is built even "
+                "when tracing is off"))
+        return out

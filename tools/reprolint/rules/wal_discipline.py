@@ -1,0 +1,110 @@
+"""wal-discipline: durable backend writes sit behind a stable-LSN check.
+
+Logical recovery has no page LSNs on the log to detect a page that hit
+media ahead of its log records — write-ahead ordering is enforced purely
+by the convention that everything durable is derived from the *stable*
+log prefix.  Concretely: any function that publishes bytes through a
+``MediaBackend`` (``*.backend.put(...)``) must be governed by a
+stable-LSN clamp (``stable_lsn`` / ``wal_lsn``), either in its own body
+or in every in-project caller chain that can reach it.
+
+The check is call-graph reachability over bare names (reprolint resolves
+no types): a writer is *safe* when its body references the clamp, or
+when every function that calls it is (recursively) safe.  A writer
+reachable without passing a clamp — including a public entry point with
+no in-project callers — is flagged.  Writes that are legitimately
+outside WAL ordering (the master pointer, the archive-meta frontier)
+carry pragmas stating exactly why.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set, Tuple
+
+from ..astutil import (_walk_no_funcs, body_names, call_name, receiver_tail,
+                       walk_functions)
+from ..engine import Project, Rule, Violation
+
+SRC_PREFIX = "src/repro/"
+CLAMP_NAMES = {"stable_lsn", "_stable_lsn", "wal_lsn"}
+
+
+def _writer_lines(func: ast.AST) -> List[int]:
+    """Lines inside ``func`` that call ``<...>.backend.put(...)`` (the
+    receiver chain must end in ``backend`` — ``page.put`` / ``btree.put``
+    are tree mutations, not durable publication)."""
+    lines = []
+    for node in _walk_no_funcs(func):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "put" and \
+                receiver_tail(node.func.value) == "backend":
+            lines.append(node.lineno)
+    return lines
+
+
+class WalDisciplineRule(Rule):
+    name = "wal-discipline"
+    invariant = ("every backend.put() is reachable only through a "
+                 "stable-LSN clamp (WAL ordering has no page-LSN "
+                 "runtime check to fall back on)")
+
+    def finish(self, project: Project) -> Iterable[Violation]:
+        # function table over src/repro: bare name -> [(path, qualname,
+        # node)]; call edges by bare name
+        funcs: List[Tuple[str, str, ast.AST]] = []
+        for path, ctx in project.files.items():
+            if ctx.tree is None or not path.startswith(SRC_PREFIX):
+                continue
+            for qual, node in walk_functions(ctx.tree):
+                funcs.append((path, qual, node))
+
+        by_bare: Dict[str, List[int]] = {}
+        for i, (_, qual, _node) in enumerate(funcs):
+            by_bare.setdefault(qual.rsplit(".", 1)[-1], []).append(i)
+
+        checked: Set[int] = set()
+        callers: Dict[int, Set[int]] = {i: set() for i in range(len(funcs))}
+        for i, (_, _, node) in enumerate(funcs):
+            names = body_names(node)
+            if names & CLAMP_NAMES:
+                checked.add(i)
+            for sub in _walk_no_funcs(node):
+                if isinstance(sub, ast.Call):
+                    cname = call_name(sub)
+                    if cname is None:
+                        continue
+                    for j in by_bare.get(cname, ()):
+                        if j != i:
+                            callers[j].add(i)
+
+        # safe = clamp in body, or every caller safe (cycles -> unsafe)
+        memo: Dict[int, bool] = {}
+
+        def safe(i: int, stack: Set[int]) -> bool:
+            if i in memo:
+                return memo[i]
+            if i in checked:
+                memo[i] = True
+                return True
+            if i in stack or not callers[i]:
+                return False        # cycle or uncalled public entry
+            stack.add(i)
+            ok = all(safe(c, stack) for c in callers[i])
+            stack.discard(i)
+            memo[i] = ok
+            return ok
+
+        out: List[Violation] = []
+        for i, (path, qual, node) in enumerate(funcs):
+            lines = _writer_lines(node)
+            if not lines or safe(i, set()):
+                continue
+            for line in lines:
+                out.append(Violation(
+                    self.name, path, line,
+                    f"{qual} publishes to a backend but no stable-LSN "
+                    "clamp governs it (not in its body, not on every "
+                    "caller path) — gate it or pragma the protocol "
+                    "reason"))
+        return out
