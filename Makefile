@@ -4,11 +4,12 @@
 #   make bench-smoke fast benchmark pass (all tables/figures + replication)
 #   make bench-diff  >2x regression gate vs the previous bench artifact
 #   make trace-demo  crash + traced recovery, timeline printed
+#   make blackbox-demo  staged crash + black-box dump + post-mortem render
 #   make examples    run every example end-to-end
 PY      := python
 PYPATH  := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench-diff trace-demo examples all
+.PHONY: test lint bench-smoke bench-diff trace-demo blackbox-demo examples all
 
 all: lint test bench-smoke bench-diff examples
 
@@ -36,9 +37,13 @@ bench-diff:
 trace-demo:
 	$(PY) examples/recovery_timeline.py
 
+blackbox-demo:
+	$(PY) examples/blackbox_demo.py
+
 examples:
 	$(PY) examples/quickstart.py
 	$(PY) examples/replica_relayout.py
 	$(PY) examples/train_with_recovery.py
 	$(PY) examples/serve_batched.py
 	$(PY) examples/recovery_timeline.py
+	$(PY) examples/blackbox_demo.py

@@ -112,6 +112,15 @@ def bench_batched_redo(fast: bool) -> list[dict]:
     speedup = per_rec / max(batched, 1e-9)
     rows[-1]["speedup_vs_log1"] = round(speedup, 2)
     rows[-1]["derived"] += f" speedup={speedup:.2f}x"
+    # window-size distribution across every batched flush this process ran
+    # (quantiles from the registry histogram, PR 8): a p50 far below the
+    # configured window means redo is flushing on txn boundaries, not fill
+    from repro import obs
+    wr = obs.value("recovery.window_records")
+    if isinstance(wr, dict) and wr.get("count"):
+        rows[-1]["window_p50"] = wr["p50"]
+        rows[-1]["window_p95"] = wr["p95"]
+        rows[-1]["window_p99"] = wr["p99"]
     assert speedup >= 2.0, \
         f"batched Log1 redo throughput only {speedup:.2f}x per-record " \
         "Log1 — below the 2x acceptance bound"
@@ -131,20 +140,30 @@ def bench_probe_overhead(fast: bool) -> list[dict]:
     total under 5% of the measured disabled redo wall.  The *enabled*
     overhead (per-IO event dicts are real work, ~10-20% here) is
     reported in the same row and only sanity-capped at 2x so a
-    pathological probe regression still fails CI."""
+    pathological probe regression still fails CI.
+
+    The flight recorder (PR 8) has no disabled state — it records on
+    every demand read and redo window unconditionally — so its budget is
+    measured the same way: time ``FLIGHT.record`` hot in isolation,
+    scale by the run's own recorded-event delta, and require the total
+    under 5% of the batched Log1 redo wall."""
     import time as _time
 
     from repro import obs
+    from repro.obs.flightrec import FLIGHT
     s, image, oracle = _redo_setup(fast)
     kw = dict(cache_pages=s.cache_pages, batched=True, batch_window=8192)
     t_off = t_on = float("inf")
     st = None
+    n_flight = 0
     with _quiet_gc():
         recover(image, Strategy.LOG1, **kw)        # warm decode/ck caches
         try:
             for _ in range(7):
                 obs.disable()
+                rec0 = FLIGHT.recorded
                 db, cand = recover(image, Strategy.LOG1, **kw)
+                n_flight = max(n_flight, FLIGHT.recorded - rec0)
                 t_off = min(t_off, cand.redo_wall_ms)
                 st = cand
                 obs.enable()
@@ -170,6 +189,11 @@ def bench_probe_overhead(fast: bool) -> list[dict]:
         with tr.span("probe", records=0, start=0):
             pass
     span_ms = (_time.perf_counter() - t0) * 1e3 / n
+    t0 = _time.perf_counter()
+    for _ in range(n):
+        FLIGHT.record("probe", 1, 2, 0.0)
+    flight_call_ms = (_time.perf_counter() - t0) * 1e3 / n
+    FLIGHT.clear()
 
     # probe counts from the run's own stats: one guard per demand read
     # (hit/partial/sync all check), per prefetch pace, per apply_batch
@@ -184,6 +208,15 @@ def bench_probe_overhead(fast: bool) -> list[dict]:
         f"({frac:.1%} of the {t_off:.2f}ms batched Log1 redo wall) — " \
         f"above the 5% CI bound"
 
+    # the always-on flight recorder gets the same 5% budget, scaled by
+    # the number of events one recovery actually records
+    flight_ms = n_flight * flight_call_ms
+    flight_frac = flight_ms / max(t_off, 1e-9)
+    assert flight_frac <= 0.05, \
+        f"always-on flight recorder costs {flight_ms:.3f}ms for " \
+        f"{n_flight} events ({flight_frac:.1%} of the {t_off:.2f}ms " \
+        f"batched Log1 redo wall) — above the 5% CI bound"
+
     overhead = t_on / max(t_off, 1e-9)
     assert t_on <= t_off * 2.0 + 1.0, \
         f"enabled tracing costs {overhead:.2f}x on batched Log1 redo " \
@@ -194,9 +227,13 @@ def bench_probe_overhead(fast: bool) -> list[dict]:
         "redo_wall_on_ms": round(t_on, 2),
         "disabled_probe_ms": round(probe_ms, 4),
         "disabled_probe_frac": round(frac, 5),
+        "flight_events": n_flight,
+        "flight_ms": round(flight_ms, 4),
+        "flight_frac": round(flight_frac, 5),
         "enabled_overhead": round(overhead, 3),
         "us_per_call": t_off * 1e3 / max(st.log_records, 1),
         "derived": f"disabled probes {frac:.2%} of {t_off:.1f}ms wall "
+                   f"flight {flight_frac:.2%} "
                    f"(enabled x{overhead:.2f}) ok=True",
     }]
 

@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV lines per benchmark row, writes
 full JSON to artifacts/bench/, and appends one machine-readable
 ``artifacts/bench_<n>.json`` summary per run (monotonic ``n``) so the
 perf trajectory across commits is diffable without parsing stdout.
+Per-module metric snapshots land in ``artifacts/bench/
+metrics_timeseries.jsonl`` and the final registry state in Prometheus
+text form at ``artifacts/bench/metrics.prom``.
 --full uses the paper-scaled setup (slower); the default "fast" mode
 keeps the whole suite under ~3 minutes.
 
@@ -70,7 +73,9 @@ def write_summary(results: list[dict], failures: list[str],
                 key: row[key] for key in
                 ("name", "us_per_call", "derived", "speedup",
                  "speedup_vs_log1", "ratio", "recs_per_s",
-                 "bytes_per_record")
+                 "bytes_per_record", "p50", "p95", "p99",
+                 "window_p50", "window_p95", "window_p99",
+                 "flight_frac")
                 if key in row}}
             for out in results for row in out["rows"]
         ],
@@ -87,9 +92,14 @@ def main() -> None:
                    fig3_ckpt_interval, kernel_bench, media_bench,
                    parallel_apply_bench, recovery_bench, replication_bench,
                    roofline_table, trainstore_bench)
+    from repro.obs.export import Sampler, prometheus_text
     ART.mkdir(parents=True, exist_ok=True)
     failures: list[str] = []
     results: list[dict] = []
+    # per-module metric snapshots: one JSONL row after each module, so a
+    # regression shows *which table* moved a counter, not just that the
+    # end-of-run total moved
+    sampler = Sampler(ART / "metrics_timeseries.jsonl", period_ms=0.0)
     print("name,us_per_call,derived")
     for mod in (fig2_cache_sweep, fig3_ckpt_interval, appendix_d_variants,
                 recovery_bench, replication_bench, parallel_apply_bench,
@@ -101,8 +111,10 @@ def main() -> None:
             failures.append(mod.__name__)
             print(f"# FAILED {mod.__name__}:", file=sys.stderr)
             traceback.print_exc()
+            sampler.tick(force=True, note=f"{mod.__name__} FAILED")
             continue
         results.append(out)
+        sampler.tick(force=True, note=out["name"])
         (ART / f"{out['name']}.json").write_text(json.dumps(out, indent=1))
         for row in out["rows"]:
             if "us_per_call" in row:
@@ -133,6 +145,8 @@ def main() -> None:
                       f"{row.get('shape','')},"
                       f"{row.get('compute_s', 0)*1e6:.0f},"
                       f"\"dom={row.get('dominant','')}\"")
+    sampler.close()
+    (ART / "metrics.prom").write_text(prometheus_text())
     summary_path = write_summary(results, failures, fast)
     print(f"# full JSON written to artifacts/bench/; run summary at "
           f"{summary_path.relative_to(ART_ROOT.parent)}", file=sys.stderr)

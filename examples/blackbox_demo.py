@@ -1,0 +1,81 @@
+"""Black-box flight recorder: crash, dump, post-mortem — from bytes alone.
+
+Builds a database, runs an update workload, crashes it, then stages a
+*failed* recovery (an injected fault mid-redo).  The always-on flight
+recorder dumps its ring + metrics snapshot as a versioned black-box blob
+on the way down; ``render_postmortem`` reconstructs the last-seconds
+timeline and names the interrupted phase from the dump file alone — no
+process state, no trace, no REPL.  A second, clean recovery then runs
+with the live progress display.
+
+    PYTHONPATH=src python examples/blackbox_demo.py   (or: make blackbox-demo)
+"""
+import io
+import random
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro import obs
+from repro.core import (Database, Strategy, committed_state_oracle, make_key,
+                        recover, recovered_state)
+from repro.obs.progress import ProgressObserver
+
+N_ROWS, VALUE = 10_000, 80
+rng = random.Random(11)
+
+DUMP_DIR = Path("artifacts") / "blackbox"
+DUMP_DIR.mkdir(parents=True, exist_ok=True)
+obs.FLIGHT.configure(sink=DUMP_DIR)
+
+print("1. load table, run transactions, crash ...")
+db = Database(cache_pages=1024, tracker_interval=100, bg_flush_per_txn=4)
+rows = [(f"k{i:08d}".encode(), rng.randbytes(VALUE)) for i in range(N_ROWS)]
+db.load_table("t", rows)
+base = {make_key("t", k): v for k, v in rows}
+for _ in range(300):
+    db.run_txn([("update", "t", f"k{rng.randrange(N_ROWS):08d}".encode(),
+                 rng.randbytes(VALUE)) for _ in range(10)])
+image = db.crash()
+crash_dump = obs.FLIGHT.last_dump
+print(f"   crash image: {len(image.log)} log records; "
+      f"black box dumped to {crash_dump}\n")
+
+print("2. recovery that dies mid-redo (injected fault at 50%) ...")
+
+
+class _Sabotage(ProgressObserver):
+    """Progress observer that raises once redo crosses the halfway mark —
+    stands in for an OOM kill / power cut landing mid-phase."""
+
+    def update(self, done_units, records=None):
+        super().update(done_units, records)
+        if self.fraction >= 0.5:
+            raise RuntimeError("injected fault: process died mid-redo")
+
+
+try:
+    recover(image, Strategy.LOG1, batched=True, batch_window=512,
+            progress=_Sabotage(out=io.StringIO()))
+except RuntimeError as exc:
+    print(f"   recovery failed as staged: {exc}")
+fail_dump = obs.FLIGHT.last_dump
+assert fail_dump is not None and fail_dump != crash_dump, \
+    "failed recovery should have produced a second black-box dump"
+print(f"   black box dumped to {fail_dump}\n")
+
+print("3. post-mortem from the dump file alone:\n")
+report = obs.render_postmortem(obs.load_dump(fail_dump), tail=40)
+print(report)
+phase = obs.interrupted_phase(obs.load_dump(fail_dump)["events"])
+assert phase is not None and "redo window" in phase, \
+    f"post-mortem should name the interrupted redo window, got {phase!r}"
+
+print("\n4. clean recovery with live progress ...")
+db2, stats = recover(image, Strategy.LOG1, batched=True, batch_window=512,
+                     progress=ProgressObserver("recover"))
+assert recovered_state(db2) == committed_state_oracle(image, base), \
+    "recovered state diverged from the committed-state oracle"
+print(f"   ok: {stats.log_records} records in {stats.redo_wall_ms:.1f}ms; "
+      f"recovery.progress = {obs.value('recovery.progress'):.1f}")

@@ -39,6 +39,8 @@ from ..media.codec import (FEAT_ZLIB, decode_archive_meta, decode_segment,
                            encode_archive_meta, encode_segment)
 from ..media.errors import CorruptSegmentError
 from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
+from ..obs.flightrec import auto_dump as _flight_dump
 
 # process-wide mirrors of the per-instance LRU tallies (instance attrs
 # stay: tests and benches assert them on specific archives)
@@ -200,6 +202,7 @@ class LogArchive:
             return 0
         recs = list(log.scan(lo, hi))
         sealed = len(recs)
+        _FLIGHT.record("arch.seal", lo, hi)
         live = len(self._segs) > self._head
         if live and len(self._segs[-1]) < self.segment_records:
             last = self._segs[-1]
@@ -260,10 +263,16 @@ class LogArchive:
             self.cache_hits += 1
             _C_CACHE_HITS.inc()
             return hit
-        records = tuple(decode_segment(self.backend.get(seg.name)))
+        try:
+            records = tuple(decode_segment(self.backend.get(seg.name)))
+        except CorruptSegmentError:
+            # black-box dump hook: capture the flight ring, then re-raise
+            _flight_dump("corrupt_segment")
+            raise
         self.segment_decodes += 1
         _C_SEG_DECODES.inc()
         if records[0].lsn != seg.lo or records[-1].lsn != seg.hi:
+            _flight_dump("corrupt_segment")
             raise CorruptSegmentError(
                 f"segment blob {seg.name} covers [{records[0].lsn}, "
                 f"{records[-1].lsn}] but the index expects [{seg.lo}, "
@@ -277,6 +286,7 @@ class LogArchive:
     def record(self, lsn: LSN) -> LogRec:
         i = self._seg_index(lsn)
         if i < 0:
+            _flight_dump("truncated_log")
             raise TruncatedLogError(
                 f"LSN {lsn} is not in the archive (retains "
                 f"[{self._retained_from}, {self._archived_upto}])")
@@ -292,6 +302,7 @@ class LogArchive:
             return
         i = self._seg_index(lo)
         if lo < self._retained_from or i < 0:
+            _flight_dump("truncated_log")
             raise TruncatedLogError(
                 f"archive scan from LSN {lo} reaches below the prune floor "
                 f"{self._retained_from}")
@@ -335,4 +346,5 @@ class LogArchive:
         self._retained_from = max(self._retained_from, floor)
         self.pruned_records += dropped
         self._save_meta()
+        _FLIGHT.record("arch.prune", below_lsn, dropped)
         return dropped

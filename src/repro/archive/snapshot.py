@@ -59,6 +59,7 @@ from ..core.tc import CrashImage, Database
 from ..media.backend import MediaBackend
 from ..media.codec import decode_snapshot, encode_snapshot
 from ..obs import metrics as obs_metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
 from ..obs.trace import TRACER as _TRACER
 from .log_archive import LogArchive
 
@@ -250,7 +251,7 @@ class SnapshotStore:
     def restore(self, target_lsn: LSN,
                 source: Union[Database, CrashImage, LogManager, None] = None,
                 base_rows=None, *, streaming: bool = True,
-                apply_window: int = 1024,
+                apply_window: int = 1024, progress=None,
                 **db_kwargs) -> tuple[Database, RestoreStats]:
         """Point-in-time restore: a writable ``Database`` whose state is
         exactly the committed prefix <= ``target_lsn``.
@@ -327,9 +328,12 @@ class SnapshotStore:
         with _TRACER.span("restore.heal", streaming=streaming,
                           redo_from=redo_from,
                           target_lsn=target_lsn) as hp:
+            if progress is not None:
+                # the heal span in LSN units, known before the first read
+                progress.begin(max(1, target_lsn - redo_from + 1))
             if streaming:
                 self._heal_streaming(db, scan, redo_from, target_lsn, begin,
-                                     apply_window, stats)
+                                     apply_window, stats, progress=progress)
             else:
                 self._heal_materializing(db, scan, redo_from, target_lsn,
                                          begin, stats)
@@ -337,6 +341,8 @@ class SnapshotStore:
                    replayed_ops=stats.replayed_ops)
         if archive is not None:
             stats.peak_cached_segments = archive.peak_cached_segments
+        if progress is not None:
+            progress.finish()
         stats.wall_ms = (time.perf_counter() - t0) * 1e3
         stats.publish()
         _C_RESTORE_RUNS.inc()
@@ -345,7 +351,7 @@ class SnapshotStore:
     @staticmethod
     def _heal_streaming(db: Database, scan, redo_from: LSN, target_lsn: LSN,
                         begin: LSN, apply_window: int,
-                        stats: RestoreStats) -> None:
+                        stats: RestoreStats, progress=None) -> None:
         """One pass, bounded memory: buffer in-flight transactions only,
         release each at its commit into a pending window that flushes
         through the batched apply engine as it fills.  Equivalent to the
@@ -357,20 +363,28 @@ class SnapshotStore:
         bufs: dict[int, list[UpdateRec]] = {}
         pending: list[UpdateRec] = []
         buffered = 0                       # ops across bufs (running count)
+        pos = redo_from                    # newest LSN consumed by the scan
+        replayed = 0
 
         def flush_pending() -> None:
+            nonlocal replayed
             if not pending:
                 return
             _H_RESTORE_WINDOW.observe(len(pending))
+            _FLIGHT.record("restore.window", len(pending))
             if _TRACER.enabled:
                 _TRACER.event("restore.window", ops=len(pending))
             local = db.tc.begin()
             # reprolint: allow(sorted-stream) — heal-replay windows come off a forward archive scan in LSN order
             db.tc.apply_shipped_batch(local, pending)
             db.tc.commit(local)
+            replayed += len(pending)
             pending.clear()
+            if progress is not None:
+                progress.update(pos - redo_from + 1, records=replayed)
 
         for rec in scan(redo_from, target_lsn):
+            pos = rec.lsn
             if isinstance(rec, UpdateRec):
                 bufs.setdefault(rec.txn, []).append(rec)
                 buffered += 1

@@ -25,6 +25,7 @@ are gone for good — reading below ``retained_lsn`` raises
 from __future__ import annotations
 
 import bisect
+import time
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Tuple
 
@@ -33,6 +34,10 @@ from .records import (LSN, NULL_LSN, BeginCkptRec, CommitRec, EndCkptRec,
 
 # Purely for IO accounting: how many log records fit a "log page".
 LOG_RECS_PER_PAGE = 64
+
+#: commit-to-visible stamp retention; bounds memory on a primary whose
+#: replicas never poll (stamps for drained commits are long gone anyway)
+_MAX_COMMIT_STAMPS = 8192
 
 
 class TruncatedLogError(LookupError):
@@ -71,6 +76,12 @@ class LogManager:
         # instead of rescanning the flushed range backwards — O(commits
         # since the last flush), amortized O(1) per commit.
         self._pending_commits: List[LSN] = []
+        # Commit LSN -> perf_counter stamp taken the moment the commit
+        # became stable (its flush) — the t0 of commit-to-visible.  The
+        # shipper copies stamps into batches; appliers subtract at apply.
+        # Bounded FIFO: insertion order is LSN order, so evicting the
+        # oldest drops the commit least likely to still be in flight.
+        self.commit_stamps: dict = {}
 
     # ---------------------------------------------------------------- append
     def append(self, rec: LogRec) -> LSN:
@@ -93,6 +104,12 @@ class LogManager:
             idx = bisect.bisect_right(self._pending_commits, tgt)
             if idx:
                 self.last_stable_commit_lsn = self._pending_commits[idx - 1]
+                stamps = self.commit_stamps
+                now = time.perf_counter()
+                for lsn in self._pending_commits[:idx]:
+                    if len(stamps) >= _MAX_COMMIT_STAMPS:
+                        del stamps[next(iter(stamps))]
+                    stamps[lsn] = now
                 del self._pending_commits[:idx]
             self._stable_lsn = tgt
             self.forced_flushes += 1
@@ -264,6 +281,10 @@ class LogManager:
         # coincide on the survivor (a commit in the unforced tail is lost).
         survivor.last_commit_lsn = self.last_stable_commit_lsn
         survivor.last_stable_commit_lsn = self.last_stable_commit_lsn
+        # Stamps belong to stable commits, all of which survive; keeping
+        # them lets commit-to-visible span a failover (stamps are
+        # perf_counter values, comparable within this process only).
+        survivor.commit_stamps = dict(self.commit_stamps)
         return survivor
 
     def n_log_pages(self, from_lsn: LSN) -> int:

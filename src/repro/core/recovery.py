@@ -20,6 +20,8 @@ from dataclasses import dataclass, field
 from typing import Optional, Union
 
 from ..obs import metrics as obs_metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
+from ..obs.flightrec import auto_dump as _flight_dump
 from ..obs.trace import TRACER as _TRACER
 from .dc import DataComponent, RedoStats, make_key, rec_key
 from .dpt import DPT, build_dpt_sql
@@ -126,7 +128,8 @@ def recover(image: CrashImage, strategy: Strategy, *,
             bg_flush_per_txn: int = 0,
             run_undo: bool = True,
             batched: bool = False,
-            batch_window: int = 4096) -> tuple[Database, RecoveryStats]:
+            batch_window: int = 4096,
+            progress=None) -> tuple[Database, RecoveryStats]:
     """Recover a crash image with one strategy; returns a live Database that
     can continue normal execution, plus the instrumented stats.
 
@@ -153,14 +156,19 @@ def recover(image: CrashImage, strategy: Strategy, *,
     # when tracing is disabled this is the shared null span (no cost).
     with _TRACER.span("recover", strategy=strategy.value,
                       batched=batched) as rspan:
-        return _recover(image, strategy, rspan, cache_pages=cache_pages,
-                        disk=disk, work_ms_per_op=work_ms_per_op,
-                        lookahead=lookahead, delta_mode=delta_mode,
-                        page_size=page_size,
-                        tracker_interval=tracker_interval,
-                        bg_flush_per_txn=bg_flush_per_txn,
-                        run_undo=run_undo, batched=batched,
-                        batch_window=batch_window)
+        try:
+            return _recover(image, strategy, rspan, cache_pages=cache_pages,
+                            disk=disk, work_ms_per_op=work_ms_per_op,
+                            lookahead=lookahead, delta_mode=delta_mode,
+                            page_size=page_size,
+                            tracker_interval=tracker_interval,
+                            bg_flush_per_txn=bg_flush_per_txn,
+                            run_undo=run_undo, batched=batched,
+                            batch_window=batch_window, progress=progress)
+        # reprolint: allow(loud-corruption) — black-box dump hook: the flight recorder captures the interrupted phase, then the error re-raises unconditionally
+        except BaseException:
+            _flight_dump("recover.failed")
+            raise
 
 
 _H_WINDOW_RECORDS = obs_metrics.histogram("recovery.window_records")
@@ -170,7 +178,8 @@ _C_RECOVER_RUNS = obs_metrics.counter("recovery.runs")
 def _recover(image: CrashImage, strategy: Strategy, rspan, *,
              cache_pages, disk, work_ms_per_op, lookahead, delta_mode,
              page_size, tracker_interval, bg_flush_per_txn, run_undo,
-             batched, batch_window) -> tuple[Database, RecoveryStats]:
+             batched, batch_window,
+             progress=None) -> tuple[Database, RecoveryStats]:
     t0 = time.perf_counter()
     # the "analysis" span covers exactly what ``stats.analysis_ms`` times:
     # image clone, DC init, SMO replay + DPT build
@@ -191,6 +200,10 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
         # recovers identically to an all-in-memory one.
         scan_from = m.bckpt_lsn if m.bckpt_lsn != NULL_LSN else 1
         stats.scan_from = scan_from
+        _FLIGHT.record("rec.analysis", scan_from, log.stable_lsn)
+        if progress is not None:
+            # LSNs are dense, so the analysis-pass span IS the unit count
+            progress.begin(log.stable_lsn - scan_from + 1)
 
         # --------------------------------------------------- DC recovery
         # SMO replay + Delta-record DPT come first (redo needs a well-formed
@@ -214,6 +227,7 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
     # ------------------------------------- fused analysis + redo (one pass)
     t1 = time.perf_counter()
     with _TRACER.span("redo") as rdsp:
+        _FLIGHT.record("rec.redo", scan_from)
         iosim.log_read(log.n_log_pages(scan_from))    # the single fused pass
         active: dict[int, LSN] = {}
         if m.end_ckpt_lsn != NULL_LSN:
@@ -246,6 +260,8 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
                                             len(window))
             stats.windows += 1
             _H_WINDOW_RECORDS.observe(len(window))
+            _FLIGHT.record("rec.window", done, len(window))
+            last_lsn = window[-1].lsn
             is_log2 = strategy is Strategy.LOG2 and bool(dc.pf_list)
             with _TRACER.span("redo.window", records=len(window),
                               start=done):
@@ -291,6 +307,8 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
                             _redo_physiological(dc, dpt, rec, dc.redo_stats)
             done += len(window)
             window.clear()
+            if progress is not None:
+                progress.update(last_lsn - scan_from + 1, records=done)
 
         for rec in log.scan(scan_from):
             # ---- analysis state machine (ARIES transaction table)
@@ -324,6 +342,7 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
     dc.pool.iosim = None
 
     # ----------------------------------------------------------- undo pass
+    _FLIGHT.record("rec.undo", len(active))
     with _TRACER.span("undo", losers=len(active)) as usp:
         tc = TransactionalComponent(log, dc)
         tc.active = dict(active)
@@ -347,8 +366,11 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
     # previous Delta record's TC-LSN") for any post-recovery Delta record.
     # Flushing them here — exactly what SQL Server's end-of-recovery
     # checkpoint does — restores the invariant and resets the redo baseline.
+    _FLIGHT.record("rec.checkpoint")
     with _TRACER.span("checkpoint"):
         tc.checkpoint()
+    if progress is not None:
+        progress.finish()
 
     db = Database.__new__(Database)
     db.store, db.log, db.dc, db.tc = store, log, dc, tc

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional
 
 from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
 from ..obs.trace import TRACER as _TRACER
 from .pages import Page
 from .records import NULL_PID, PID
@@ -77,6 +78,7 @@ class IOSim:
         if pid in self._done:
             self.stats.prefetch_hits += 1
             self._done.discard(pid)
+            _FLIGHT.record("io.demand", pid, 0)
             if _TRACER.enabled:
                 _TRACER.event("io.demand", pid=pid, outcome="hit",
                               clock=round(t0, 3))
@@ -88,9 +90,11 @@ class IOSim:
                 self.stats.partial_stalls += 1
                 self.clock = t
                 outcome = "partial"
+                _FLIGHT.record("io.demand", pid, 1, self.clock - t0)
             else:
                 self.stats.prefetch_hits += 1
                 outcome = "hit"
+                _FLIGHT.record("io.demand", pid, 0)
             self._done.discard(pid)
             if _TRACER.enabled:
                 _TRACER.event("io.demand", pid=pid, outcome=outcome,
@@ -99,6 +103,7 @@ class IOSim:
             return
         self.stats.sync_reads += 1
         self.clock += self.m.t_rand
+        _FLIGHT.record("io.demand", pid, 2, self.m.t_rand)
         if _TRACER.enabled:
             _TRACER.event("io.demand", pid=pid, outcome="sync",
                           clock=round(t0, 3), stall_ms=self.m.t_rand)
@@ -139,6 +144,7 @@ class IOSim:
             self.stats.prefetch_reads += len(g)
             for p in g:
                 self._inflight[p] = fin
+            _FLIGHT.record("io.prefetch", g[0], len(g))
             if _TRACER.enabled:
                 _TRACER.event("io.prefetch.issue", pids=list(g),
                               clock=round(self.clock, 3), fin=round(fin, 3))

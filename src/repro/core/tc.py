@@ -15,6 +15,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
+from ..obs.flightrec import FLIGHT as _FLIGHT
+from ..obs.flightrec import auto_dump as _flight_dump
 from .dc import DataComponent, make_key, rec_key, table_range
 from .log import LogManager
 from .records import (LSN, NULL_LSN, AbortRec, BeginCkptRec, CLRRec,
@@ -334,6 +336,11 @@ class Database:
 
     # ----------------------------------------------------------------- crash
     def crash(self) -> CrashImage:
+        """Simulate an unplanned crash: only stable state survives.  The
+        flight recorder treats this as a black-box event — the dump is
+        what a post-mortem of the dead process reads."""
+        _FLIGHT.record("db.crash", self.log.stable_lsn, self.log.end_lsn)
+        _flight_dump("db.crash")
         return CrashImage(store=self.store.clone(), log=self.log.crash())
 
     # ------------------------------------------------------------- inspection

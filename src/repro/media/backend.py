@@ -28,6 +28,7 @@ from pathlib import Path
 from typing import Union
 
 from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
 from .errors import BackendMissingError
 
 MANIFEST = "MANIFEST"
@@ -86,6 +87,7 @@ class MemoryBackend(MediaBackend):
         self._blobs[name] = bytes(data)
         self._c_put.inc()
         self._c_put_bytes.inc(len(data))
+        _FLIGHT.record("media.put", len(data))
 
     def get(self, name: str) -> bytes:
         try:
@@ -94,6 +96,7 @@ class MemoryBackend(MediaBackend):
             raise BackendMissingError(name, "MemoryBackend") from None
         self._c_get.inc()
         self._c_get_bytes.inc(len(raw))
+        _FLIGHT.record("media.get", len(raw))
         return raw
 
     def delete(self, name: str) -> None:
@@ -213,6 +216,7 @@ class DirectoryBackend(MediaBackend):
         self._write_atomic(self._path(name), data)
         self._c_put.inc()
         self._c_put_bytes.inc(len(data))
+        _FLIGHT.record("media.put", len(data))
         if name not in self._names:
             self._names.add(name)
             self._append_manifest(f"+{name}")
@@ -223,6 +227,7 @@ class DirectoryBackend(MediaBackend):
         raw = self._path(name).read_bytes()
         self._c_get.inc()
         self._c_get_bytes.inc(len(raw))
+        _FLIGHT.record("media.get", len(raw))
         return raw
 
     def get_head(self, name: str, n: int) -> bytes:

@@ -51,7 +51,7 @@ def load_media(where: BackendLike, *, cache_segments: int = 8
 
 def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
                  *, cache_segments: int = 8, streaming: bool = True,
-                 apply_window: int = 1024,
+                 apply_window: int = 1024, progress: object = None,
                  **db_kwargs: object) -> tuple[Database, RestoreStats]:
     """Point-in-time restore in a fresh process: a writable ``Database``
     equal to the committed prefix <= ``target_lsn``, built from the
@@ -75,7 +75,8 @@ def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
                     "segments (was the archiver ever run?)")
         sp.set(target_lsn=target_lsn, segments=len(archive.segments))
         return store.restore(target_lsn, streaming=streaming,
-                             apply_window=apply_window, **db_kwargs)
+                             apply_window=apply_window, progress=progress,
+                             **db_kwargs)
 
 
 def cold_restore_replica(where: BackendLike, replica_id: str, *,

@@ -1,5 +1,5 @@
 """Unified observability layer: metrics registry + span/event tracer +
-recovery-timeline renderer.
+recovery-timeline renderer + always-on flight recorder.
 
 Quick tour::
 
@@ -20,19 +20,35 @@ attribute increment, same as the ``self.x += 1`` counters it unifies.
 Tracing is off by default; every tracing probe no-ops behind a shared null
 span / an ``if TRACER.enabled`` guard, and the bound is CI-asserted (see
 ``benchmarks/recovery_bench.bench_probe_overhead``).
+
+The flight recorder (``obs.flightrec``) is the third tier: always on like
+metrics, event-shaped like the tracer, bounded like neither needs to be —
+a ring of compact tuples dumped as a versioned black-box blob when the
+engine crashes, rendered post hoc by ``obs.postmortem``.  Live progress
+(``obs.progress``) and registry export (``obs.export``) round out the
+production story.
 """
 from . import metrics, timeline, trace
+from . import export, flightrec, postmortem, progress
+from .export import Sampler, prometheus_text
+from .flightrec import FLIGHT, FlightRecorder, auto_dump, decode_dump
 from .metrics import (REGISTRY, counter, gauge, histogram, load_dataclass,
                       publish_dataclass, snapshot, value)
+from .postmortem import interrupted_phase, load_dump, render_postmortem
+from .progress import ProgressObserver
 from .timeline import build_tree, load_jsonl, render_timeline
 from .trace import TRACER, event, span
 
 __all__ = [
     "metrics", "trace", "timeline",
+    "export", "flightrec", "postmortem", "progress",
     "REGISTRY", "counter", "gauge", "histogram", "value", "snapshot",
     "publish_dataclass", "load_dataclass",
     "TRACER", "span", "event",
     "render_timeline", "build_tree", "load_jsonl",
+    "FLIGHT", "FlightRecorder", "auto_dump", "decode_dump",
+    "load_dump", "render_postmortem", "interrupted_phase",
+    "ProgressObserver", "Sampler", "prometheus_text",
     "enable", "disable", "reset",
 ]
 
@@ -47,6 +63,8 @@ def disable() -> None:
 
 
 def reset() -> None:
-    """Zero every metric in place and drop all trace events."""
+    """Zero every metric in place, drop all trace events, and clear the
+    flight-recorder ring (re-anchoring its baseline)."""
     metrics.REGISTRY.reset()
     trace.TRACER.clear()
+    flightrec.FLIGHT.clear()

@@ -1,0 +1,109 @@
+"""Registry export: Prometheus text format + JSONL time-series sampler.
+
+``prometheus_text()`` renders the whole registry in the Prometheus
+exposition format: counters and gauges as plain samples, histograms as
+summaries (``_count`` / ``_sum`` plus ``quantile=`` samples from the
+log-bucket estimates).  Metric dots become underscores; labels carry
+over verbatim.
+
+``Sampler`` appends ``{"t_wall", "elapsed_ms", "note", "metrics"}``
+JSONL lines on explicit ``tick()`` calls — no threads, no timers; bench
+and example drivers own the cadence.  ``tick()`` is rate-limited by
+``period_ms`` unless forced, so a driver can call it inside a tight loop
+and still get an evenly spaced series.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, TextIO, Union
+
+from . import metrics as _metrics
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+
+_QUANTILES = (("0.5", "p50"), ("0.95", "p95"), ("0.99", "p99"))
+
+
+def _prom_name(name: str) -> str:
+    return name.replace(".", "_").replace("-", "_")
+
+
+def _prom_labels(labels: Dict[str, str], extra: str = "") -> str:
+    parts = [f'{k}="{v}"' for k, v in sorted(labels.items())]
+    if extra:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def prometheus_text(registry: Optional[MetricsRegistry] = None) -> str:
+    """The registry in Prometheus exposition format, one string."""
+    reg = registry if registry is not None else _metrics.REGISTRY
+    lines: List[str] = []
+    typed: set[str] = set()
+    for key, metric in reg.items():
+        name, labels = MetricsRegistry.split_key(key)
+        pname = _prom_name(name)
+        if isinstance(metric, Histogram):
+            if pname not in typed:
+                typed.add(pname)
+                lines.append(f"# TYPE {pname} summary")
+            s = metric.summary()
+            for q, field in _QUANTILES:
+                lab = _prom_labels(labels, f'quantile="{q}"')
+                lines.append(f"{pname}{lab} {s[field]}")
+            lines.append(f"{pname}_count{_prom_labels(labels)} "
+                         f"{s['count']}")
+            lines.append(f"{pname}_sum{_prom_labels(labels)} {s['sum']}")
+        else:
+            kind = "counter" if isinstance(metric, Counter) else "gauge"
+            if pname not in typed:
+                typed.add(pname)
+                lines.append(f"# TYPE {pname} {kind}")
+            assert isinstance(metric, (Counter, Gauge))
+            lines.append(f"{pname}{_prom_labels(labels)} {metric.value}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+class Sampler:
+    """Appends registry snapshots as JSONL lines on ``tick()``."""
+
+    def __init__(self, path: Union[str, Path], *,
+                 period_ms: float = 1000.0, prefix: str = "") -> None:
+        self.path = Path(path)
+        self.period_ms = period_ms
+        self.prefix = prefix
+        self.t0 = time.perf_counter()
+        self._t_last = float("-inf")
+        self._fh: Optional[TextIO] = None
+        self.samples = 0
+
+    def tick(self, force: bool = False, note: str = "") -> bool:
+        """Write one sample if ``period_ms`` has elapsed (or forced);
+        returns whether a line was written."""
+        now = time.perf_counter()
+        if not force and (now - self._t_last) * 1e3 < self.period_ms:
+            return False
+        self._t_last = now
+        if self._fh is None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = open(self.path, "w", encoding="utf-8")
+        line = {"t_wall": time.time(),
+                "elapsed_ms": round((now - self.t0) * 1e3, 3),
+                "note": note,
+                "metrics": _metrics.snapshot(self.prefix)}
+        self._fh.write(json.dumps(line, sort_keys=True) + "\n")
+        self._fh.flush()
+        self.samples += 1
+        return True
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "Sampler":
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.close()

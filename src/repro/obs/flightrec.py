@@ -1,0 +1,213 @@
+"""Always-on flight recorder: the recovery engine's black box.
+
+The opt-in tracer (``obs.trace``) answers "where did this run spend its
+time" — when someone asked in advance.  The flight recorder answers the
+question nobody asked in advance: *what was the engine doing in the last
+seconds before it crashed?*  It is always on, allocation-light, and
+bounded:
+
+  * ``FLIGHT.record(kind, a, b, c)`` stores one compact tuple
+    ``(perf_counter, kind, a, b, c)`` into a preallocated ring.  Call
+    sites pass a literal kind string and up to three numbers — never
+    f-strings or dicts (reprolint's ``tracer-guard`` rule pins this).
+  * On ``Database.crash()``, a failed replica apply epoch, or any
+    corruption error, ``auto_dump(reason)`` writes the ring tail plus a
+    full metrics snapshot as a versioned black-box blob.  The blob uses
+    the media codec discipline (magic + format-version byte + CRC32
+    frame) so a cold process — ``obs.postmortem`` — can decode it with
+    nothing but the file, and a torn blob raises instead of rendering
+    short.
+  * The sink is the ``REPRO_BLACKBOX_DIR`` env var (a directory), or
+    anything with a ``.put(name, bytes)`` method (a ``MediaBackend``)
+    via ``FLIGHT.configure(...)``.  No sink → ``auto_dump`` is a no-op;
+    recording always happens regardless.
+
+Import discipline: this module may import only the stdlib and sibling
+``obs.metrics`` at module level — ``repro.media`` imports ``repro.core``
+which imports ``repro.obs`` back, so codec helpers are imported lazily
+inside :func:`decode_dump`.  The *encoder* writes the same frame layout
+with ``struct``/``zlib`` directly for the same reason.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import time
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from . import metrics as _metrics
+
+#: 4-byte magic + format-version byte, same prologue discipline as
+#: RSEG/RSNP/RMST/RAMT in ``media.codec``.
+BLACKBOX_MAGIC = b"RBBX"
+BLACKBOX_FORMAT_VERSION = 1
+#: directory sink picked up at import time (CI sets it for test runs)
+DUMP_ENV = "REPRO_BLACKBOX_DIR"
+#: default ring capacity — the "last N events" of the black box
+DEFAULT_CAPACITY = 4096
+
+_U32 = struct.Struct("<I")
+
+#: one recorded event: (perf_counter seconds, kind, a, b, c)
+Event = Tuple[float, str, float, float, float]
+#: a sink is a directory path or anything with .put(name, data)
+Sink = Union[str, Path, Any, None]
+
+
+class FlightRecorder:
+    __slots__ = ("capacity", "_buf", "_idx", "recorded", "enabled",
+                 "wall0", "perf0", "_sink", "_seq", "_baseline",
+                 "_dumping", "last_dump")
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 sink: Sink = None) -> None:
+        self.capacity = capacity
+        self.enabled = True
+        self._sink: Sink = sink
+        self._seq = 0
+        self._dumping = False
+        #: key/path of the most recent dump (None until the first one)
+        self.last_dump: Optional[str] = None
+        self.clear()
+
+    # ------------------------------------------------------------- recording
+    def record(self, kind: str, a: float = 0, b: float = 0,
+               c: float = 0) -> None:
+        """Hot path: one tuple store, no formatting, no dict building."""
+        if not self.enabled:
+            return
+        i = self._idx
+        self._buf[i] = (time.perf_counter(), kind, a, b, c)
+        i += 1
+        self._idx = 0 if i == self.capacity else i
+        self.recorded += 1
+
+    def clear(self) -> None:
+        """Empty the ring, re-anchor wall time, re-baseline metrics."""
+        self._buf: List[Optional[Event]] = [None] * self.capacity
+        self._idx = 0
+        self.recorded = 0
+        self.wall0 = time.time()
+        self.perf0 = time.perf_counter()
+        self._baseline: Dict[str, Any] = dict(_metrics.snapshot())
+
+    @property
+    def dropped(self) -> int:
+        return max(0, self.recorded - self.capacity)
+
+    def events(self) -> List[Event]:
+        """Ring contents, oldest first."""
+        if self.recorded <= self.capacity:
+            raw = self._buf[:self._idx]
+        else:
+            raw = self._buf[self._idx:] + self._buf[:self._idx]
+        return [e for e in raw if e is not None]
+
+    # ----------------------------------------------------------------- dumps
+    def configure(self, sink: Sink = None,
+                  capacity: Optional[int] = None) -> None:
+        """(Re)point the dump sink and optionally resize the ring.
+        Resizing clears it."""
+        self._sink = sink
+        if capacity is not None and capacity != self.capacity:
+            self.capacity = capacity
+            self.clear()
+
+    def mark_baseline(self) -> None:
+        """Snapshot current metrics as the delta baseline for the next
+        dump (postmortem shows dump-time minus baseline)."""
+        self._baseline = dict(_metrics.snapshot())
+
+    def dump_bytes(self, reason: str) -> bytes:
+        """Encode the black-box blob: magic + version + one CRC32 frame
+        holding a JSON payload.  Same frame layout as ``media.codec`` so
+        decode is whole-or-error."""
+        payload = {
+            "version": BLACKBOX_FORMAT_VERSION,
+            "reason": reason,
+            "t_dump": time.perf_counter(),
+            "wall_dump": time.time(),
+            "wall0": self.wall0,
+            "perf0": self.perf0,
+            "capacity": self.capacity,
+            "recorded": self.recorded,
+            "dropped": self.dropped,
+            "events": [list(e) for e in self.events()],
+            "baseline": self._baseline,
+            "snapshot": _metrics.snapshot(),
+        }
+        body = json.dumps(payload, sort_keys=True).encode("utf-8")
+        return (BLACKBOX_MAGIC + bytes([BLACKBOX_FORMAT_VERSION])
+                + _U32.pack(len(body)) + _U32.pack(zlib.crc32(body))
+                + body)
+
+    def dump(self, reason: str) -> Optional[str]:
+        """Write a black-box blob to the configured sink.  Returns the
+        key/path written, or None when no sink is configured.  Reentrant
+        calls (a dump failing mid-dump) no-op instead of recursing."""
+        if self._sink is None or self._dumping:
+            return None
+        self._dumping = True
+        try:
+            blob = self.dump_bytes(reason)
+            self._seq += 1
+            safe = "".join(ch if ch.isalnum() else "_" for ch in reason)
+            name = f"blackbox_{os.getpid()}_{self._seq:04d}_{safe}.rbbx"
+            sink = self._sink
+            put = getattr(sink, "put", None)
+            if callable(put):
+                put(name, blob)
+                key = name
+            else:
+                d = Path(os.fspath(sink))
+                d.mkdir(parents=True, exist_ok=True)
+                (d / name).write_bytes(blob)
+                key = str(d / name)
+            self.last_dump = key
+            self.mark_baseline()
+            return key
+        finally:
+            self._dumping = False
+
+
+def decode_dump(blob: bytes) -> Dict[str, Any]:
+    """Decode a black-box blob.  Whole-or-error: a truncated, torn, or
+    bit-flipped blob raises ``CorruptSegmentError`` — never a silent
+    short render."""
+    # Lazy import: repro.media pulls in repro.core, which imports
+    # repro.obs back; module level here must stay stdlib-only.
+    from ..media.codec import _Reader, _check_header, _read_frame
+    from ..media.errors import CorruptSegmentError
+
+    r = _Reader(blob, "black-box dump")
+    _check_header(r, BLACKBOX_MAGIC, "black-box dump",
+                  max_version=BLACKBOX_FORMAT_VERSION)
+    body = _read_frame(r, "black-box dump body")
+    if not r.exhausted:
+        raise CorruptSegmentError(
+            f"black-box dump has {len(r.buf) - r.pos} trailing bytes "
+            "past the body frame — refusing a partial read")
+    try:
+        payload = json.loads(body.buf.decode("utf-8"))
+    except (UnicodeDecodeError, ValueError) as exc:
+        raise CorruptSegmentError(
+            f"black-box dump body is not valid JSON: {exc}") from exc
+    if not isinstance(payload, dict):
+        raise CorruptSegmentError("black-box dump body is not an object")
+    for k in ("version", "reason", "t_dump", "events", "snapshot"):
+        if k not in payload:
+            raise CorruptSegmentError(
+                f"black-box dump missing field {k!r}")
+    return payload
+
+
+#: the process-wide recorder; sink defaults to $REPRO_BLACKBOX_DIR
+FLIGHT = FlightRecorder(sink=os.environ.get(DUMP_ENV) or None)
+
+
+def auto_dump(reason: str) -> Optional[str]:
+    """Module-level shim for crash sites: dump the process recorder."""
+    return FLIGHT.dump(reason)

@@ -25,7 +25,8 @@ views over the registry without giving up their cheap local tallying.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Type, TypeVar, Union
+import math
+from typing import Any, Dict, List, Optional, Tuple, Type, TypeVar, Union
 
 
 class Counter:
@@ -61,10 +62,48 @@ class Gauge:
         self.value = 0
 
 
+#: below this many observations quantiles are exact (sorted raw samples);
+#: at the threshold the samples fold into the fixed log-bucket scheme.
+SMALL_SAMPLE_MAX = 128
+#: log2 buckets per octave: bucket width ratio 2^(1/4) ≈ 1.19, so a
+#: bucketed quantile estimate is within ~±9% of the true value.
+_BUCKETS_PER_OCTAVE = 4
+#: bucket 1 starts at 2^-20 (~1 µs when observing ms); 256 buckets reach
+#: 2^44 (~5e8 s) — anything outside clamps to the edge buckets.
+_BUCKET_LOG_OFFSET = 20.0
+_N_BUCKETS = 257
+_QUANTILES = (("p50", 0.50), ("p95", 0.95), ("p99", 0.99))
+
+
+def _bucket_index(v: float) -> int:
+    if v <= 0.0:
+        return 0
+    i = int((math.log2(v) + _BUCKET_LOG_OFFSET) * _BUCKETS_PER_OCTAVE) + 1
+    if i < 1:
+        return 1
+    if i >= _N_BUCKETS:
+        return _N_BUCKETS - 1
+    return i
+
+
+def _bucket_mid(i: int) -> float:
+    """Geometric midpoint of bucket ``i``'s bounds — the value reported
+    for quantiles that land in it."""
+    if i <= 0:
+        return 0.0
+    return float(2.0 ** ((i - 0.5) / _BUCKETS_PER_OCTAVE
+                         - _BUCKET_LOG_OFFSET))
+
+
 class Histogram:
-    """Streaming count/sum/min/max — enough for window-size and latency
-    distributions without bucket-boundary bikeshedding."""
-    __slots__ = ("count", "total", "min", "max")
+    """Streaming count/sum/min/max plus p50/p95/p99 estimates.
+
+    Quantiles are exact (nearest-rank over retained raw samples) below
+    ``SMALL_SAMPLE_MAX`` observations; past that the samples fold into a
+    fixed log2-spaced bucket scheme (sparse dict, ~¼-octave buckets) and
+    quantiles become geometric-midpoint estimates clamped to the observed
+    min/max.  Memory stays bounded no matter how long the run."""
+    __slots__ = ("count", "total", "min", "max", "_samples", "_buckets")
     kind = "histogram"
 
     def __init__(self) -> None:
@@ -77,20 +116,61 @@ class Histogram:
             self.min = v
         if v > self.max:
             self.max = v
+        samples = self._samples
+        if samples is not None:
+            samples.append(v)
+            if len(samples) >= SMALL_SAMPLE_MAX:
+                self._spill()
+        else:
+            b = _bucket_index(v)
+            self._buckets[b] = self._buckets.get(b, 0) + 1
+
+    def _spill(self) -> None:
+        """Fold the exact sample list into the log buckets (one-way)."""
+        buckets = self._buckets
+        samples = self._samples
+        assert samples is not None
+        for v in samples:
+            b = _bucket_index(v)
+            buckets[b] = buckets.get(b, 0) + 1
+        self._samples = None
 
     def reset(self) -> None:
         self.count = 0
         self.total = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        self._samples: Optional[List[float]] = []
+        self._buckets: Dict[int, int] = {}
+
+    def quantile(self, q: float) -> float:
+        """Nearest-rank quantile: exact in the small-sample regime,
+        log-bucket midpoint estimate after spill."""
+        if not self.count:
+            return 0.0
+        samples = self._samples
+        if samples is not None:
+            xs = sorted(samples)
+            return xs[min(len(xs) - 1, int(q * len(xs)))]
+        rank = min(self.count, int(q * self.count) + 1)
+        seen = 0
+        for b in sorted(self._buckets):
+            seen += self._buckets[b]
+            if seen >= rank:
+                est = _bucket_mid(b)
+                return min(self.max, max(self.min, est))
+        return self.max
 
     def summary(self) -> Dict[str, float]:
         if not self.count:
             return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
-                    "avg": 0.0}
-        return {"count": self.count, "sum": round(self.total, 6),
-                "min": self.min, "max": self.max,
-                "avg": round(self.total / self.count, 6)}
+                    "avg": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+        out = {"count": self.count, "sum": round(self.total, 6),
+               "min": self.min, "max": self.max,
+               "avg": round(self.total / self.count, 6)}
+        for key, q in _QUANTILES:
+            out[key] = round(self.quantile(q), 6)
+        return out
 
 
 Metric = Union[Counter, Gauge, Histogram]
@@ -147,6 +227,24 @@ class MetricsRegistry:
 
     def __len__(self) -> int:
         return len(self._metrics)
+
+    def items(self) -> List[Tuple[str, Metric]]:
+        """(key, metric) pairs sorted by key — the typed counterpart of
+        ``snapshot()`` for exporters that need metric kinds."""
+        return sorted(self._metrics.items())
+
+    @staticmethod
+    def split_key(key: str) -> Tuple[str, Dict[str, str]]:
+        """Inverse of ``key()``: ``'a.b{x=1,y=2}'`` → ``('a.b',
+        {'x': '1', 'y': '2'})``."""
+        if not key.endswith("}") or "{" not in key:
+            return key, {}
+        name, _, inner = key[:-1].partition("{")
+        labels: Dict[str, str] = {}
+        for part in inner.split(","):
+            k, _, v = part.partition("=")
+            labels[k] = v
+        return name, labels
 
     # -------------------------------------------------------- bulk actions
     def snapshot(self, prefix: str = "") -> Dict[str, Value]:

@@ -1,0 +1,149 @@
+"""Render a black-box dump: last-seconds timeline + metric deltas.
+
+Works from the dump alone — a cold process that shares nothing with the
+one that died points this at a ``.rbbx`` blob (path, bytes, or a backend
+key) and gets a human-readable post-mortem:
+
+  * header: dump reason, wall-clock time, events captured/dropped
+  * the phase the crash interrupted, derived from the newest phase-class
+    flight event (analysis / redo window / apply epoch / …)
+  * the event tail, timestamps relative to the dump instant, with runs
+    of the same kind collapsed (``143x io.demand``)
+  * metric deltas: dump-time snapshot minus the recorder's baseline
+
+Corruption stays loud: a torn or truncated blob raises
+``CorruptSegmentError`` out of :func:`load_dump` — there is no partial
+render path.
+"""
+from __future__ import annotations
+
+import datetime
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from .flightrec import decode_dump
+
+#: flight-event kinds that mark an engine phase, newest wins; the value
+#: is a template over the event's (a, b) payload numbers.
+_PHASE_KINDS: Dict[str, str] = {
+    "rec.analysis": "analysis (scan from LSN {a:.0f})",
+    "rec.redo": "redo (from LSN {a:.0f})",
+    "rec.window": "redo window (records {a:.0f}..+{b:.0f})",
+    "rec.undo": "undo ({a:.0f} loser txns)",
+    "rec.checkpoint": "end-of-recovery checkpoint",
+    "restore.window": "restore heal window ({a:.0f} ops)",
+    "repl.apply": "replica apply (commit LSN {a:.0f})",
+    "shard.apply": "apply epoch (shard {a:.0f}, {b:.0f} ops)",
+    "db.crash": "explicit crash (stable LSN {a:.0f})",
+}
+
+DumpSource = Union[bytes, str, Path]
+
+
+def load_dump(source: DumpSource,
+              backend: Optional[Any] = None) -> Dict[str, Any]:
+    """Load + decode a dump from raw bytes, a filesystem path, or —
+    with ``backend`` — a blob key.  Whole-or-error."""
+    if backend is not None:
+        if not isinstance(source, str):
+            raise TypeError("backend lookup needs a str key")
+        return decode_dump(backend.get(source))
+    if isinstance(source, (bytes, bytearray)):
+        return decode_dump(bytes(source))
+    return decode_dump(Path(source).read_bytes())
+
+
+def interrupted_phase(events: Sequence[Sequence[Any]]) -> str:
+    """Name the phase the newest phase-class event puts the engine in."""
+    for ev in reversed(list(events)):
+        kind = str(ev[1])
+        tpl = _PHASE_KINDS.get(kind)
+        if tpl is not None:
+            return tpl.format(a=float(ev[2]), b=float(ev[3]))
+    return "unknown (no phase events captured)"
+
+
+def _collapse(events: Sequence[Sequence[Any]],
+              t_dump: float) -> List[str]:
+    """Event tail with runs of one kind collapsed to a single line."""
+    lines: List[str] = []
+    i = 0
+    evs = list(events)
+    while i < len(evs):
+        kind = evs[i][1]
+        j = i
+        while j + 1 < len(evs) and evs[j + 1][1] == kind:
+            j += 1
+        t_first = (float(evs[i][0]) - t_dump) * 1e3
+        t_last = (float(evs[j][0]) - t_dump) * 1e3
+        n = j - i + 1
+        if n == 1:
+            a, b, c = (float(evs[i][k]) for k in (2, 3, 4))
+            detail = f"a={a:g} b={b:g} c={c:g}"
+            lines.append(f"  {t_first:>10.3f}ms  {kind}  ({detail})")
+        else:
+            c_sum = sum(float(e[4]) for e in evs[i:j + 1])
+            lines.append(f"  {t_first:>10.3f}ms..{t_last:.3f}ms  "
+                         f"{n}x {kind}  (sum c={c_sum:g})")
+        i = j + 1
+    return lines
+
+
+def _metric_deltas(baseline: Dict[str, Any],
+                   snapshot: Dict[str, Any]) -> List[Tuple[str, str]]:
+    """(key, rendered delta) for every metric that moved since the
+    recorder's baseline, sorted by key."""
+    out: List[Tuple[str, str]] = []
+    for key in sorted(snapshot):
+        now = snapshot[key]
+        base = baseline.get(key, 0)
+        if isinstance(now, dict):          # histogram summary
+            base_n = base.get("count", 0) if isinstance(base, dict) else 0
+            dn = now.get("count", 0) - base_n
+            if dn:
+                out.append((key, f"+{dn} obs (p50={now.get('p50', 0)} "
+                                 f"p95={now.get('p95', 0)} "
+                                 f"max={now.get('max', 0)})"))
+        else:
+            base_v = base if isinstance(base, (int, float)) else 0
+            d = now - base_v
+            if d:
+                out.append((key, f"{base_v:g} -> {now:g} ({d:+g})"))
+    return out
+
+
+def render_postmortem(dump: Union[Dict[str, Any], DumpSource], *,
+                      tail: int = 100,
+                      max_deltas: int = 40) -> str:
+    """Human-readable post-mortem from a dump (decoded dict or any
+    :func:`load_dump` source)."""
+    if not isinstance(dump, dict):
+        dump = load_dump(dump)
+    t_dump = float(dump["t_dump"])
+    wall = dump.get("wall_dump")
+    wall_s = (datetime.datetime.fromtimestamp(
+        float(wall), tz=datetime.timezone.utc).isoformat()
+        if wall is not None else "?")
+    events = list(dump["events"])
+    lines = [
+        f"black box: reason={dump['reason']}  wall={wall_s}",
+        f"  {len(events)} events captured, "
+        f"{dump.get('dropped', 0)} dropped "
+        f"(ring capacity {dump.get('capacity', '?')})",
+        f"interrupted during: {interrupted_phase(events)}",
+    ]
+    if events:
+        shown = events[-tail:]
+        lines.append(f"last events (t relative to dump; showing "
+                     f"{len(shown)} of {len(events)}):")
+        lines.extend(_collapse(shown, t_dump))
+    else:
+        lines.append("last events: none captured")
+    deltas = _metric_deltas(dump.get("baseline", {}), dump["snapshot"])
+    if deltas:
+        lines.append("metric deltas since baseline:")
+        for key, txt in deltas[:max_deltas]:
+            lines.append(f"  {key}: {txt}")
+        if len(deltas) > max_deltas:
+            lines.append(f"  ... {len(deltas) - max_deltas} more")
+    return "\n".join(lines)

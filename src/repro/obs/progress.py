@@ -1,0 +1,117 @@
+"""Live recovery/restore progress: fraction complete, records/s, ETA.
+
+``recover()``, ``SnapshotStore.restore()`` and ``cold_restore`` accept a
+``progress=`` observer.  The engine feeds it from the analysis-pass LSN
+span: ``begin(total_units)`` once the span is known, ``update(done_units,
+records=...)`` at window boundaries, ``finish()`` on success.  The
+observer publishes two gauges —
+
+  * ``recovery.progress`` — fraction complete in [0, 1]
+  * ``recovery.eta_ms``   — estimated remaining wall, from the observed
+    unit rate (0 until one update has landed, 0 again at finish)
+
+— and renders a one-line console display (``line()``) that examples can
+carriage-return in place.  An ``out`` stream makes it self-printing.
+
+The engine calls these methods from hot loops, so ``update`` is throttled
+by ``min_interval_ms`` (0 = every call) and does only arithmetic.  Any
+exception an observer raises propagates out of the recovery pass — the
+black-box demo uses exactly that to script a crash mid-redo.
+"""
+from __future__ import annotations
+
+import time
+from typing import IO, Optional
+
+from . import metrics as _metrics
+
+_G_PROGRESS = _metrics.gauge("recovery.progress")
+_G_ETA = _metrics.gauge("recovery.eta_ms")
+
+
+class ProgressObserver:
+    """Tracks one recovery/restore pass; reusable after ``finish()``."""
+
+    def __init__(self, label: str = "recover", *,
+                 out: Optional[IO[str]] = None,
+                 min_interval_ms: float = 0.0) -> None:
+        self.label = label
+        self.out = out
+        self.min_interval_ms = min_interval_ms
+        self.total = 0.0
+        self.done = 0.0
+        self.records = 0
+        self.t0 = 0.0
+        self._t_last = 0.0
+        self.rate = 0.0          # units/s over the whole pass so far
+        self.records_per_s = 0.0
+        self.eta_ms = 0.0
+        self.active = False
+
+    # ------------------------------------------------------------ lifecycle
+    def begin(self, total_units: float) -> None:
+        self.total = max(1.0, float(total_units))
+        self.done = 0.0
+        self.records = 0
+        self.t0 = time.perf_counter()
+        self._t_last = 0.0
+        self.rate = 0.0
+        self.records_per_s = 0.0
+        self.eta_ms = 0.0
+        self.active = True
+        _G_PROGRESS.set(0.0)
+        _G_ETA.set(0.0)
+
+    def update(self, done_units: float,
+               records: Optional[int] = None) -> None:
+        if not self.active:
+            return
+        now = time.perf_counter()
+        if (now - self._t_last) * 1e3 < self.min_interval_ms:
+            return
+        self._t_last = now
+        self.done = min(float(done_units), self.total)
+        if records is not None:
+            self.records = records
+        elapsed = now - self.t0
+        if elapsed > 0:
+            self.rate = self.done / elapsed
+            self.records_per_s = self.records / elapsed
+            if self.rate > 0:
+                self.eta_ms = (self.total - self.done) / self.rate * 1e3
+        _G_PROGRESS.set(round(self.fraction, 6))
+        _G_ETA.set(round(self.eta_ms, 3))
+        self._emit()
+
+    def finish(self) -> None:
+        if not self.active:
+            return
+        self.done = self.total
+        self.eta_ms = 0.0
+        self.active = False
+        _G_PROGRESS.set(1.0)
+        _G_ETA.set(0.0)
+        self._emit(final=True)
+
+    # ------------------------------------------------------------ rendering
+    @property
+    def fraction(self) -> float:
+        return self.done / self.total if self.total else 0.0
+
+    def line(self) -> str:
+        """One-line console display: bar, percent, records/s, ETA."""
+        frac = self.fraction
+        filled = int(frac * 24)
+        bar = "#" * filled + "-" * (24 - filled)
+        eta = "done" if not self.active and frac >= 1.0 else \
+            f"eta {self.eta_ms / 1e3:5.1f}s"
+        return (f"{self.label} [{bar}] {frac * 100:5.1f}%  "
+                f"{self.records_per_s:9.0f} rec/s  {eta}")
+
+    def _emit(self, final: bool = False) -> None:
+        if self.out is None:
+            return
+        self.out.write("\r" + self.line())
+        if final:
+            self.out.write("\n")
+        self.out.flush()

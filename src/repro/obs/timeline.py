@@ -122,6 +122,21 @@ def _cache_footer(snap: dict) -> List[str]:
     return lines
 
 
+def _hist_footer(snap: dict) -> List[str]:
+    """Quantile lines for every histogram in the snapshot that saw data
+    (a histogram summary is the only dict-valued snapshot entry)."""
+    lines = []
+    for key in sorted(snap):
+        s = snap[key]
+        if not isinstance(s, dict) or not s.get("count"):
+            continue
+        lines.append(
+            f"hist: {key}  n={s['count']}  p50={s.get('p50', 0):g}  "
+            f"p95={s.get('p95', 0):g}  p99={s.get('p99', 0):g}  "
+            f"max={s['max']:g}")
+    return lines
+
+
 def render_timeline(events: Optional[List[dict]] = None,
                     snapshot: Optional[dict] = None) -> str:
     """Render the trace as an indented tree.  ``events`` defaults to the
@@ -134,7 +149,7 @@ def render_timeline(events: Optional[List[dict]] = None,
     for root in build_tree(events):
         _render_node(root, lines, "", True, True)
     if snapshot:
-        footer = _cache_footer(snapshot)
+        footer = _cache_footer(snapshot) + _hist_footer(snapshot)
         if footer:
             if lines:
                 lines.append("")

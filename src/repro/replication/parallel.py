@@ -39,6 +39,7 @@ queues expose the dispatch parallelism a multicore applier would exploit.
 from __future__ import annotations
 
 import bisect
+import time
 import zlib
 from collections import deque
 from dataclasses import dataclass, field
@@ -47,6 +48,8 @@ from typing import Callable, Optional, Union
 from ..core.dc import make_key, table_range
 from ..core.records import LSN, NULL_LSN, UpdateRec
 from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
+from ..obs.flightrec import auto_dump as _flight_dump
 from .replica import (REPL_KEY, REPL_TABLE, _C_APPLIED_OPS, _C_APPLIED_TXNS,
                       Replica, pack_watermark)
 
@@ -103,7 +106,10 @@ class ShardState:
     idx: int
     # in-flight slices: source txn -> its records for this range (LSN order)
     pending: dict[int, list[UpdateRec]] = field(default_factory=dict)
-    # committed, not yet applied: (commit_lsn, source txn, records)
+    # committed, not yet applied:
+    # (commit_lsn, source txn, records, flush stamp, batch-receive time) —
+    # the last two ride along for commit-to-visible attribution (stamp may
+    # be None when the primary stamp was unavailable)
     queue: deque = field(default_factory=deque)
     dispatched_ops: int = 0
     applied_ops: int = 0
@@ -148,6 +154,16 @@ class ShardedApplier(Replica):
         self._dispatched_lsn: LSN = NULL_LSN      # newest dispatched commit
         self._since_barrier = 0
         self.barriers = 0
+        # per-shard commit-to-visible handles (visible = the shard slice's
+        # local commit; the durable barrier lags on purpose)
+        self._h_shard_c2v = [
+            _metrics.histogram("repl.commit_to_visible_ms",
+                               replica=replica_id, shard=i)
+            for i in range(n_shards)]
+        self._h_shard_queue = [
+            _metrics.histogram("repl.c2v.queue_wait_ms",
+                               replica=replica_id, shard=i)
+            for i in range(n_shards)]
 
     # --------------------------------------------------------- engine hooks
     def _shard_of(self, table: str, key: bytes) -> int:
@@ -173,10 +189,12 @@ class ShardedApplier(Replica):
         # take_losers as if it could still abort.
         self._first_lsn.pop(txn, None)
         n = 0
+        stamp = self._batch_stamps.get(commit_lsn)
+        recv = self._batch_recv
         for idx in sorted(self._touched.pop(txn, ())):
             shard = self.shards[idx]
             ops = shard.pending.pop(txn)
-            shard.queue.append((commit_lsn, txn, ops))
+            shard.queue.append((commit_lsn, txn, ops, stamp, recv))
             shard.dispatched_ops += len(ops)
             n += len(ops)
         if commit_lsn > self._dispatched_lsn:
@@ -210,13 +228,17 @@ class ShardedApplier(Replica):
         n = 0
         for s in targets:
             while s.queue and (upto_lsn is None or s.queue[0][0] <= upto_lsn):
-                commit_lsn, src_txn, ops = s.queue[0]
-                self._apply_slice(s, ops)
+                commit_lsn, src_txn, ops, stamp, recv = s.queue[0]
+                self._apply_slice(s, ops, stamp=stamp, recv=recv)
                 s.queue.popleft()
                 n += len(ops)
         return n
 
-    def _apply_slice(self, s: ShardState, ops: list[UpdateRec]) -> None:
+    def _apply_slice(self, s: ShardState, ops: list[UpdateRec], *,
+                     stamp: Optional[float] = None,
+                     recv: float = 0.0) -> None:
+        t_apply0 = time.perf_counter()
+        _FLIGHT.record("shard.apply", s.idx, len(ops))
         txn = self.db.tc.begin()
         try:
             # same leaf-resident batched engine as the serial path — a
@@ -225,17 +247,27 @@ class ShardedApplier(Replica):
             # reprolint: allow(sorted-stream) — a shard slice arrives in source LSN order by construction (the router drains per-shard queues in ship order)
             self.db.tc.apply_shipped_batch(txn, ops)
             self.db.note_updates(len(ops))
-        # reprolint: allow(loud-corruption) — aborts the partial slice then re-raises unconditionally; the durable watermark re-ships it after recovery
+        # reprolint: allow(loud-corruption) — aborts the partial slice and dumps the black box, then re-raises unconditionally; the durable watermark re-ships it after recovery
         except Exception:
             # undo the partial slice; the queue still holds it, and the
             # durable watermark (last barrier) re-ships it after recovery
             self.db.tc.abort(txn)
+            _flight_dump("shard.apply_failed")
             raise
         self.db.tc.commit(txn)
         s.applied_subtxns += 1
         s.applied_ops += len(ops)
         self.applied_ops += len(ops)
         _C_APPLIED_OPS.inc(len(ops))
+        if stamp is not None:
+            t_done = time.perf_counter()
+            self._h_shard_c2v[s.idx].observe(
+                round((t_done - stamp) * 1e3, 6))
+            self._h_shard_queue[s.idx].observe(
+                round(max(0.0, t_apply0 - recv) * 1e3, 6))
+            self._h_ship_wait.observe(
+                round(max(0.0, recv - stamp) * 1e3, 6))
+            self._h_apply.observe(round((t_done - t_apply0) * 1e3, 6))
 
     def barrier(self) -> LSN:
         """Epoch barrier: drain every shard through the newest dispatched

@@ -39,6 +39,7 @@ buffered ops live and when they are applied.
 from __future__ import annotations
 
 import struct
+import time
 from typing import Optional
 
 from ..core.dc import make_key, split_key
@@ -47,6 +48,8 @@ from ..core.records import (LSN, NULL_LSN, AbortRec, CommitRec, LogRec,
 from ..core.recovery import RecoveryStats, Strategy, recover
 from ..core.tc import CrashImage, Database
 from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
+from ..obs.flightrec import auto_dump as _flight_dump
 from .shipper import LogShipper, ShipBatch
 
 _C_APPLIED_TXNS = _metrics.counter("repl.applied_txns")
@@ -100,6 +103,11 @@ class ApplyEngine:
         self.dropped_dup_txns = 0
         self.skipped_dup_recs = 0
         self.promoted = False
+        # commit-to-visible plumbing: the current batch's primary flush
+        # stamps and the instant this engine received the batch (both
+        # perf_counter; comparable within this process only)
+        self._batch_stamps: dict = {}
+        self._batch_recv: float = 0.0
 
     # ----------------------------------------------------------- ingestion
     def apply_batch(self, batch: ShipBatch) -> int:
@@ -113,6 +121,8 @@ class ApplyEngine:
         a batch that starts *below* the consumed position — is benign
         re-delivery; already-consumed records are skipped so straddling
         transactions are not double-buffered."""
+        self._batch_stamps = getattr(batch, "stamps", None) or {}
+        self._batch_recv = time.perf_counter()
         if batch.from_lsn > self._ship_pos:
             raise RuntimeError(
                 f"replica {self.replica_id}: shipped batch starts at LSN "
@@ -242,6 +252,16 @@ class Replica(ApplyEngine):
         else:
             self.db.bootstrap_empty()
         self._bufs: dict[int, list[UpdateRec]] = {}
+        # end-to-end latency (primary flush -> locally visible) plus its
+        # per-stage attribution; handles cached once, observed per commit
+        self._h_c2v = _metrics.histogram("repl.commit_to_visible_ms",
+                                         replica=replica_id)
+        self._h_ship_wait = _metrics.histogram("repl.c2v.ship_wait_ms",
+                                               replica=replica_id)
+        self._h_queue_wait = _metrics.histogram("repl.c2v.queue_wait_ms",
+                                                replica=replica_id)
+        self._h_apply = _metrics.histogram("repl.c2v.apply_ms",
+                                           replica=replica_id)
 
     # ------------------------------------------------------------ apply path
     def _buffer(self, rec: UpdateRec) -> None:
@@ -254,10 +274,11 @@ class Replica(ApplyEngine):
         first = self._first_lsn.pop(txn, None)
         try:
             return self._apply_commit(txn, commit_lsn, self._bufs.pop(txn, []))
-        # reprolint: allow(loud-corruption) — restores the in-flight buffer bookkeeping, then re-raises unconditionally: nothing is swallowed
+        # reprolint: allow(loud-corruption) — restores the in-flight buffer bookkeeping and dumps the black box, then re-raises unconditionally: nothing is swallowed
         except Exception:
             if first is not None:    # ops are back in the buffer: still
                 self._first_lsn[txn] = first    # in-flight for resume/losers
+            _flight_dump("replica.apply_failed")
             raise
 
     @property
@@ -271,6 +292,8 @@ class Replica(ApplyEngine):
 
     def _apply_commit(self, src_txn: int, commit_lsn: LSN,
                       ops: list[UpdateRec]) -> int:
+        t_apply0 = time.perf_counter()
+        _FLIGHT.record("repl.apply", commit_lsn, len(ops))
         resume = self.resume_floor(commit_lsn)
         txn = self.db.tc.begin()
         try:
@@ -299,6 +322,15 @@ class Replica(ApplyEngine):
         _C_APPLIED_OPS.inc(len(ops))
         _metrics.gauge("repl.applied_lsn",
                        replica=self.replica_id).set(commit_lsn)
+        stamp = self._batch_stamps.get(commit_lsn)
+        if stamp is not None:
+            t_done = time.perf_counter()
+            self._h_c2v.observe(round((t_done - stamp) * 1e3, 6))
+            self._h_ship_wait.observe(
+                round(max(0.0, self._batch_recv - stamp) * 1e3, 6))
+            self._h_queue_wait.observe(
+                round(max(0.0, t_apply0 - self._batch_recv) * 1e3, 6))
+            self._h_apply.observe(round((t_done - t_apply0) * 1e3, 6))
         return len(ops)
 
     # --------------------------------------------------------------- reads

@@ -25,6 +25,7 @@ from ..archive.errors import SnapshotRequired
 from ..core.log import LogManager, TruncatedLogError
 from ..core.records import LSN, AbortRec, CommitRec, LogRec, UpdateRec
 from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
 
 _C_SHIPPED = _metrics.counter("ship.shipped_records")
 _C_POLLS = _metrics.counter("ship.polls")
@@ -51,6 +52,10 @@ class ShipBatch:
     from_lsn: LSN = 1
     next_lsn: LSN = 1
     has_more: bool = False
+    #: commit LSN -> primary flush stamp (perf_counter) for the CommitRecs
+    #: in this batch — the t0 side of commit-to-visible.  Absent entries
+    #: (stamp evicted, or a hand-built batch) just skip the histogram.
+    stamps: dict = field(default_factory=dict)
 
     def __len__(self) -> int:
         return len(self.records)
@@ -152,10 +157,22 @@ class LogShipper:
         self.polls += 1
         _C_SHIPPED.inc(len(shipped))
         _C_POLLS.inc()
+        _FLIGHT.record("ship.poll", cur, len(shipped))
         _metrics.gauge("ship.backlog", replica=replica_id).set(
             max(0, self.log.stable_lsn - (nxt - 1)))
+        # carry each shipped commit's flush stamp so the applier can
+        # close the commit-to-visible loop (CrashImage sources keep the
+        # stamps of their stable commits; bare test logs may have none)
+        primary_stamps = getattr(self.log, "commit_stamps", None) or {}
+        stamps = {}
+        for rec in shipped:
+            if isinstance(rec, CommitRec):
+                t = primary_stamps.get(rec.lsn)
+                if t is not None:
+                    stamps[rec.lsn] = t
         return ShipBatch(records=shipped, from_lsn=cur, next_lsn=nxt,
-                         has_more=nxt <= self.log.stable_lsn)
+                         has_more=nxt <= self.log.stable_lsn,
+                         stamps=stamps)
 
     def drain(self, replica_id: str, apply) -> int:
         """Poll until no stable records remain, feeding each batch to

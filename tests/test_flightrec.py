@@ -1,0 +1,361 @@
+"""Flight recorder + crash forensics tests: ring semantics, black-box
+dump round-trips, crash-site dumps (explicit crash, mid-redo fault,
+mid-shard-apply fault), torn-dump refusal, the dump-file-alone
+post-mortem (subprocess), commit-to-visible histograms, live recovery
+progress, and the Prometheus/JSONL exporters."""
+import io
+import json
+import os
+import random
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+import repl_workload
+from repro import obs
+from repro.archive import Archiver, LogArchive, SnapshotStore
+from repro.core import (Database, Strategy, committed_state_oracle, make_key,
+                        recover, recovered_state)
+from repro.media import DirectoryBackend, cold_restore
+from repro.media.errors import CorruptSegmentError
+from repro.obs.flightrec import FlightRecorder, decode_dump
+from repro.obs.progress import ProgressObserver
+from repro.replication import LogShipper, Replica, ShardedApplier
+
+REPO = Path(__file__).resolve().parents[1]
+N_ROWS = 300
+VAL = 32
+
+
+@pytest.fixture(autouse=True)
+def _obs_isolation():
+    obs.FLIGHT.configure(sink=None)
+    obs.FLIGHT.clear()
+    obs.disable()
+    obs.TRACER.clear()
+    yield
+    obs.FLIGHT.configure(sink=None)
+    obs.FLIGHT.clear()
+    obs.disable()
+    obs.TRACER.clear()
+
+
+def make_primary(rng):
+    return repl_workload.make_primary(rng, n_rows=N_ROWS, val=VAL)
+
+
+def drive(db, rng, n_txns, abort_frac=0.15):
+    repl_workload.drive(db, rng, n_txns, n_rows=N_ROWS, val=VAL,
+                        abort_frac=abort_frac)
+
+
+def _crash_image(seed=3, n_txns=80):
+    rng = random.Random(seed)
+    db, rows, base = make_primary(rng)
+    drive(db, rng, n_txns, abort_frac=0.0)
+    return db.crash(), base
+
+
+class _Saboteur(ProgressObserver):
+    """Raises once redo crosses the halfway mark — a stand-in for an OOM
+    kill or power cut landing mid-phase."""
+
+    def __init__(self):
+        super().__init__("recover", out=io.StringIO())
+
+    def update(self, done_units, records=None):
+        super().update(done_units, records)
+        if self.fraction >= 0.5:
+            raise RuntimeError("injected fault mid-redo")
+
+
+def _failed_recovery_dump(sink_dir):
+    """Stage a recovery that dies mid-redo; returns the dump path."""
+    image, _base = _crash_image()
+    obs.FLIGHT.configure(sink=sink_dir)
+    with pytest.raises(RuntimeError, match="injected fault"):
+        recover(image, Strategy.LOG1, batched=True, batch_window=64,
+                progress=_Saboteur())
+    path = obs.FLIGHT.last_dump
+    assert path is not None
+    return path
+
+
+# ------------------------------------------------------------------- ring
+def test_ring_bounds_order_and_dropped():
+    fr = FlightRecorder(capacity=4)
+    for i in range(10):
+        fr.record("k", i)
+    evs = fr.events()
+    assert [e[2] for e in evs] == [6, 7, 8, 9]      # last 4, oldest first
+    assert fr.recorded == 10 and fr.dropped == 6
+    fr.clear()
+    assert fr.events() == [] and fr.recorded == 0 and fr.dropped == 0
+    fr.record("k", 1)
+    assert [e[2] for e in fr.events()] == [1]       # no wrap below capacity
+
+
+def test_record_disabled_is_noop():
+    fr = FlightRecorder(capacity=4)
+    fr.enabled = False
+    fr.record("k", 1)
+    assert fr.events() == [] and fr.recorded == 0
+
+
+# ------------------------------------------------------------ dump codec
+def test_dump_bytes_roundtrip():
+    fr = FlightRecorder(capacity=8)
+    fr.record("rec.window", 100, 64)
+    fr.record("io.demand", 7, 2, 1.5)
+    payload = decode_dump(fr.dump_bytes("unit_test"))
+    assert payload["reason"] == "unit_test"
+    assert payload["version"] == 1
+    assert payload["recorded"] == 2 and payload["dropped"] == 0
+    kinds = [e[1] for e in payload["events"]]
+    assert kinds == ["rec.window", "io.demand"]
+    assert isinstance(payload["snapshot"], dict)
+    assert isinstance(payload["baseline"], dict)
+
+
+def test_torn_dump_raises_loudly():
+    fr = FlightRecorder(capacity=8)
+    fr.record("rec.window", 1)
+    blob = fr.dump_bytes("torn")
+    decode_dump(blob)                                # sanity: intact decodes
+    with pytest.raises(CorruptSegmentError):
+        decode_dump(blob[:-5])                       # truncated body
+    with pytest.raises(CorruptSegmentError):
+        decode_dump(blob + b"xx")                    # trailing garbage
+    flipped = bytearray(blob)
+    flipped[-3] ^= 0xFF
+    with pytest.raises(CorruptSegmentError):
+        decode_dump(bytes(flipped))                  # CRC mismatch
+    with pytest.raises(CorruptSegmentError):
+        decode_dump(b"NOPE" + blob[4:])              # wrong magic
+
+
+def test_dump_to_directory_and_backend_sink(tmp_path):
+    fr = FlightRecorder(capacity=8, sink=tmp_path / "bb")
+    fr.record("k", 1)
+    path = fr.dump("reason one")                     # spaces sanitized
+    assert path is not None and Path(path).exists()
+    assert "reason_one" in path and path.endswith(".rbbx")
+    assert decode_dump(Path(path).read_bytes())["reason"] == "reason one"
+    backend = DirectoryBackend(tmp_path / "media")
+    fr.configure(sink=backend)
+    key = fr.dump("via_backend")
+    assert key is not None
+    assert decode_dump(backend.get(key))["reason"] == "via_backend"
+    fr.configure(sink=None)
+    assert fr.dump("no_sink") is None
+
+
+# ------------------------------------------------------- crash forensics
+def test_database_crash_dumps_black_box(tmp_path):
+    rng = random.Random(5)
+    db, rows, base = make_primary(rng)
+    drive(db, rng, 10)
+    obs.FLIGHT.configure(sink=tmp_path / "bb")
+    db.crash()
+    path = obs.FLIGHT.last_dump
+    assert path is not None
+    payload = decode_dump(Path(path).read_bytes())
+    assert payload["reason"] == "db.crash"
+    assert payload["events"][-1][1] == "db.crash"
+
+
+def test_mid_redo_crash_dump_names_redo_window(tmp_path):
+    path = _failed_recovery_dump(tmp_path / "bb")
+    payload = decode_dump(Path(path).read_bytes())
+    assert payload["reason"] == "recover.failed"
+    kinds = [e[1] for e in payload["events"]]
+    assert "rec.analysis" in kinds and "rec.window" in kinds
+    phase = obs.interrupted_phase(payload["events"])
+    assert phase is not None and "redo window" in phase
+    report = obs.render_postmortem(payload)
+    assert "recover.failed" in report and "redo window" in report
+
+
+def test_flight_tail_matches_tracer_record():
+    """The always-on ring and the opt-in tracer see the same run: one
+    rec.window flight event per redo.window tracer span."""
+    image, base = _crash_image(seed=7)
+    obs.reset()
+    obs.enable()
+    db, _ = recover(image, Strategy.LOG1, batched=True, batch_window=64)
+    obs.disable()
+    assert recovered_state(db) == committed_state_oracle(image, base)
+    n_tracer = sum(1 for e in obs.TRACER.events
+                   if e["type"] == "begin" and e["name"] == "redo.window")
+    n_flight = sum(1 for e in obs.FLIGHT.events() if e[1] == "rec.window")
+    assert n_tracer == n_flight > 0
+
+
+def test_mid_shard_apply_crash_dump(tmp_path):
+    rng = random.Random(11)
+    primary, rows, base = make_primary(rng)
+    drive(primary, rng, 30, abort_frac=0.0)
+    rep = ShardedApplier("s1", n_shards=4, epoch_txns=8, page_size=4096,
+                         cache_pages=512, tracker_interval=25,
+                         bg_flush_per_txn=2, seed_tables={"t": rows})
+    shipper = LogShipper(primary)
+    shipper.subscribe("s1")
+    obs.FLIGHT.configure(sink=tmp_path / "bb")
+
+    def boom(txn, ops):
+        raise RuntimeError("injected shard fault")
+
+    rep.db.tc.apply_shipped_batch = boom
+    with pytest.raises(RuntimeError, match="injected shard fault"):
+        rep.apply_batch(shipper.poll("s1"))
+        rep.pump()
+    path = obs.FLIGHT.last_dump
+    assert path is not None
+    payload = decode_dump(Path(path).read_bytes())
+    assert payload["reason"] == "shard.apply_failed"
+    assert payload["events"][-1][1] == "shard.apply"
+    phase = obs.interrupted_phase(payload["events"])
+    assert phase is not None and "apply epoch" in phase
+
+
+def test_postmortem_from_dump_file_alone(tmp_path):
+    """The acceptance bar: a fresh process, given nothing but the dump
+    file, renders a post-mortem naming the interrupted phase."""
+    path = _failed_recovery_dump(tmp_path / "bb")
+    script = ("from repro.obs import load_dump, render_postmortem\n"
+              f"print(render_postmortem(load_dump({path!r})))\n")
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("REPRO_BLACKBOX_DIR", None)
+    proc = subprocess.run([sys.executable, "-c", script], cwd=REPO,
+                          capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert "interrupted during" in proc.stdout
+    assert "redo window" in proc.stdout
+    assert "recover.failed" in proc.stdout
+
+
+# -------------------------------------------------- commit-to-visible
+def test_commit_to_visible_histograms_serial():
+    rng = random.Random(21)
+    primary, rows, base = make_primary(rng)
+    rep = Replica("r1", page_size=4096, cache_pages=512,
+                  tracker_interval=25, bg_flush_per_txn=2,
+                  seed_tables={"t": rows})
+    shipper = LogShipper(primary)
+    shipper.subscribe("r1")
+    drive(primary, rng, 20, abort_frac=0.0)
+    primary.log.flush()
+    batch = shipper.poll("r1")
+    assert batch.stamps, "shipper should carry commit stamps"
+    rep.apply_batch(batch)
+    s = obs.value("repl.commit_to_visible_ms", replica="r1")
+    assert s["count"] >= len(batch.stamps) > 0
+    assert s["min"] >= 0.0 and s["p99"] >= s["p50"] >= 0.0
+    for stage in ("repl.c2v.ship_wait_ms", "repl.c2v.queue_wait_ms",
+                  "repl.c2v.apply_ms"):
+        assert obs.value(stage, replica="r1")["count"] > 0
+
+
+def test_commit_to_visible_histograms_sharded():
+    rng = random.Random(22)
+    primary, rows, base = make_primary(rng)
+    rep = ShardedApplier("s9", n_shards=4, epoch_txns=4, page_size=4096,
+                         cache_pages=512, tracker_interval=25,
+                         bg_flush_per_txn=2, seed_tables={"t": rows})
+    shipper = LogShipper(primary)
+    shipper.subscribe("s9")
+    drive(primary, rng, 30, abort_frac=0.0)
+    primary.log.flush()
+    batch = shipper.poll("s9")
+    assert batch.stamps
+    rep.apply_batch(batch)
+    rep.pump()
+    snap = obs.snapshot("repl.commit_to_visible_ms")
+    sharded = {k: v for k, v in snap.items()
+               if "replica=s9" in k and "shard=" in k}
+    assert sum(v["count"] for v in sharded.values()) >= len(batch.stamps)
+
+
+def test_commit_stamps_bounded_and_survive_crash():
+    from repro.core.log import _MAX_COMMIT_STAMPS, LogManager
+    from repro.core.records import CommitRec
+    log = LogManager()
+    for _ in range(_MAX_COMMIT_STAMPS + 50):
+        log.append(CommitRec(txn=1))
+    log.flush()
+    assert len(log.commit_stamps) == _MAX_COMMIT_STAMPS
+    # FIFO eviction: the newest commits keep their stamps
+    assert log.last_commit_lsn in log.commit_stamps
+    survivor = log.crash()
+    assert survivor.commit_stamps == log.commit_stamps
+
+
+# ------------------------------------------------------------- progress
+def test_recover_progress_observer_and_gauges():
+    image, base = _crash_image(seed=31)
+    out = io.StringIO()
+    po = ProgressObserver("recover", out=out)
+    db, _ = recover(image, Strategy.LOG1, batched=True, batch_window=64,
+                    progress=po)
+    assert recovered_state(db) == committed_state_oracle(image, base)
+    assert po.fraction == 1.0
+    assert obs.value("recovery.progress") == 1.0
+    assert obs.value("recovery.eta_ms") == 0
+    text = out.getvalue()
+    assert "recover" in text and "100.0%" in text
+
+
+def test_cold_restore_progress(tmp_path):
+    rng = random.Random(33)
+    db, rows, base = make_primary(rng)
+    backend = DirectoryBackend(tmp_path / "cold")
+    store = SnapshotStore()
+    arch = Archiver(db, archive=LogArchive(segment_records=64,
+                                           backend=backend),
+                    snapshots=store)
+    drive(db, rng, 20)
+    store.take(db, chunk_keys=64)
+    drive(db, rng, 20)
+    arch.run_once()
+    sealed = arch.archive.archived_upto
+    oracle = committed_state_oracle(db.crash(), base, upto_lsn=sealed)
+    po = ProgressObserver("restore", out=io.StringIO())
+    restored, stats = cold_restore(backend, progress=po)
+    assert dict(restored.scan_all()) == oracle
+    assert po.fraction == 1.0
+    assert obs.value("recovery.progress") == 1.0
+
+
+def test_progress_line_shape():
+    po = ProgressObserver("recover", out=io.StringIO())
+    po.begin(200)
+    po.update(50, records=50)
+    line = po.line()
+    assert "recover" in line and "25.0%" in line
+    po.finish()
+    assert po.fraction == 1.0 and "100.0%" in po.line()
+
+
+# --------------------------------------------------------------- export
+def test_prometheus_text_and_sampler(tmp_path):
+    obs.REGISTRY.reset("xp")
+    obs.counter("xp.hits", backend="mem").inc(3)
+    h = obs.histogram("xp.lat_ms")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    text = obs.prometheus_text()
+    assert "# TYPE xp_hits counter" in text
+    assert 'xp_hits{backend="mem"} 3' in text
+    assert "# TYPE xp_lat_ms summary" in text
+    assert 'xp_lat_ms{quantile="0.5"} 2' in text
+    assert "xp_lat_ms_count 3" in text
+    path = tmp_path / "ts.jsonl"
+    with obs.Sampler(path, period_ms=0.0, prefix="xp") as sampler:
+        assert sampler.tick(note="first")
+        assert sampler.tick(force=True, note="second")
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert [ln["note"] for ln in lines] == ["first", "second"]
+    assert lines[0]["metrics"]["xp.hits{backend=mem}"] == 3
+    assert lines[1]["metrics"]["xp.lat_ms"]["count"] == 3

@@ -49,7 +49,8 @@ def test_registry_counters_gauges_histograms():
     for v in (10, 20, 30):
         h.observe(v)
     s = obs.value("test_reg.window")
-    assert s == {"count": 3, "sum": 60.0, "min": 10, "max": 30, "avg": 20.0}
+    assert s == {"count": 3, "sum": 60.0, "min": 10, "max": 30, "avg": 20.0,
+                 "p50": 20, "p95": 30, "p99": 30}
     # untouched metrics read as 0, and re-requesting returns the same object
     assert obs.value("test_reg.never") == 0
     assert obs.counter("test_reg.hits") is c

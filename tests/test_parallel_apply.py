@@ -300,11 +300,11 @@ def test_sharded_barrier_retries_after_transient_failure(monkeypatch):
     tok = rs.write([("update", "t", b"k00001", b"v1")])
     orig, calls = rep._apply_slice, {"n": 0}
 
-    def flaky(s, ops):
+    def flaky(s, ops, **kw):
         calls["n"] += 1
         if calls["n"] == 1:
             raise RuntimeError("transient apply hiccup")
-        return orig(s, ops)
+        return orig(s, ops, **kw)
 
     monkeypatch.setattr(rep, "_apply_slice", flaky)
     with pytest.raises(RuntimeError, match="transient"):

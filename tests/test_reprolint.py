@@ -263,6 +263,49 @@ def test_tracer_pragma_suppresses(tmp_path):
     assert r.ok and len(suppressed(r, "tracer-guard")) == 1
 
 
+def test_flight_record_kwargs_fires(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/t.py": """\
+        def probe(pid):
+            FLIGHT.record("io.demand", a=pid)
+        """})
+    v = fired(r, "tracer-guard")
+    assert len(v) == 1 and "keywords" in v[0].message
+
+
+def test_flight_record_fstring_fires(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/t.py": """\
+        def probe(pid):
+            _FLIGHT.record(f"io.demand.{pid}", 1)
+        """})
+    v = fired(r, "tracer-guard")
+    assert len(v) == 1 and "f-string" in v[0].message
+
+
+def test_flight_record_dict_arg_fires(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/t.py": """\
+        def probe(pid):
+            FLIGHT.record("io.demand", len({"pid": pid}))
+        """})
+    assert len(fired(r, "tracer-guard")) == 1
+
+
+def test_flight_record_pragma_suppresses(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/t.py": """\
+        def probe(pid):
+            # reprolint: allow(tracer-guard) — cold path, once per dump
+            FLIGHT.record("dump.meta", a=pid)
+        """})
+    assert r.ok and len(suppressed(r, "tracer-guard")) == 1
+
+
+def test_flight_record_compact_positional_is_clean(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/t.py": """\
+        def probe(pid, stall):
+            FLIGHT.record("io.demand", pid, 2, stall)
+        """})
+    assert r.ok
+
+
 # ============================================================ metric-name
 def test_metric_bad_name_fires(tmp_path):
     r = lint(tmp_path, {"src/repro/core/m.py": """\
@@ -303,6 +346,25 @@ def test_metric_kind_conflict_across_files_fires(tmp_path):
             """})
     v = fired(r, "metric-name")
     assert len(v) == 1 and "one name, one kind" in v[0].message
+
+
+def test_metric_well_known_wrong_kind_fires(tmp_path):
+    r = lint(tmp_path, {"src/repro/replication/m.py": """\
+        def init(metrics):
+            metrics.gauge("repl.commit_to_visible_ms")
+        """})
+    v = fired(r, "metric-name")
+    assert len(v) == 1 and "documented as a histogram" in v[0].message
+
+
+def test_metric_well_known_right_kind_is_clean(tmp_path):
+    r = lint(tmp_path, {"src/repro/replication/m.py": """\
+        def init(metrics):
+            metrics.histogram("repl.commit_to_visible_ms", replica="r1")
+            metrics.gauge("recovery.progress")
+            metrics.gauge("recovery.eta_ms")
+        """})
+    assert r.ok
 
 
 def test_metric_pragma_suppresses(tmp_path):

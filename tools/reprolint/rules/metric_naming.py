@@ -12,7 +12,12 @@ dashboard/bench assertion quietly reads the wrong one.  Checked:
   * label keys are ``lower_snake`` identifiers;
   * a name keeps one kind (counter/gauge/histogram) across every call
     site in the tree — cross-file, because the registry only sees one
-    process at a time but the tree is forever.
+    process at a time but the tree is forever;
+  * contract names with a documented kind (the commit-to-visible
+    histogram, the recovery progress/ETA gauges) register with exactly
+    that kind — these are the metrics external dashboards key on, so a
+    same-kind-everywhere drift (e.g. everyone agreeing on a gauge) would
+    pass the cross-file check while silently breaking the contract.
 """
 from __future__ import annotations
 
@@ -31,6 +36,18 @@ REGISTRY_NAMES = {"metrics", "_metrics", "obs_metrics", "REGISTRY",
                   "registry", "reg"}
 #: the registry implementation itself defines the accessors — skip it
 IMPL_SUFFIX = "obs/metrics.py"
+#: contract metrics: documented names that external consumers (dashboards,
+#: bench assertions, the post-mortem renderer) key on with a fixed kind.
+#: The cross-file check alone can't catch everyone drifting to the same
+#: wrong kind, so these are pinned here.
+WELL_KNOWN_KINDS = {
+    "repl.commit_to_visible_ms": "histogram",
+    "repl.c2v.ship_wait_ms": "histogram",
+    "repl.c2v.queue_wait_ms": "histogram",
+    "repl.c2v.apply_ms": "histogram",
+    "recovery.progress": "gauge",
+    "recovery.eta_ms": "gauge",
+}
 
 
 def _metric_calls(ctx: FileCtx) -> Iterable[Tuple[str, str, ast.Call]]:
@@ -52,14 +69,22 @@ def _metric_calls(ctx: FileCtx) -> Iterable[Tuple[str, str, ast.Call]]:
 class MetricNamingRule(Rule):
     name = "metric-name"
     invariant = ("metric names are subsystem.noun(.noun)* with "
-                 "lower_snake labels, and each name keeps one kind "
-                 "(counter/gauge/histogram) across all call sites")
+                 "lower_snake labels, each name keeps one kind "
+                 "(counter/gauge/histogram) across all call sites, and "
+                 "contract names register with their documented kind")
 
     def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
         if ctx.tree is None or ctx.path.endswith(IMPL_SUFFIX):
             return []
         out: List[Violation] = []
         for kind, name, node in _metric_calls(ctx):
+            pinned = WELL_KNOWN_KINDS.get(name)
+            if pinned is not None and kind != pinned:
+                out.append(Violation(
+                    self.name, ctx.path, node.lineno,
+                    f"contract metric {name!r} registered as {kind} but is "
+                    f"documented as a {pinned} — external consumers key on "
+                    "that kind"))
             if not NAME_RE.match(name):
                 out.append(Violation(
                     self.name, ctx.path, node.lineno,

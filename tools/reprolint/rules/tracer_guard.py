@@ -12,6 +12,14 @@ This rule pins the idiom: any ``<tracer>.event(...)`` call that passes
 keyword arguments must sit under an ``if ... .enabled`` guard in the
 same function.  (Spans are exempt: ``TRACER.span`` is per-phase, not
 per-record, and returns a shared null span when disabled.)
+
+The flight recorder (PR 8) is held to a stricter form of the same
+budget: it has no disabled state to guard on, so every
+``<flight>.record(...)`` call must be the compact positional-tuple
+form — a literal kind string plus plain numbers.  Keyword arguments,
+f-strings, dict/set/list displays, or comprehensions at the call site
+would allocate on the always-on path and erode the CI-asserted ≤5%
+flight-recorder bound.
 """
 from __future__ import annotations
 
@@ -23,13 +31,18 @@ from ..engine import FileCtx, Rule, Violation
 
 SRC_PREFIX = "src/repro/"
 TRACER_NAMES = {"TRACER", "_TRACER", "tracer", "_tracer"}
+FLIGHT_NAMES = {"FLIGHT", "_FLIGHT", "flight", "_flight"}
+#: argument constructs that allocate/format on the always-on hot path
+_FLIGHT_BANNED = (ast.JoinedStr, ast.Dict, ast.DictComp, ast.List,
+                  ast.ListComp, ast.Set, ast.SetComp, ast.GeneratorExp)
 
 
 class TracerGuardRule(Rule):
     name = "tracer-guard"
     invariant = ("tracer .event(kwargs) calls sit under `if "
                  "TRACER.enabled` so disabled probes never build the "
-                 "kwargs dict (the PR-6 probe-overhead bound)")
+                 "kwargs dict, and always-on FLIGHT.record calls stay "
+                 "compact positional tuples (no f-strings/dicts/kwargs)")
 
     def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
         if ctx.tree is None or not ctx.path.startswith(SRC_PREFIX):
@@ -37,16 +50,30 @@ class TracerGuardRule(Rule):
         out: List[Violation] = []
         for node in ast.walk(ctx.tree):
             if not (isinstance(node, ast.Call)
-                    and isinstance(node.func, ast.Attribute)
-                    and node.func.attr == "event"
-                    and receiver_tail(node.func.value) in TRACER_NAMES
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            tail = receiver_tail(node.func.value)
+            if (node.func.attr == "event" and tail in TRACER_NAMES
                     and node.keywords):
-                continue
-            if under_enabled_guard(node, ctx.parents):
-                continue
-            out.append(Violation(
-                self.name, ctx.path, node.lineno,
-                "tracer event with kwargs outside an `if "
-                "TRACER.enabled` guard — the kwargs dict is built even "
-                "when tracing is off"))
+                if under_enabled_guard(node, ctx.parents):
+                    continue
+                out.append(Violation(
+                    self.name, ctx.path, node.lineno,
+                    "tracer event with kwargs outside an `if "
+                    "TRACER.enabled` guard — the kwargs dict is built even "
+                    "when tracing is off"))
+            elif node.func.attr == "record" and tail in FLIGHT_NAMES:
+                if node.keywords:
+                    out.append(Violation(
+                        self.name, ctx.path, node.lineno,
+                        "flight-recorder record() call passes keywords — "
+                        "the always-on hot path takes the compact "
+                        "positional form record(kind, a, b, c)"))
+                elif any(isinstance(sub, _FLIGHT_BANNED)
+                         for arg in node.args for sub in ast.walk(arg)):
+                    out.append(Violation(
+                        self.name, ctx.path, node.lineno,
+                        "flight-recorder record() argument builds an "
+                        "f-string/dict/comprehension — the always-on hot "
+                        "path takes plain numbers and a literal kind"))
         return out
