@@ -90,8 +90,8 @@ def main() -> None:
     fast = "--full" not in sys.argv
     from . import (appendix_d_variants, archive_bench, fig2_cache_sweep,
                    fig3_ckpt_interval, kernel_bench, media_bench,
-                   parallel_apply_bench, recovery_bench, replication_bench,
-                   roofline_table, trainstore_bench)
+                   pagepack_bench, parallel_apply_bench, recovery_bench,
+                   replication_bench, roofline_table, trainstore_bench)
     from repro.obs.export import Sampler, prometheus_text
     ART.mkdir(parents=True, exist_ok=True)
     failures: list[str] = []
@@ -102,9 +102,9 @@ def main() -> None:
     sampler = Sampler(ART / "metrics_timeseries.jsonl", period_ms=0.0)
     print("name,us_per_call,derived")
     for mod in (fig2_cache_sweep, fig3_ckpt_interval, appendix_d_variants,
-                recovery_bench, replication_bench, parallel_apply_bench,
-                archive_bench, media_bench, trainstore_bench, kernel_bench,
-                roofline_table):
+                recovery_bench, pagepack_bench, replication_bench,
+                parallel_apply_bench, archive_bench, media_bench,
+                trainstore_bench, kernel_bench, roofline_table):
         try:
             out = mod.run(fast=fast)
         except Exception:

@@ -67,15 +67,16 @@ class LeafCursor:
         hi: Optional[bytes] = None
         for _ in range(tree.height - 1):
             node = pool.get(pid)
-            idx = bisect.bisect_left(node.keys, key)
-            # child idx owns (keys[idx-1], keys[idx]]; each level's bounds
+            idx = node.child_index(key)
+            # child idx owns (sep[idx-1], sep[idx]]; each level's bounds
             # are contained in the parent's, so present separators are
-            # always the tighter ones
+            # always the tighter ones.  Separator reads bisect the packed
+            # directory in place — no key/child list is materialized.
             if idx > 0:
-                lo = node.keys[idx - 1]
-            if idx < len(node.keys):
-                hi = node.keys[idx]
-            pid = node.children[idx]
+                lo = node.sep_at(idx - 1)
+            if idx < node.sep_count():
+                hi = node.sep_at(idx)
+            pid = node.child_at(idx)
         self.pid, self.lo, self.hi = pid, lo, hi
         self.traversals += 1
         return pid
@@ -120,8 +121,7 @@ class BTree:
         for _ in range(self.height - 1):
             node = self.pool.get(pid)
             assert node is not None and not node.is_leaf, f"malformed index @pid={pid}"
-            idx = bisect.bisect_left(node.keys, key)
-            pid = node.children[idx]
+            pid = node.child_at(node.child_index(key))
         return pid
 
     def _path_to_leaf(self, key: bytes) -> list[PID]:
@@ -129,8 +129,7 @@ class BTree:
         pid = self.root_pid
         for _ in range(self.height - 1):
             node = self.pool.get(pid)
-            idx = bisect.bisect_left(node.keys, key)
-            pid = node.children[idx]
+            pid = node.child_at(node.child_index(key))
             path.append(pid)
         return path
 
@@ -148,8 +147,8 @@ class BTree:
         "all record ops with LSN <= image.plsn applied"."""
         path = self._path_to_leaf(key)
         leaf = self.pool.get(path[-1])
-        from .pages import _HDR, SLOT_OVERHEAD
-        if _HDR.size + len(key) + len(value) + SLOT_OVERHEAD > self.page_size:
+        from .pages import HEADER_SIZE, SLOT_OVERHEAD
+        if HEADER_SIZE + len(key) + len(value) + SLOT_OVERHEAD > self.page_size:
             raise ValueError(
                 f"record ({len(key)}+{len(value)}B) exceeds page size "
                 f"{self.page_size}; use a larger page_size or smaller chunks")
@@ -185,8 +184,8 @@ class BTree:
             if node.is_leaf:
                 out.extend(node.sorted_items())
             else:
-                for c in node.children:
-                    rec(c)
+                for i in range(node.child_count()):
+                    rec(node.child_at(i))
         if self.root_pid != NULL_PID:
             rec(self.root_pid)
         return out
@@ -214,11 +213,11 @@ class BTree:
                         if limit is not None and len(out) >= limit:
                             return True
                 return False
-            # child i owns (keys[i-1], keys[i]] — visit those intersecting
-            i0 = 0 if lo is None else bisect.bisect_left(node.keys, lo)
-            i1 = len(node.children) - 1 if hi is None else \
-                min(bisect.bisect_left(node.keys, hi), len(node.children) - 1)
-            return any(walk(node.children[i]) for i in range(i0, i1 + 1))
+            # child i owns (sep[i-1], sep[i]] — visit those intersecting
+            last = node.child_count() - 1
+            i0 = 0 if lo is None else node.child_index(lo)
+            i1 = last if hi is None else min(node.child_index(hi), last)
+            return any(walk(node.child_at(i)) for i in range(i0, i1 + 1))
 
         walk(self.root_pid)
         return out
@@ -242,8 +241,11 @@ class BTree:
         rec = SMORec()
         lsn = self.log.append(rec)
 
+        # The leaf stays pinned across the whole SMO: installing the new
+        # pages below can trigger eviction, and a bounded pool must never
+        # pick a frame that is mid-mutation.
         leaf_pid = path[-1]
-        leaf = self.pool.get(leaf_pid)
+        leaf = self.pool.get(leaf_pid, pin=True)
         new_leaf = empty_leaf(self.pool.store.allocate_pid())
         items = leaf.sorted_items()
         # Separator choice ("keys <= sep stay left"; sep need not be a stored
@@ -270,6 +272,7 @@ class BTree:
         touched[new_leaf.pid] = new_leaf
         self.pool.mark_dirty(leaf.pid, lsn)
         self.pool.mark_dirty(new_leaf.pid, lsn)
+        self.pool.unpin(leaf_pid)
 
         # push separator up the path
         up_key: Optional[bytes] = sep
@@ -280,6 +283,7 @@ class BTree:
                 root = empty_internal(self.pool.store.allocate_pid())
                 root.keys = [up_key]
                 root.children = [path[0], up_child]
+                root.invalidate_sorted()
                 root.slsn = lsn
                 self.root_pid = root.pid
                 self.height += 1
@@ -288,26 +292,31 @@ class BTree:
                 touched[root.pid] = root
                 break
             node_pid = path[level]
-            node = self.pool.get(node_pid)
-            idx = bisect.bisect_left(node.keys, up_key)
+            node = self.pool.get(node_pid, pin=True)
+            idx = node.child_index(up_key)
             node.keys.insert(idx, up_key)
             node.children.insert(idx + 1, up_child)
+            node.invalidate_sorted()
             node.slsn = lsn
             touched[node_pid] = node
             self.pool.mark_dirty(node_pid, lsn)
             if node.serialized_size() <= self.page_size:
                 up_key = None
+                self.pool.unpin(node_pid)
             else:
                 new_node = empty_internal(self.pool.store.allocate_pid())
                 mid = len(node.keys) // 2
                 up_key = node.keys[mid]
                 new_node.keys = node.keys[mid + 1:]
                 new_node.children = node.children[mid + 1:]
+                new_node.invalidate_sorted()
                 new_node.slsn = lsn
                 node.keys = node.keys[:mid]
                 node.children = node.children[:mid + 1]
+                node.invalidate_sorted()
                 self.pool.install_new(new_node, lsn)
                 self.pool.mark_dirty(new_node.pid, lsn)
+                self.pool.unpin(node_pid)
                 touched[new_node.pid] = new_node
                 up_child = new_node.pid
                 level -= 1
@@ -349,8 +358,8 @@ class BTree:
             node = self.pool.get(pid)
             if node is None or node.is_leaf:
                 return
-            for c in node.children:
-                rec(c, depth + 1)
+            for i in range(node.child_count()):
+                rec(node.child_at(i), depth + 1)
         if self.root_pid != NULL_PID and self.height > 1:
             rec(self.root_pid, 1)
         return out
@@ -363,8 +372,8 @@ class BTree:
             if node.is_leaf:
                 out.append(pid)
             else:
-                for c in node.children:
-                    rec(c)
+                for i in range(node.child_count()):
+                    rec(node.child_at(i))
         if self.root_pid != NULL_PID:
             rec(self.root_pid)
         return out

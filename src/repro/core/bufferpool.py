@@ -1,18 +1,35 @@
-"""Database cache (buffer pool) with dirty tracking, WAL enforcement, LRU
-eviction, and the penultimate-checkpoint "generation bit" scheme (Section 3.2).
+"""Bounded database cache (buffer pool): CLOCK eviction, frame pins, dirty
+tracking, WAL enforcement, and the penultimate-checkpoint "generation bit"
+scheme (Section 3.2).
+
+The pool is the only path between decoded pages and the ``PageStore``
+(whose bytes live as ``page/<pid>`` blobs on a ``MediaBackend``), so
+bounded residency is real: at most ``capacity_pages`` frames are decoded
+at once, pinned frames (a ``LeafCursor`` span mid-mutation, a split in
+flight) are never victims, clean victims drop for free, and dirty victims
+flush through the WAL clamp — the log is forced up to the buffer's
+``wal_lsn`` before the page may reach stable storage.
 
 Listeners let the DC's Delta accumulator and the SQL-Server BW tracker observe
 page dirtying / flush completions without the pool knowing about logging.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
+from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
 from .log import LogManager
 from .pages import Page
 from .records import LSN, NULL_LSN, PID
 from .storage import IOSim, PageStore
+
+_C_HITS = _metrics.counter("bufferpool.hits")
+_C_MISSES = _metrics.counter("bufferpool.misses")
+_C_EVICTIONS = _metrics.counter("bufferpool.evictions")
+_C_FLUSHES = _metrics.counter("bufferpool.flushes")
+_G_PINNED = _metrics.gauge("bufferpool.pinned")
 
 
 @dataclass(slots=True)
@@ -22,33 +39,44 @@ class Buffer:
     rlsn: LSN = NULL_LSN          # LSN of op that first dirtied this buffer
     wal_lsn: LSN = NULL_LSN       # max LSN applied (incl. SMOs) — WAL horizon
     dirty_gen: int = -1           # checkpoint generation when first dirtied
-    tick: int = 0                 # LRU clock
+    pins: int = 0                 # pinned frames are never eviction victims
+    ref: bool = True              # CLOCK reference bit
+    bg_flush_tick: int = -2       # flush_some round that last wrote this page
 
 
 class BufferPool:
-    def __init__(self, store: PageStore, log: LogManager, capacity_pages: int = 1 << 30):
+    def __init__(self, store: PageStore, log: LogManager,
+                 capacity_pages: int = 1 << 30):
         self.store = store
         self.log = log
         self.capacity = capacity_pages
         self.buffers: Dict[PID, Buffer] = {}
-        self._tick = 0
+        self._clock: list[PID] = []        # CLOCK ring (lazy compaction)
+        self._hand = 0
+        self._flush_tick = 0               # flush_some round counter
         self.gen = 0                               # checkpoint generation bit
         # listeners
         self.on_update: list[Callable[[PID, LSN], None]] = []   # every page update
         self.on_flush: list[Callable[[PID], None]] = []          # flush IO complete
         # stats
-        self.fetches = 0
+        self.hits = 0
+        self.fetches = 0              # misses (store reads), historical name
         self.evictions = 0
         self.flushes = 0
+        self.pinned_count = 0
+        self.peak_resident = 0        # max frames ever resident at once
         # recovery-time IO accounting hook
         self.iosim: Optional[IOSim] = None
 
     # ------------------------------------------------------------------ fetch
-    def get(self, pid: PID) -> Optional[Page]:
-        self._tick += 1
+    def get(self, pid: PID, pin: bool = False) -> Optional[Page]:
         buf = self.buffers.get(pid)
         if buf is not None:
-            buf.tick = self._tick
+            buf.ref = True
+            self.hits += 1
+            _C_HITS.inc()
+            if pin:
+                self._pin(buf)
             return buf.page
         page = self.store.read_page(pid)
         if page is None:
@@ -56,7 +84,10 @@ class BufferPool:
         if self.iosim is not None:
             self.iosim.demand_read(pid)
         self.fetches += 1
-        self._install(page, dirty=False)
+        _C_MISSES.inc()
+        buf = self._install(page, dirty=False)
+        if pin:
+            self._pin(buf)
         return page
 
     def contains(self, pid: PID) -> bool:
@@ -66,13 +97,33 @@ class BufferPool:
         """Install a freshly allocated page (born dirty)."""
         self._install(page, dirty=True, rlsn=lsn)
 
-    def _install(self, page: Page, dirty: bool, rlsn: LSN = NULL_LSN) -> None:
+    def _install(self, page: Page, dirty: bool,
+                 rlsn: LSN = NULL_LSN) -> Buffer:
         self._evict_for_space()
-        self._tick += 1
-        self.buffers[page.pid] = Buffer(page=page, dirty=dirty, rlsn=rlsn,
-                                        wal_lsn=rlsn,
-                                        dirty_gen=self.gen if dirty else -1,
-                                        tick=self._tick)
+        buf = Buffer(page=page, dirty=dirty, rlsn=rlsn, wal_lsn=rlsn,
+                     dirty_gen=self.gen if dirty else -1)
+        if page.pid not in self.buffers:
+            self._clock.append(page.pid)
+        self.buffers[page.pid] = buf
+        if len(self.buffers) > self.peak_resident:
+            self.peak_resident = len(self.buffers)
+        return buf
+
+    # ------------------------------------------------------------------- pins
+    def _pin(self, buf: Buffer) -> None:
+        buf.pins += 1
+        self.pinned_count += 1
+        _G_PINNED.inc()
+
+    def pin(self, pid: PID) -> None:
+        self._pin(self.buffers[pid])
+
+    def unpin(self, pid: PID) -> None:
+        buf = self.buffers[pid]
+        assert buf.pins > 0, f"unpin of unpinned frame {pid}"
+        buf.pins -= 1
+        self.pinned_count -= 1
+        _G_PINNED.inc(-1)
 
     # ------------------------------------------------------------------ dirty
     def mark_dirty(self, pid: PID, lsn: LSN) -> None:
@@ -102,18 +153,33 @@ class BufferPool:
         buf.rlsn = NULL_LSN
         buf.dirty_gen = -1
         self.flushes += 1
+        _C_FLUSHES.inc()
+        _FLIGHT.record("pool.flush", pid, buf.wal_lsn)
         for cb in self.on_flush:
             cb(pid)
         return True
 
     def flush_some(self, max_pages: int) -> int:
         """Background flusher: write the oldest-dirtied pages (rate-limited).
-        This is the training-framework 'fuzzy incremental checkpoint' driver."""
-        dirty = [(b.rlsn, pid) for pid, b in self.buffers.items() if b.dirty]
+        This is the training-framework 'fuzzy incremental checkpoint' driver.
+
+        Hot-page coalescing: a page this flusher wrote last round and that
+        is dirty again already is hot — writing it every round is wasted
+        serialization (it will be dirty again before any crash cares), so
+        it sits out one round and flushes every other.  Cold pages are
+        unaffected: with a large dirty set the rate limit never re-picks
+        the same page on consecutive rounds anyway.  Correctness is
+        untouched — any flush schedule is WAL-legal, a skipped page just
+        stays in the DPT one round longer."""
+        self._flush_tick += 1
+        tick = self._flush_tick
+        dirty = [(b.rlsn, pid) for pid, b in self.buffers.items()
+                 if b.dirty and b.bg_flush_tick < tick - 1]
         dirty.sort()
         n = 0
         for _, pid in dirty[:max_pages]:
             if self.flush_page(pid):
+                self.buffers[pid].bg_flush_tick = tick
                 n += 1
         return n
 
@@ -134,22 +200,68 @@ class BufferPool:
     # --------------------------------------------------------------- eviction
     def _evict_for_space(self) -> None:
         while len(self.buffers) >= self.capacity:
-            # prefer clean LRU victim; else flush the LRU dirty page
-            clean = [(b.tick, pid) for pid, b in self.buffers.items() if not b.dirty]
-            if clean:
-                _, victim = min(clean)
-            else:
-                _, victim = min((b.tick, pid) for pid, b in self.buffers.items())
-                self.flush_page(victim)
-            del self.buffers[victim]
-            self.evictions += 1
+            victim = self._clock_sweep()
+            if victim is None:
+                # every frame is pinned: overflow softly rather than
+                # deadlock — pins are short (one mutation window)
+                break
+            self._evict(victim)
+
+    def _clock_sweep(self) -> Optional[PID]:
+        """Advance the CLOCK hand to a victim: referenced frames get a
+        second chance, pinned frames are skipped, clean frames are
+        preferred (a dirty victim costs a flush IO); the first unreferenced
+        dirty frame is remembered as the fallback."""
+        clock = self._clock
+        fallback: Optional[PID] = None
+        steps = 0
+        limit = 3 * len(clock) + 1
+        while clock and steps < limit:
+            steps += 1
+            if self._hand >= len(clock):
+                self._hand = 0
+            pid = clock[self._hand]
+            buf = self.buffers.get(pid)
+            if buf is None:                       # lazily compact stale slot
+                clock[self._hand] = clock[-1]
+                clock.pop()
+                continue
+            if buf.pins:
+                self._hand += 1
+                continue
+            if buf.ref:
+                buf.ref = False
+                self._hand += 1
+                continue
+            if not buf.dirty:
+                clock[self._hand] = clock[-1]
+                clock.pop()
+                return pid
+            if fallback is None:
+                fallback = pid
+            self._hand += 1
+        if fallback is not None:
+            self._clock.remove(fallback)          # rare: all-victims-dirty
+            return fallback
+        return None
+
+    def _evict(self, pid: PID) -> None:
+        buf = self.buffers[pid]
+        was_dirty = buf.dirty
+        if was_dirty:
+            self.flush_page(pid)                  # WAL-clamped inside
+        del self.buffers[pid]
+        self.evictions += 1
+        _C_EVICTIONS.inc()
+        _FLIGHT.record("pool.evict", pid, 1 if was_dirty else 0)
 
     # ------------------------------------------------------------------ misc
     def dirty_pids(self) -> list[PID]:
         return [pid for pid, b in self.buffers.items() if b.dirty]
 
     def reset_stats(self) -> None:
-        self.fetches = self.evictions = self.flushes = 0
+        self.hits = self.fetches = self.evictions = self.flushes = 0
+        self.peak_resident = len(self.buffers)
 
     def __len__(self) -> int:
         return len(self.buffers)

@@ -141,6 +141,12 @@ class DataComponent:
         sorted records bottom-up straight into stable storage, no logging.
         Must be followed by a checkpoint before the workload starts."""
         from .pages import SLOT_OVERHEAD, empty_internal, empty_leaf
+        # The build bypasses the pool and writes pages straight to stable
+        # storage; WAL still demands that no page outrun the log, so force
+        # the log to its end before the first write_page below.
+        self.log.flush()
+        assert self.log.stable_lsn >= self.log.end_lsn, \
+            "bulk_build requires a fully stable log (WAL)"
         items = sorted(items)
         fill = int(self.page_size * 0.7)
 
@@ -152,12 +158,14 @@ class DataComponent:
             rec_sz = len(k) + len(v) + SLOT_OVERHEAD
             if size + rec_sz > fill and cur.records:
                 leaves.append((max(cur.records), cur.pid))
+                cur.invalidate_sorted()
                 self.store.write_page(cur)
                 cur = empty_leaf(self.store.allocate_pid())
                 size = 0
             cur.records[k] = v
             size += rec_sz
         leaves.append((max(cur.records) if cur.records else b"", cur.pid))
+        cur.invalidate_sorted()
         self.store.write_page(cur)
 
         # ---- internal levels: children[i] holds keys <= keys[i]
@@ -176,6 +184,7 @@ class DataComponent:
                 if node.children:
                     node.keys.append(prev_mx)
                 node.children.append(pid)
+                node.invalidate_sorted()
                 prev_mx = mx
             nxt.append((prev_mx, node.pid))
             self.store.write_page(node)
@@ -418,7 +427,10 @@ class DataComponent:
                     else:
                         tails += 1
                 if page is None:
-                    page = pool.get(pid)
+                    # pinned for the span: a bounded pool may otherwise
+                    # evict the frame mid-mutation (the split path below
+                    # fetches index pages through the same pool)
+                    page = pool.get(pid, pin=True)
                     if not base_valid:
                         base = page.plsn  # pre-window pLSN of this leaf
                         base_valid = True
@@ -457,6 +469,8 @@ class DataComponent:
                 executed += 1
                 if delta is not None and lsn > delta.applied_lsn:
                     delta.applied_lsn = lsn
+            if page is not None:
+                pool.unpin(pid)
             consumed = (idx if split else j) - i
             if consumed > 1:
                 cur.reuses += consumed - 1    # ops that paid no traversal

@@ -73,6 +73,10 @@ class RecoveryStats:
     windows: int = 0                 # redo windows flushed
     cursor_traversals: int = 0       # batched mode: root-to-leaf walks
     cursor_reuses: int = 0           # batched mode: leaf-resident hits
+    pool_capacity: int = 0           # buffer-pool frame budget for the run
+    pool_peak_resident: int = 0      # max frames resident at once (<= cap)
+    pool_evictions: int = 0          # frames evicted to stay under budget
+    pool_flushes: int = 0            # dirty-page writes (incl. evictions)
 
     def publish(self, registry=None) -> None:
         """Mirror every numeric field (nested redo/io included) into the
@@ -377,6 +381,10 @@ def _recover(image: CrashImage, strategy: Strategy, rspan, *,
     db.tracker_interval = tracker_interval
     db.bg_flush_per_txn = bg_flush_per_txn
     db._updates_since_tracker = 0
+    stats.pool_capacity = dc.pool.capacity
+    stats.pool_peak_resident = dc.pool.peak_resident
+    stats.pool_evictions = dc.pool.evictions
+    stats.pool_flushes = dc.pool.flushes
     stats.total_wall_ms = (time.perf_counter() - t0) * 1e3
     rspan.set(log_records=stats.log_records,
               total_wall_ms=round(stats.total_wall_ms, 3))

@@ -19,8 +19,12 @@ issue order on ``width`` independent channels.
 from __future__ import annotations
 
 import heapq
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Optional
+from typing import TYPE_CHECKING, Dict, Iterable, Optional
+
+if TYPE_CHECKING:  # core sits below media in the import layering
+    from ..media.backend import MediaBackend
 
 from ..obs import metrics as _metrics
 from ..obs.flightrec import FLIGHT as _FLIGHT
@@ -208,30 +212,54 @@ _C_DECODE_HITS = _metrics.counter("pagestore.decode_hits")
 _C_DECODE_MISSES = _metrics.counter("pagestore.decode_misses")
 
 
+def _blob_name(pid: PID) -> str:
+    return f"page/{pid:012d}"
+
+
 class PageStore:
-    """Crash-stable storage: serialized pages + a tiny 'master' blob.
+    """Crash-stable storage: serialized pages + a tiny 'master' blob, all
+    living as named blobs (``page/<pid>``) on a ``MediaBackend`` — a dict
+    in the default ``MemoryBackend`` case, files with atomic publication
+    under a ``DirectoryBackend``.  The page tier therefore sits behind the
+    same storage boundary as segments and snapshots, and a page set larger
+    than memory is the backend's problem, not the pool's.
 
     ``clone()`` snapshots the stable state (used to build crash images that
     several recovery strategies each recover independently)."""
 
-    # decoded pages cached at most this many before the cache resets —
+    # decoded pages cached at most this many before LRU eviction —
     # replaced page versions would otherwise accumulate forever
     DECODE_CACHE_MAX = 1 << 16
 
-    def __init__(self):
-        self._pages: Dict[PID, bytes] = {}
+    def __init__(self, backend: Optional["MediaBackend"] = None) -> None:
+        if backend is None:
+            from ..media.backend import MemoryBackend
+            backend = MemoryBackend()
+        self.backend = backend
+        # pid index mirroring the backend's page blobs: membership tests
+        # and ``pids()`` stay O(1)/O(n) with zero backend round-trips, and
+        # a missing page is an answer (None), never a swallowed
+        # BackendMissingError
+        self._pids: set[PID] = {int(name[5:])
+                                for name in backend.list("page/")}
         # decoded-page cache, keyed by the raw serialized bytes:
-        # deserializing a page is ~25x the cost of copying one, and
+        # deserializing a page is many times the cost of copying one, and
         # recovery / replicas / restores re-read the same images over and
         # over.  Content addressing makes sharing safe — a clone holds the
         # *same* bytes objects until it diverges, so crash images share
         # hits, while any write produces new bytes and thus a new key;
         # entries are private snapshots (reads hand out copies), so crash
-        # semantics still flow through the serialized form only.
-        self._decoded: Dict[bytes, Page] = {}
+        # semantics still flow through the serialized form only.  Ordered
+        # for LRU eviction: overflow drops the coldest entry, never the
+        # whole cache (a wholesale clear caused cold-miss bursts
+        # mid-recovery).
+        self._decoded: OrderedDict[bytes, Page] = OrderedDict()
         self.decode_hits = 0            # this instance's cache outcomes —
         self.decode_misses = 0          # the cache *object* may be shared
-        self._next_pid: PID = 1
+        # eager_decode materializes the dict form at decode time — the
+        # pre-packed behaviour, kept as the measured benchmark baseline
+        self.eager_decode = False
+        self._next_pid: PID = max(self._pids, default=0) + 1
         self.master: dict = {}          # e.g. {'rssp_rec_lsn': ..., 'ckpt_lsn': ...}
 
     # allocation happens in the DC (volatile counter persisted via RSSP/SMO recs)
@@ -250,43 +278,60 @@ class PageStore:
     def write_page(self, page: Page) -> None:
         # the caller's object stays live and mutable — never cache it; the
         # new bytes simply miss the content-keyed cache until re-read
-        self._pages[page.pid] = page.to_bytes()
-
-    def write_raw(self, pid: PID, raw: bytes) -> None:
-        self._pages[pid] = raw
+        self.backend.put(_blob_name(page.pid), page.to_bytes())
+        self._pids.add(page.pid)
 
     def read_page(self, pid: PID) -> Optional[Page]:
-        raw = self._pages.get(pid)
-        if raw is None:
+        if pid not in self._pids:
             return None
+        raw = self.backend.get(_blob_name(pid))
         cached = self._decoded.get(raw)
         if cached is None:
             if len(self._decoded) >= self.DECODE_CACHE_MAX:
-                self._decoded.clear()
-            cached = self._decoded[raw] = Page.from_bytes(raw)  # CRC-checked
+                self._decoded.popitem(last=False)   # LRU, not a full clear
+            cached = Page.from_bytes(raw)           # CRC-checked
+            if self.eager_decode:
+                cached.materialize()
+            self._decoded[raw] = cached
             self.decode_misses += 1
             _C_DECODE_MISSES.inc()
         else:
+            self._decoded.move_to_end(raw)
             self.decode_hits += 1
             _C_DECODE_HITS.inc()
+            if cached._records is None:
+                # second touch: the entry is hot, so promote it to dual
+                # form — one parse here and every later copy() is a
+                # C-speed container copy (still sharing the raw bytes, so
+                # clean copies keep flushing in O(1)).  First touches stay
+                # zero-decode: a page read once never pays a parse.
+                cached.prewarm()
         return cached.copy()
 
     def has_page(self, pid: PID) -> bool:
-        return pid in self._pages
+        return pid in self._pids
 
     def pids(self):
-        return self._pages.keys()
+        return self._pids
 
     def clone(self) -> "PageStore":
-        s = PageStore()
-        s._pages = dict(self._pages)
+        from ..media.backend import MemoryBackend
+        b = self.backend
+        if isinstance(b, MemoryBackend):
+            backend = b.snapshot()      # shares the immutable blob bytes
+        else:
+            backend = MemoryBackend()   # materialize a point-in-time copy
+            for name in b.list("page/"):
+                backend.put(name, b.get(name))
+        s = PageStore(backend)
         # content-keyed, so sharing the cache *object* is safe across
         # divergence — recovering N strategies from one crash image decodes
         # each page once, not N times
         s._decoded = self._decoded
+        s.eager_decode = self.eager_decode
         s._next_pid = self._next_pid
         s.master = dict(self.master)
         return s
 
     def __len__(self) -> int:
-        return len(self._pages)
+        return len(self._pids)

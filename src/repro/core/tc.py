@@ -271,8 +271,13 @@ class Database:
 
     def __init__(self, cache_pages: int = 4096, delta_mode: str = "paper",
                  side_by_side: bool = True, tracker_interval: int = 100,
-                 bg_flush_per_txn: int = 0, page_size: int = None):
-        self.store = PageStore()
+                 bg_flush_per_txn: int = 0, page_size: int = None,
+                 page_backend=None):
+        if page_backend is not None:
+            from ..media.backend import open_backend
+            self.store = PageStore(open_backend(page_backend))
+        else:
+            self.store = PageStore()
         self.log = LogManager()
         self.dc = DataComponent(self.store, self.log, cache_pages,
                                 delta_mode=delta_mode, side_by_side=side_by_side,

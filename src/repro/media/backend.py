@@ -106,6 +106,15 @@ class MemoryBackend(MediaBackend):
     def list(self, prefix: str = "") -> list[str]:
         return sorted(n for n in self._blobs if n.startswith(prefix))
 
+    def snapshot(self) -> "MemoryBackend":
+        """Point-in-time copy for crash images: blob bytes are immutable
+        by convention, so sharing the byte objects is safe; only the name
+        map is copied.  Bypasses the per-blob probes on purpose — a
+        snapshot is one logical operation, not thousands of puts."""
+        out = MemoryBackend()
+        out._blobs = dict(self._blobs)
+        return out
+
 
 class DirectoryBackend(MediaBackend):
     """Blobs as files under ``root``.

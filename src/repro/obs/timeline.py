@@ -110,6 +110,7 @@ def _cache_footer(snap: dict) -> List[str]:
          "pagestore.decode_misses", "misses"),
         ("archive segment LRU", "archive.cache_hits",
          "archive.segment_decodes", "decodes"),
+        ("buffer pool", "bufferpool.hits", "bufferpool.misses", "misses"),
     ]
     for label, hit_key, miss_key, miss_word in pairs:
         hits = snap.get(hit_key, 0)
@@ -119,6 +120,12 @@ def _cache_footer(snap: dict) -> List[str]:
             continue
         lines.append(f"cache: {label}  {hits} hits / {misses} {miss_word}"
                      f"  ({100.0 * hits / total:.1f}% hit)")
+    evictions = snap.get("bufferpool.evictions", 0)
+    flushes = snap.get("bufferpool.flushes", 0)
+    pinned = snap.get("bufferpool.pinned", 0)
+    if evictions or flushes:
+        lines.append(f"pool: {evictions} evictions / {flushes} flushes"
+                     f"  ({pinned:g} pinned now)")
     return lines
 
 

@@ -136,7 +136,8 @@ def test_sorted_leaf_cache_invalidates_on_writes():
     assert p.sorted_items() == [(b"a", b"2"), (b"b", b"1"), (b"c", b"3")]
     p.delete(b"a", 4)
     assert p.sorted_items() == [(b"b", b"1"), (b"c", b"3")]
-    assert p.payload_size() == sum(len(k) + len(v) + 6
+    from repro.core.pages import SLOT_OVERHEAD
+    assert p.payload_size() == sum(len(k) + len(v) + SLOT_OVERHEAD
                                    for k, v in p.records.items())
 
 

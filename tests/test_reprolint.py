@@ -671,8 +671,81 @@ def test_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for rule in ("codec-parity", "loud-corruption", "wal-discipline",
                  "sorted-stream", "tracer-guard", "metric-name",
-                 "determinism", "dataclass-hygiene"):
+                 "determinism", "dataclass-hygiene", "packed-mutation"):
         assert rule in out
+
+
+# ======================================================== packed-mutation
+def test_packed_mutation_subscript_store_fires(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/m.py": """\
+        def build(page, k, v):
+            page.records[k] = v
+        """})
+    assert len(fired(r, "packed-mutation")) == 1
+
+
+def test_packed_mutation_method_call_fires(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/m.py": """\
+        def push(node, sep, pid):
+            node.keys.append(sep)
+            node.children.append(pid)
+        """})
+    assert len(fired(r, "packed-mutation")) == 2
+
+
+def test_packed_mutation_invalidate_same_receiver_is_clean(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/m.py": """\
+        def push(node, sep, pid):
+            node.keys.append(sep)
+            node.children.append(pid)
+            node.invalidate_sorted()
+        """})
+    assert r.ok
+
+
+def test_packed_mutation_invalidate_other_receiver_still_fires(tmp_path):
+    # invalidating a *different* page does not license this one's write
+    r = lint(tmp_path, {"src/repro/core/m.py": """\
+        def push(node, other, sep):
+            node.keys.append(sep)
+            other.invalidate_sorted()
+        """})
+    assert len(fired(r, "packed-mutation")) == 1
+
+
+def test_packed_mutation_whole_container_assign_is_clean(tmp_path):
+    # property setters invalidate internally — whole-container
+    # assignment is the sanctioned bulk-replace path
+    r = lint(tmp_path, {"src/repro/core/m.py": """\
+        def rebuild(leaf, items):
+            leaf.records = dict(items)
+        """})
+    assert r.ok
+
+
+def test_packed_mutation_outside_core_ignored(tmp_path):
+    r = lint(tmp_path, {"src/repro/media/m.py": """\
+        def build(page, k, v):
+            page.records[k] = v
+        """})
+    assert r.ok
+
+
+def test_packed_mutation_pages_py_owner_exempt(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/pages.py": """\
+        def put(self, k, v):
+            self.records[k] = v
+        """})
+    assert r.ok
+
+
+def test_packed_mutation_pragma_suppresses(tmp_path):
+    r = lint(tmp_path, {"src/repro/core/m.py": """\
+        def build(page, k, v):
+            # reprolint: allow(packed-mutation) — freshly allocated page, nothing cached yet
+            page.records[k] = v
+        """})
+    assert r.ok and len(suppressed(r, "packed-mutation")) == 1
 
 
 # ============================================================== meta-test

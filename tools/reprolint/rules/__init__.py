@@ -8,6 +8,7 @@ from .dataclass_hygiene import DataclassHygieneRule
 from .determinism import DeterminismRule
 from .loud_corruption import LoudCorruptionRule
 from .metric_naming import MetricNamingRule
+from .packed_mutation import PackedMutationRule
 from .sorted_stream import SortedStreamRule
 from .tracer_guard import TracerGuardRule
 from .wal_discipline import WalDisciplineRule
@@ -17,6 +18,7 @@ ALL_RULES = (
     LoudCorruptionRule,
     WalDisciplineRule,
     SortedStreamRule,
+    PackedMutationRule,
     TracerGuardRule,
     MetricNamingRule,
     DeterminismRule,

@@ -1,0 +1,125 @@
+"""packed-mutation: direct container writes on a Page pair with an
+invalidating mutator.
+
+Packed pages (``core/pages.py``) cache derived state keyed off the
+mutable containers: the serialized bytes (``_raw``), the sorted leaf
+view (``_sorted``) and the incremental payload size (``_payload``).
+The sanctioned mutators — ``put`` / ``delete`` / the property *setters*
+(whole-container assignment) — maintain or drop those caches.  A direct
+in-place write (``page.records[k] = v``, ``node.keys.append(...)``)
+bypasses them: the page keeps serving the stale packed bytes or sorted
+view, which is a silent-corruption bug — reads disagree with writes and
+the next flush persists the pre-write image.
+
+The rule flags, inside the engine core (``src/repro/core/``, excluding
+``pages.py`` itself, which owns the caches), every in-place mutation of
+a ``.records`` / ``.keys`` / ``.children`` attribute: subscript stores
+and deletes, and mutating container-method calls.  A flagged site is
+safe when the enclosing function also calls ``invalidate_sorted()`` /
+``put()`` / ``delete()`` on the *same receiver* (matched by dotted-name
+text); when the receiver is not a plain dotted name, any
+``invalidate_sorted()`` call in the function counts.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Tuple
+
+from ..astutil import _walk_no_funcs, enclosing_function
+from ..engine import FileCtx, Rule, Violation
+
+CORE_PREFIX = "src/repro/core/"
+OWNER_FILE = "pages.py"
+
+CONTAINERS = frozenset({"records", "keys", "children"})
+MUTATORS = frozenset({"append", "insert", "pop", "clear", "update",
+                      "setdefault", "extend", "remove", "sort",
+                      "reverse", "popitem"})
+SAFE_CALLS = frozenset({"invalidate_sorted", "put", "delete"})
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``self.btree.root`` -> ``"self.btree.root"``; None when the chain
+    bottoms out in a call/subscript."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _container_attr(node: ast.AST) -> Optional[Tuple[Optional[str], str]]:
+    """(receiver dotted name, container attr) when ``node`` is
+    ``<recv>.records`` / ``.keys`` / ``.children``."""
+    if isinstance(node, ast.Attribute) and node.attr in CONTAINERS:
+        return _dotted(node.value), node.attr
+    return None
+
+
+def _mutations(tree: ast.AST):
+    """Yield (node, receiver, container, verb) for every in-place write."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript):
+                    hit = _container_attr(t.value)
+                    if hit is not None:
+                        yield node, hit[0], hit[1], "subscript store"
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript):
+                    hit = _container_attr(t.value)
+                    if hit is not None:
+                        yield node, hit[0], hit[1], "subscript delete"
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in MUTATORS:
+            hit = _container_attr(node.func.value)
+            if hit is not None:
+                yield node, hit[0], hit[1], f".{node.func.attr}() call"
+
+
+def _has_safe_call(scope: ast.AST, recv: Optional[str]) -> bool:
+    for node in _walk_no_funcs(scope):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in SAFE_CALLS):
+            continue
+        if recv is None:
+            if node.func.attr == "invalidate_sorted":
+                return True
+            continue
+        if _dotted(node.func.value) == recv:
+            return True
+    return False
+
+
+class PackedMutationRule(Rule):
+    name = "packed-mutation"
+    invariant = ("in-place writes to Page.records/keys/children outside "
+                 "pages.py pair with an invalidating mutator (put / delete "
+                 "/ invalidate_sorted) on the same receiver — stale packed "
+                 "bytes or sorted views must never survive a write")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None or not ctx.path.startswith(CORE_PREFIX) \
+                or ctx.path.endswith(OWNER_FILE):
+            return []
+        out: List[Violation] = []
+        for node, recv, container, verb in _mutations(ctx.tree):
+            scope = enclosing_function(node, ctx.parents)
+            if scope is not None and _has_safe_call(scope, recv):
+                continue
+            who = recv or "<expr>"
+            out.append(Violation(
+                self.name, ctx.path, node.lineno,
+                f"in-place {verb} on {who}.{container} with no "
+                f"invalidating mutator ({who}.invalidate_sorted() / "
+                f".put() / .delete()) in this function — the page's "
+                "packed bytes and sorted cache go stale silently"))
+        return out
