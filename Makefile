@@ -3,13 +3,16 @@
 #   make lint        reprolint invariant checker + mypy strictness table
 #   make bench-smoke fast benchmark pass (all tables/figures + replication)
 #   make bench-diff  >2x regression gate vs the previous bench artifact
+#   make torture     strided crash-point sweep (tier-1 slice)
+#   make torture-full  every injectable backend op, all kinds (CI job)
 #   make trace-demo  crash + traced recovery, timeline printed
 #   make blackbox-demo  staged crash + black-box dump + post-mortem render
 #   make examples    run every example end-to-end
 PY      := python
 PYPATH  := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench-diff trace-demo blackbox-demo examples all
+.PHONY: test lint bench-smoke bench-diff torture torture-full trace-demo \
+        blackbox-demo examples all
 
 all: lint test bench-smoke bench-diff examples
 
@@ -33,6 +36,15 @@ bench-smoke:
 
 bench-diff:
 	$(PYPATH) $(PY) -m benchmarks.diff
+
+# crash-point torture: crash the scripted workload at sampled backend ops
+# (torture) or every single one (torture-full), recover both ways, require
+# oracle-equality or documented loud death
+torture:
+	$(PYPATH) $(PY) tools/torture.py
+
+torture-full:
+	$(PYPATH) $(PY) tools/torture.py --full --verbose
 
 trace-demo:
 	$(PY) examples/recovery_timeline.py

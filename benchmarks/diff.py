@@ -34,7 +34,7 @@ ART_ROOT = Path(__file__).resolve().parents[1] / "artifacts"
 # modules whose rows are oracle-asserted (recovered state checked against
 # the committed-state oracle / acceptance bounds inside the bench itself)
 GUARDED_MODULES = {"recovery_pipeline", "pagepack", "replication",
-                   "parallel_apply", "archive", "media"}
+                   "parallel_apply", "archive", "media", "faults"}
 THRESHOLD = 2.0
 # rows faster than this are pure timer noise at 2x granularity
 MIN_US = 50.0

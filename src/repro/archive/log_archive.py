@@ -29,7 +29,7 @@ from __future__ import annotations
 import bisect
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import TYPE_CHECKING, Iterator, Optional
 
 from ..core.log import LogManager, TruncatedLogError
 from ..core.records import LSN, LogRec
@@ -41,6 +41,9 @@ from ..media.errors import CorruptSegmentError
 from ..obs import metrics as _metrics
 from ..obs.flightrec import FLIGHT as _FLIGHT
 from ..obs.flightrec import auto_dump as _flight_dump
+
+if TYPE_CHECKING:  # pragma: no cover — annotation-only, avoids a hard edge
+    from ..faults.retry import RetryPolicy
 
 # process-wide mirrors of the per-instance LRU tallies (instance attrs
 # stay: tests and benches assert them on specific archives)
@@ -74,10 +77,17 @@ class Segment:
 class LogArchive:
     def __init__(self, segment_records: int = 1024,
                  backend: Optional[MediaBackend] = None,
-                 cache_segments: int = 8, compress: bool = False):
+                 cache_segments: int = 8, compress: bool = False,
+                 retry: Optional["RetryPolicy"] = None):
         self.segment_records = segment_records
         self.backend = backend if backend is not None else MemoryBackend()
         self.cache_segments = cache_segments
+        # transient-read mediator: segment/meta *gets* go through it when
+        # present.  Writes stay direct on purpose — seal() is idempotent
+        # and advances its frontier per successful put, so the Archiver
+        # retries whole cycles instead (keeping backend.put calls visible
+        # to the wal-discipline lint).
+        self.retry = retry
         # per-segment zlib compression (codec feature byte).  Applies to
         # blobs this archive writes: new segments, and a short tail
         # segment when seal() extends it (that re-encode adopts the
@@ -108,8 +118,8 @@ class LogArchive:
     # ----------------------------------------------------------- loading
     @classmethod
     def load(cls, backend: MediaBackend, *, segment_records: int = 1024,
-             cache_segments: int = 8,
-             compress: Optional[bool] = None) -> "LogArchive":
+             cache_segments: int = 8, compress: Optional[bool] = None,
+             retry: Optional["RetryPolicy"] = None) -> "LogArchive":
         """Rebuild the archive index from a backend alone — the fresh-
         process path.  Reads only segment *headers*; records decode
         lazily on first touch.  Validates that the sealed runs are
@@ -121,14 +131,15 @@ class LogArchive:
         restarts instead of silently resetting; pass an explicit bool to
         override."""
         arch = cls(segment_records=segment_records, backend=backend,
-                   cache_segments=cache_segments, compress=bool(compress))
+                   cache_segments=cache_segments, compress=bool(compress),
+                   retry=retry)
         entries = []
         newest_feat = 0
         newest_lo = -1
-        for name in backend.list(SEG_PREFIX):
+        for name in arch._get_list(SEG_PREFIX):
             # 64 bytes cover magic + version + feature byte + the framed
             # (lo, hi, count) header; records decode lazily on first touch
-            head = backend.get_head(name, 64)
+            head = arch._get_head(name, 64)
             lo, hi, _count = decode_segment_header(head)
             entries.append(Segment(lo, hi, name))
             if compress is None and lo > newest_lo:
@@ -152,13 +163,39 @@ class LogArchive:
         # when retention emptied the archive, and the prune floor.  The
         # segments win where they know more (a seal that crashed between
         # blob and meta publication still counts its sealed records).
-        if backend.exists(META_NAME):
+        if arch._exists(META_NAME):
             retained, upto, pruned = decode_archive_meta(
-                backend.get(META_NAME))
+                arch._get(META_NAME))
             arch._retained_from = max(arch._retained_from, retained)
             arch._archived_upto = max(arch._archived_upto, upto)
             arch.pruned_records = pruned
         return arch
+
+    # --------------------------------------------------- retry-aware reads
+    # backend *reads* go through the attached RetryPolicy when one is
+    # present, so a transient outage mid-restore or mid-splice costs a
+    # bounded backoff instead of a failed recovery.  Only the transient
+    # branch is absorbed (RetryPolicy.call's contract); corruption and
+    # definite absence propagate on the first throw.
+    def _get(self, name: str) -> bytes:
+        if self.retry is None:
+            return self.backend.get(name)
+        return self.retry.call(self.backend.get, name)
+
+    def _get_head(self, name: str, n: int) -> bytes:
+        if self.retry is None:
+            return self.backend.get_head(name, n)
+        return self.retry.call(self.backend.get_head, name, n)
+
+    def _get_list(self, prefix: str) -> list:
+        if self.retry is None:
+            return self.backend.list(prefix)
+        return self.retry.call(self.backend.list, prefix)
+
+    def _exists(self, name: str) -> bool:
+        if self.retry is None:
+            return self.backend.exists(name)
+        return self.retry.call(self.backend.exists, name)
 
     def _save_meta(self) -> None:
         # reprolint: allow(wal-discipline) — archive meta records what seal/prune already did; seal clamps its segment cut to stable_lsn before this runs, and prune only ever shrinks retention
@@ -215,6 +252,11 @@ class LogArchive:
                                  encode_segment(merged,
                                                 compress=self.compress))
                 self._segs[-1] = grown
+                # frontier advances per successful put: a transient put
+                # failure later in this seal leaves index and frontier in
+                # lockstep, so a whole-cycle retry resumes instead of
+                # re-sealing (and double-indexing) these records
+                self._archived_upto = grown.hi
                 self._cache[grown.name] = tuple(merged)
                 self._cache.move_to_end(grown.name)
                 self._shrink_cache()
@@ -227,6 +269,7 @@ class LogArchive:
                              encode_segment(chunk, compress=self.compress))
             self._segs.append(seg)
             self._los.append(seg.lo)
+            self._archived_upto = seg.hi
         self._archived_upto = hi
         self._save_meta()
         return sealed
@@ -264,7 +307,7 @@ class LogArchive:
             _C_CACHE_HITS.inc()
             return hit
         try:
-            records = tuple(decode_segment(self.backend.get(seg.name)))
+            records = tuple(decode_segment(self._get(seg.name)))
         except CorruptSegmentError:
             # black-box dump hook: capture the flight ring, then re-raise
             _flight_dump("corrupt_segment")

@@ -22,24 +22,42 @@ from __future__ import annotations
 
 from typing import Optional
 
-from ..core.records import LSN
+from ..core.records import LSN, NULL_LSN
 from ..core.tc import Database
+from ..faults.retry import RetryPolicy
+from ..media.errors import BackendUnavailableError
+from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
 from .log_archive import LogArchive
 from .snapshot import SnapshotStore
+
+_G_CONSEC_FAILURES = _metrics.gauge("archiver.consecutive_failures")
 
 
 class Archiver:
     """Binds one primary's log to its archive (attaching the splice) and
     applies the watermark policy above.  ``shippers`` is any iterable of
     objects with ``min_cursor()`` — in practice ``LogShipper``s — whose
-    subscribers truncation must not push into the cold tier."""
+    subscribers truncation must not push into the cold tier.
+
+    Degraded mode: a backend outage must not take the primary down with
+    it — archiving is a *background* duty.  ``run_once`` retries the
+    whole cycle through ``retry`` (the cycle is idempotent: seal resumes
+    at the archived frontier, the master pointer put is a pure
+    overwrite, truncation never runs on a failed cycle), and when the
+    outage outlasts the retry budget it reports ``ok=False``, bumps the
+    ``archiver.consecutive_failures`` health gauge, and leaves the whole
+    backlog in memory for the next cadence tick to seal."""
 
     def __init__(self, db: Database, archive: Optional[LogArchive] = None,
-                 snapshots: Optional[SnapshotStore] = None, shippers=()):
+                 snapshots: Optional[SnapshotStore] = None, shippers=(),
+                 retry: Optional[RetryPolicy] = None):
         self.db = db
         self.archive = archive if archive is not None else LogArchive()
         self.snapshots = snapshots
         self.shippers = list(shippers)
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.consecutive_failures = 0
         db.log.attach_archive(self.archive)
         if snapshots is not None and snapshots.archive is None:
             snapshots.archive = self.archive
@@ -66,10 +84,12 @@ class Archiver:
                 wm = min(wm, cursor - 1)
         return max(wm, 0)
 
-    def run_once(self) -> dict:
-        """Seal the stable prefix, persist the master pointer, then
-        truncate memory to the watermark.  Returns counters for
-        inspection/benchmarks."""
+    def _cycle(self) -> dict:
+        """One seal + master-save + truncate pass.  Safe to re-run after
+        a transient failure at any point: seal resumes where the last
+        successful put left the frontier, and truncation (the only
+        destructive step — it drops memory) runs strictly last, after
+        everything it drops is durably sealed."""
         sealed = self.archive.seal(self.db.log)
         self.db.log.save_master(self.archive.backend)
         truncated = self.db.log.truncate(self.watermark())
@@ -80,11 +100,46 @@ class Archiver:
             "in_memory_records": self.db.log.in_memory_records,
         }
 
+    def run_once(self) -> dict:
+        """Seal the stable prefix, persist the master pointer, then
+        truncate memory to the watermark.  Returns counters for
+        inspection/benchmarks, plus ``ok``: False means the backend
+        outage outlasted the retry budget and this cycle was skipped —
+        nothing was truncated, the backlog seals next cycle."""
+        try:
+            result = self.retry.call(self._cycle)
+        except BackendUnavailableError:
+            # retry budget exhausted: degrade, stay alive, stay loud in
+            # telemetry.  No truncation happened (it runs last), so no
+            # record is lost — memory just keeps the backlog.
+            self.consecutive_failures += 1
+            _G_CONSEC_FAILURES.set(self.consecutive_failures)
+            _FLIGHT.record("arch.outage", self.consecutive_failures)
+            return {
+                "ok": False,
+                "sealed": 0,
+                "truncated": 0,
+                "archived_upto": self.archive.archived_upto,
+                "in_memory_records": self.db.log.in_memory_records,
+                "consecutive_failures": self.consecutive_failures,
+            }
+        self.consecutive_failures = 0
+        _G_CONSEC_FAILURES.set(0)
+        result["ok"] = True
+        return result
+
     def prune(self, keep_snapshots: int = 1) -> dict:
         """Retire old snapshots, then drop archive segments nothing needs:
         below ``min(min_redo_lsn of retained snapshots, slowest
         subscriber)``.  After this, a subscriber appearing below the floor
         gets ``SnapshotRequired`` — the horizon is real."""
+        return self.retry.call(self._prune_cycle, keep_snapshots)
+
+    def _prune_cycle(self, keep_snapshots: int) -> dict:
+        # retry-safe for the same reason seal is: snapshot retirement and
+        # segment deletion are idempotent (deleting an already-deleted
+        # blob is a no-op), and the in-memory index only advances past
+        # blobs whose delete returned
         dropped_snaps = 0
         bound: Optional[LSN] = None
         if self.snapshots is not None:
@@ -97,6 +152,15 @@ class Archiver:
             cursor = shipper.min_cursor()
             if cursor is not None:
                 bound = min(bound, cursor)
+        # the live primary's own crash story is a redo scan from the
+        # master checkpoint (bCkpt): pruning at or above it would strand
+        # in-process recovery of this very process (the cold story has
+        # its snapshot; the warm one needs those records).  The classic
+        # reclamation discipline applies: advance the checkpoint first,
+        # then destroy the history it no longer needs.
+        bckpt = self.db.log.master.bckpt_lsn
+        if bckpt == NULL_LSN or bckpt < bound:
+            self.db.checkpoint()
         pruned = self.archive.prune(bound)
         return {"snapshots_dropped": dropped_snaps, "records_pruned": pruned,
                 "retained_from": self.archive.retained_from}

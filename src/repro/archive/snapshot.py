@@ -162,15 +162,23 @@ class SnapshotStore:
     @classmethod
     def load(cls, backend: MediaBackend,
              archive: Optional[LogArchive] = None,
-             exclude_tables: tuple = DEFAULT_EXCLUDE_TABLES
-             ) -> "SnapshotStore":
+             exclude_tables: tuple = DEFAULT_EXCLUDE_TABLES,
+             retry=None) -> "SnapshotStore":
         """Rebuild a store in a fresh process from a backend's ``snap/``
         blobs alone (metadata + rows decode through the codec; CRC and
-        row-count validation make a torn snapshot loud, never short)."""
+        row-count validation make a torn snapshot loud, never short).
+
+        ``retry`` (a ``faults.RetryPolicy``) mediates the per-blob gets:
+        a transient backend outage costs a bounded backoff instead of a
+        failed restore; corruption still propagates on the first throw —
+        re-reading the same torn snapshot cannot help."""
         store = cls(archive=archive, exclude_tables=exclude_tables,
                     backend=backend)
-        snaps = [decode_snapshot(backend.get(name))
-                 for name in backend.list(SNAP_PREFIX)]
+        get = backend.get if retry is None else \
+            (lambda name: retry.call(backend.get, name))
+        names = backend.list(SNAP_PREFIX) if retry is None else \
+            retry.call(backend.list, SNAP_PREFIX)
+        snaps = [decode_snapshot(get(name)) for name in names]
         snaps.sort(key=lambda s: (s.begin_lsn, s.snapshot_id))
         store.snapshots = snaps
         store._next_id = max((s.snapshot_id for s in snaps), default=0) + 1

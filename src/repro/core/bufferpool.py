@@ -29,6 +29,7 @@ _C_HITS = _metrics.counter("bufferpool.hits")
 _C_MISSES = _metrics.counter("bufferpool.misses")
 _C_EVICTIONS = _metrics.counter("bufferpool.evictions")
 _C_FLUSHES = _metrics.counter("bufferpool.flushes")
+_C_FLUSH_FAILURES = _metrics.counter("bufferpool.flush_failures")
 _G_PINNED = _metrics.gauge("bufferpool.pinned")
 
 
@@ -46,10 +47,14 @@ class Buffer:
 
 class BufferPool:
     def __init__(self, store: PageStore, log: LogManager,
-                 capacity_pages: int = 1 << 30):
+                 capacity_pages: int = 1 << 30, retry=None):
         self.store = store
         self.log = log
         self.capacity = capacity_pages
+        # a ``faults.RetryPolicy`` mediating transient page-write failures
+        # (the store may sit on a remote MediaBackend).  Duck-typed and
+        # optional: core must not import faults at module load.
+        self.retry = retry
         self.buffers: Dict[PID, Buffer] = {}
         self._clock: list[PID] = []        # CLOCK ring (lazy compaction)
         self._hand = 0
@@ -63,6 +68,8 @@ class BufferPool:
         self.fetches = 0              # misses (store reads), historical name
         self.evictions = 0
         self.flushes = 0
+        self.flush_failures = 0       # transient write failures (page stayed
+        #                               dirty + resident; nothing was lost)
         self.pinned_count = 0
         self.peak_resident = 0        # max frames ever resident at once
         # recovery-time IO accounting hook
@@ -78,7 +85,12 @@ class BufferPool:
             if pin:
                 self._pin(buf)
             return buf.page
-        page = self.store.read_page(pid)
+        if self.retry is None:
+            page = self.store.read_page(pid)
+        else:
+            # demand reads are as retryable as flushes: the backend, not
+            # the bytes, failed — bounded backoff beats a dead read path
+            page = self.retry.call(self.store.read_page, pid)
         if page is None:
             return None
         if self.iosim is not None:
@@ -148,7 +160,22 @@ class BufferPool:
         # directly.)
         if buf.wal_lsn > self.log.stable_lsn:
             self.log.flush(buf.wal_lsn)
-        self.store.write_page(buf.page)
+        # call-time import: core loads before media (package layering)
+        from ..media.errors import BackendUnavailableError
+        try:
+            if self.retry is None:
+                self.store.write_page(buf.page)
+            else:
+                self.retry.call(self.store.write_page, buf.page)
+        except BackendUnavailableError:
+            # the write never happened: the buffer stays dirty (its state
+            # was not touched above), stays resident, and keeps serving
+            # reads — account the failure and let the caller decide
+            # whether this flush was optional (background cadence) or not
+            self.flush_failures += 1
+            _C_FLUSH_FAILURES.inc()
+            _FLIGHT.record("pool.flush_fail", pid, buf.wal_lsn)
+            raise
         buf.dirty = False
         buf.rlsn = NULL_LSN
         buf.dirty_gen = -1
@@ -177,8 +204,18 @@ class BufferPool:
                  if b.dirty and b.bg_flush_tick < tick - 1]
         dirty.sort()
         n = 0
+        from ..media.errors import BackendUnavailableError
         for _, pid in dirty[:max_pages]:
-            if self.flush_page(pid):
+            try:
+                flushed = self.flush_page(pid)
+            except BackendUnavailableError:
+                # background flushing is optional by construction (any
+                # flush schedule is WAL-legal): the page stays dirty and
+                # the next round retries it.  flush_page accounted the
+                # failure; outage-wide pressure shows up as a flush_failures
+                # ramp, not a dead pool.
+                continue
+            if flushed:
                 self.buffers[pid].bg_flush_tick = tick
                 n += 1
         return n
@@ -199,19 +236,41 @@ class BufferPool:
 
     # --------------------------------------------------------------- eviction
     def _evict_for_space(self) -> None:
+        from ..media.errors import BackendUnavailableError
+        failing: set[PID] = set()      # dirty victims whose flush failed
+        last_exc: Optional[Exception] = None
         while len(self.buffers) >= self.capacity:
-            victim = self._clock_sweep()
+            victim = self._clock_sweep(skip=failing)
             if victim is None:
+                if last_exc is not None:
+                    # every evictable frame is dirty and every flush
+                    # failed: the pool genuinely cannot make space, and
+                    # soft-overflowing would hide a full outage — raise
+                    # the last transient error instead
+                    raise last_exc
                 # every frame is pinned: overflow softly rather than
                 # deadlock — pins are short (one mutation window)
                 break
-            self._evict(victim)
+            try:
+                self._evict(victim)
+            except BackendUnavailableError as exc:
+                # the victim stayed resident and dirty (flush_page left
+                # it intact); put it back in the ring, remember it as
+                # failing, back off once, and sweep for a different
+                # victim — a clean frame costs no IO and always works
+                self._clock.append(victim)
+                failing.add(victim)
+                last_exc = exc
+                if self.retry is not None:
+                    self.retry.backoff(min(len(failing),
+                                           self.retry.max_attempts))
 
-    def _clock_sweep(self) -> Optional[PID]:
+    def _clock_sweep(self, skip: Optional[set] = None) -> Optional[PID]:
         """Advance the CLOCK hand to a victim: referenced frames get a
-        second chance, pinned frames are skipped, clean frames are
-        preferred (a dirty victim costs a flush IO); the first unreferenced
-        dirty frame is remembered as the fallback."""
+        second chance, pinned frames (and ``skip`` members — victims whose
+        flush just failed) are never picked, clean frames are preferred (a
+        dirty victim costs a flush IO); the first unreferenced dirty frame
+        is remembered as the fallback."""
         clock = self._clock
         fallback: Optional[PID] = None
         steps = 0
@@ -226,7 +285,7 @@ class BufferPool:
                 clock[self._hand] = clock[-1]
                 clock.pop()
                 continue
-            if buf.pins:
+            if buf.pins or (skip is not None and pid in skip):
                 self._hand += 1
                 continue
             if buf.ref:

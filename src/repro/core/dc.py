@@ -98,16 +98,19 @@ class RedoStats:
 class DataComponent:
     def __init__(self, store: PageStore, log: LogManager, cache_pages: int = 1 << 30,
                  delta_mode: str = "paper", side_by_side: bool = True,
-                 page_size: int = None):
+                 page_size: int = None, retry=None):
         """delta_mode: 'paper' | 'perfect' (D.1) | 'reduced' (D.2) | 'off'.
         side_by_side: also maintain SQL-Server BW records on the same log so
         physiological recovery can be compared on a common log (Section 5.1).
-        page_size: stable-page byte size — replicas may differ (Section 1.1)."""
+        page_size: stable-page byte size — replicas may differ (Section 1.1).
+        retry: a ``faults.RetryPolicy`` the buffer pool uses to absorb
+        transient page-IO failures (page blobs may live on a remote
+        ``MediaBackend``); None keeps every backend error first-throw."""
         from .pages import PAGE_SIZE
         self.page_size = page_size or PAGE_SIZE
         self.store = store
         self.log = log
-        self.pool = BufferPool(store, log, cache_pages)
+        self.pool = BufferPool(store, log, cache_pages, retry=retry)
         self.btree = BTree(self.pool, log, page_size=self.page_size)
         self.delta_mode = delta_mode
         self.delta: Optional[DeltaAccumulator] = None
@@ -136,6 +139,15 @@ class DataComponent:
     def bootstrap(self) -> None:
         self.btree.create()
 
+    def _store_write(self, page) -> None:
+        """Direct-to-store page write (bulk paths that bypass the pool),
+        through the pool's retry policy when one is configured — a bulk
+        load should survive the same transient blips a flush does."""
+        if self.pool.retry is None:
+            self.store.write_page(page)
+        else:
+            self.pool.retry.call(self.store.write_page, page)
+
     def bulk_build(self, items: list[tuple[bytes, bytes]]) -> None:
         """Offline index build (initial load / restore-from-backup): packs
         sorted records bottom-up straight into stable storage, no logging.
@@ -159,14 +171,14 @@ class DataComponent:
             if size + rec_sz > fill and cur.records:
                 leaves.append((max(cur.records), cur.pid))
                 cur.invalidate_sorted()
-                self.store.write_page(cur)
+                self._store_write(cur)
                 cur = empty_leaf(self.store.allocate_pid())
                 size = 0
             cur.records[k] = v
             size += rec_sz
         leaves.append((max(cur.records) if cur.records else b"", cur.pid))
         cur.invalidate_sorted()
-        self.store.write_page(cur)
+        self._store_write(cur)
 
         # ---- internal levels: children[i] holds keys <= keys[i]
         level = leaves
@@ -179,7 +191,7 @@ class DataComponent:
             for mx, pid in level:
                 if node.children and node.serialized_size() + len(mx) + 24 > fill:
                     nxt.append((prev_mx, node.pid))
-                    self.store.write_page(node)
+                    self._store_write(node)
                     node = empty_internal(self.store.allocate_pid())
                 if node.children:
                     node.keys.append(prev_mx)
@@ -187,7 +199,7 @@ class DataComponent:
                 node.invalidate_sorted()
                 prev_mx = mx
             nxt.append((prev_mx, node.pid))
-            self.store.write_page(node)
+            self._store_write(node)
             level = nxt
         self.btree.root_pid = level[0][1]
         self.btree.height = height

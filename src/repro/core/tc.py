@@ -272,7 +272,11 @@ class Database:
     def __init__(self, cache_pages: int = 4096, delta_mode: str = "paper",
                  side_by_side: bool = True, tracker_interval: int = 100,
                  bg_flush_per_txn: int = 0, page_size: int = None,
-                 page_backend=None):
+                 page_backend=None, media_retry=None):
+        """``media_retry``: a ``faults.RetryPolicy`` threaded into the
+        buffer pool so page reads/flushes against a flaky ``page_backend``
+        absorb into bounded backoff (only ``BackendUnavailableError`` —
+        corruption stays first-throw loud everywhere)."""
         if page_backend is not None:
             from ..media.backend import open_backend
             self.store = PageStore(open_backend(page_backend))
@@ -281,7 +285,7 @@ class Database:
         self.log = LogManager()
         self.dc = DataComponent(self.store, self.log, cache_pages,
                                 delta_mode=delta_mode, side_by_side=side_by_side,
-                                page_size=page_size)
+                                page_size=page_size, retry=media_retry)
         self.tc = TransactionalComponent(self.log, self.dc)
         self.tracker_interval = tracker_interval
         self.bg_flush_per_txn = bg_flush_per_txn

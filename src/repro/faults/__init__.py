@@ -1,0 +1,27 @@
+"""Deterministic fault injection and the retry discipline built on it.
+
+Sits directly above ``media``: a ``FaultyBackend`` wraps any
+``MediaBackend`` and injects scripted failures — transient outages,
+latency, torn writes, clean crashes, permanent blob loss — driven by a
+seeded ``FaultPlan`` whose injected sequence is a pure function of the
+plan.  ``RetryPolicy`` is the other half of the contract: the one
+mediator through which the stack absorbs ``BackendUnavailableError``
+(bounded attempts, deterministic backoff, seeded jitter), and through
+which it must *never* absorb corruption.
+
+The crash-point torture driver (``tools/torture.py``) composes the two:
+enumerate every injectable point in a scripted workload, crash at each,
+recover, and assert oracle-equality against the committed prefix.
+"""
+from .backend import FaultyBackend, make_faulty
+from .plan import (ALL_KINDS, KIND_CODE, KIND_CRASH, KIND_LATENCY, KIND_LOST,
+                   KIND_TORN_CRASH, KIND_UNAVAILABLE, FaultPlan, FaultSpec,
+                   InjectedCrash, SplitMix64)
+from .retry import RetryPolicy
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "FaultyBackend", "make_faulty",
+    "RetryPolicy", "InjectedCrash", "SplitMix64",
+    "ALL_KINDS", "KIND_CODE", "KIND_UNAVAILABLE", "KIND_LATENCY",
+    "KIND_TORN_CRASH", "KIND_CRASH", "KIND_LOST",
+]

@@ -1,0 +1,133 @@
+"""``FaultyBackend``: any ``MediaBackend``, plus a deterministic adversary.
+
+Wraps an inner backend and consults a ``FaultPlan`` on every operation.
+Between faults it is a pure pass-through (the disabled-hook cost is
+CI-bounded at <=5% of batched Log1 redo — ``benchmarks/faults_bench``),
+so the same wrapped backend serves both the torture sweep and ordinary
+tests.  Fault kinds:
+
+  unavailable   raise ``BackendUnavailableError`` — the transient outage
+                every retry path in the stack must absorb (bounded).
+  latency       charge ``latency_ms`` to the iosim-style clock (or the
+                wrapper's own ``injected_latency_ms`` tally), then serve.
+  torn_crash    ``put`` persists a *truncated prefix* of the blob to the
+                inner backend, then raises ``InjectedCrash`` — the
+                non-atomic cloud write the DirectoryBackend's
+                temp+rename discipline exists to prevent.  Whoever later
+                decodes the torn blob must go loud (CRC), never short.
+  crash         raise ``InjectedCrash`` before the operation takes any
+                effect — clean process death at an exact backend op.
+  lost          the blob is permanently gone: deleted from the inner
+                backend and pinned missing, so every later read answers
+                ``BackendMissingError`` (a definite absence, not an
+                outage — retrying is wrong and nothing retries it).
+
+Every injection counts ``faults.injected{op,kind}`` and leaves a flight-
+recorder breadcrumb, so a post-mortem of a torture failure shows the
+exact op index that was hit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..media.backend import MediaBackend
+from ..media.errors import BackendMissingError, BackendUnavailableError
+from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
+from .plan import (KIND_CODE, KIND_CRASH, KIND_LATENCY, KIND_LOST,
+                   KIND_TORN_CRASH, KIND_UNAVAILABLE, FaultPlan, FaultSpec,
+                   InjectedCrash)
+
+
+class FaultyBackend(MediaBackend):
+    """A ``MediaBackend`` whose failures are scripted by a ``FaultPlan``.
+
+    ``clock`` is anything with ``work(ms)`` (``core.storage.IOSim``); when
+    absent, injected latency accumulates on ``injected_latency_ms`` so
+    tests can still assert the charge."""
+
+    def __init__(self, inner: MediaBackend,
+                 plan: Optional[FaultPlan] = None,
+                 clock: Optional[object] = None) -> None:
+        self.inner = inner
+        self.plan = plan if plan is not None else FaultPlan()
+        self.clock = clock
+        self.injected_latency_ms = 0.0
+        self.lost: set[str] = set()
+        self.injected_faults = 0
+
+    # ------------------------------------------------------------ injection
+    def _inject(self, op: str, name: str,
+                data: Optional[bytes] = None) -> Optional[FaultSpec]:
+        """Consult the plan for ``op`` on ``name`` and act on the spec.
+        Raises for unavailable/crash kinds; returns the spec (for the
+        caller's kind-specific follow-up) after charging latency or
+        executing a loss."""
+        spec = self.plan.match(op, name)
+        if name in self.lost and op in ("get", "get_head"):
+            raise BackendMissingError(name, "FaultyBackend(lost)")
+        if spec is None:
+            return None
+        self.injected_faults += 1
+        _metrics.counter("faults.injected", op=op, kind=spec.kind).inc()
+        _FLIGHT.record("fault.inject", self.plan.total_ops,
+                       KIND_CODE[spec.kind])
+        if spec.kind == KIND_UNAVAILABLE:
+            raise BackendUnavailableError(
+                f"injected outage at backend op #{self.plan.total_ops} "
+                f"({op} {name!r})")
+        if spec.kind == KIND_LATENCY:
+            self._charge(spec.latency_ms)
+            return spec
+        if spec.kind == KIND_CRASH:
+            raise InjectedCrash(op, name, self.plan.total_ops)
+        if spec.kind == KIND_TORN_CRASH:
+            if op == "put" and data is not None:
+                torn = data[: max(0, int(len(data) * spec.torn_frac))]
+                self.inner.put(name, torn)    # the non-atomic half-write
+            raise InjectedCrash(op, name, self.plan.total_ops)
+        if spec.kind == KIND_LOST:
+            self.lost.add(name)
+            self.inner.delete(name)
+            if op in ("get", "get_head"):
+                raise BackendMissingError(name, "FaultyBackend(lost)")
+        return spec
+
+    def _charge(self, ms: float) -> None:
+        self.injected_latency_ms += ms
+        work = getattr(self.clock, "work", None)
+        if work is not None:
+            work(ms)
+
+    # ------------------------------------------------------------ interface
+    def put(self, name: str, data: bytes) -> None:
+        spec = self._inject("put", name, data)
+        if spec is not None and spec.kind == KIND_LOST:
+            return                        # the write itself is what was lost
+        if name in self.lost:
+            self.lost.discard(name)       # a fresh write resurrects the name
+        self.inner.put(name, data)
+
+    def get(self, name: str) -> bytes:
+        self._inject("get", name)
+        return self.inner.get(name)
+
+    def get_head(self, name: str, n: int) -> bytes:
+        self._inject("get_head", name)
+        return self.inner.get_head(name, n)
+
+    def delete(self, name: str) -> None:
+        self._inject("delete", name)
+        self.inner.delete(name)
+
+    def list(self, prefix: str = "") -> list[str]:
+        self._inject("list", prefix)
+        return self.inner.list(prefix)
+
+
+def make_faulty(inner: MediaBackend, *specs: FaultSpec,
+                seed: int = 0, clock: Optional[object] = None
+                ) -> FaultyBackend:
+    """Convenience: wrap ``inner`` with an explicit spec list."""
+    return FaultyBackend(inner, FaultPlan(faults=tuple(specs), seed=seed),
+                         clock=clock)

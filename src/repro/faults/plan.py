@@ -1,0 +1,176 @@
+"""Deterministic fault plans: *which* backend operation fails, *how*.
+
+A ``FaultPlan`` is the whole description of a fault campaign — a tuple of
+``FaultSpec``s plus a seed — and it fully determines the injected
+sequence: the same plan driven over the same operation stream injects
+byte-identical faults, run after run.  That property is what makes a
+crash-point sweep (``tools/torture``) a *test* rather than a fuzz: every
+red result replays exactly.
+
+No stdlib ``random`` anywhere (reprolint's determinism rule covers this
+package like the rest of the engine): the only randomness is
+``SplitMix64``, a tiny seeded generator used for plan generation and for
+``RetryPolicy`` jitter, both pure functions of their seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Tuple
+
+#: fault kinds a spec may name
+KIND_UNAVAILABLE = "unavailable"    # raise BackendUnavailableError
+KIND_LATENCY = "latency"            # charge injected clock, then proceed
+KIND_TORN_CRASH = "torn_crash"      # persist a truncated prefix, then crash
+KIND_CRASH = "crash"                # crash before the op takes effect
+KIND_LOST = "lost"                  # the blob is permanently gone
+ALL_KINDS = (KIND_UNAVAILABLE, KIND_LATENCY, KIND_TORN_CRASH, KIND_CRASH,
+             KIND_LOST)
+
+#: numeric codes for flight-recorder probes (compact positional args only)
+KIND_CODE = {k: i for i, k in enumerate(ALL_KINDS, start=1)}
+
+
+class InjectedCrash(BaseException):
+    """The simulated process death of a torn-write / crash fault.
+
+    Deliberately a ``BaseException``: no ``except Exception`` cleanup
+    handler anywhere in the stack may absorb a crash — the torture driver
+    is the only legitimate catcher, and what it does next (recover from
+    the crash image, cold-restore from the backend) is the point of the
+    exercise."""
+
+    def __init__(self, op: str, name: str, op_index: int) -> None:
+        self.op = op
+        self.name = name
+        self.op_index = op_index
+        super().__init__(
+            f"injected crash at backend op #{op_index} ({op} {name!r})")
+
+
+class SplitMix64:
+    """Tiny deterministic PRNG (splitmix64): one u64 of state, full
+    period, good enough for jitter and plan generation — and, unlike the
+    stdlib, explicit about its seed."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int) -> None:
+        self._state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self._state = (self._state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self._state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def uniform(self) -> float:
+        """[0, 1) with 53 random bits."""
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def randint(self, lo: int, hi: int) -> int:
+        """Inclusive [lo, hi]."""
+        return lo + self.next_u64() % (hi - lo + 1)
+
+    def choice(self, seq):
+        return seq[self.next_u64() % len(seq)]
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One fault: fire on the ``at``-th matching call (1-based, counted
+    per spec over ops matching ``op``/``name_prefix``), for ``count``
+    consecutive matching calls."""
+    op: str                      # "put" | "get" | "get_head" | "delete" |
+    #                              "list" | "*"
+    kind: str                    # one of ALL_KINDS
+    at: int                      # 1-based index among matching calls
+    count: int = 1               # consecutive matching calls affected
+    name_prefix: str = ""        # restrict to blob names with this prefix
+    latency_ms: float = 0.0      # KIND_LATENCY charge per hit
+    torn_frac: float = 0.5       # KIND_TORN_CRASH: prefix fraction persisted
+
+    def __post_init__(self) -> None:
+        if self.kind not in ALL_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {ALL_KINDS})")
+        if self.at < 1 or self.count < 1:
+            raise ValueError("FaultSpec.at and .count are 1-based and >= 1")
+
+
+@dataclass
+class FaultPlan:
+    """A seeded, fully deterministic fault campaign.
+
+    ``match(op, name)`` is called by ``FaultyBackend`` once per backend
+    operation and returns the spec to inject now (or None).  The plan
+    keeps the campaign's bookkeeping: per-spec hit counts, the global op
+    counter, and the injected trace — ``(op_index, op, kind, name)``
+    tuples — which the seed-determinism property asserts on.
+
+    After a crash-kind fault fires the plan disarms itself: the "process"
+    died, and the recovery that follows must run against a quiet backend.
+    """
+    faults: Tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    total_ops: int = field(default=0, init=False)
+    crashed: bool = field(default=False, init=False)
+    injected: List[Tuple[int, str, str, str]] = field(default_factory=list,
+                                                      init=False)
+
+    def __post_init__(self) -> None:
+        self.faults = tuple(self.faults)
+        self._seen: List[int] = [0] * len(self.faults)
+
+    # ------------------------------------------------------------- matching
+    def match(self, op: str, name: str) -> Optional[FaultSpec]:
+        """Advance the op stream by one ``op`` on ``name``; return the
+        spec to inject for this operation, or None.  The first armed spec
+        in declaration order wins (plans wanting overlap compose them
+        explicitly)."""
+        self.total_ops += 1
+        if self.crashed:
+            return None
+        hit: Optional[FaultSpec] = None
+        for i, spec in enumerate(self.faults):
+            if spec.op != "*" and spec.op != op:
+                continue
+            if spec.name_prefix and not name.startswith(spec.name_prefix):
+                continue
+            self._seen[i] += 1
+            if hit is None and \
+                    spec.at <= self._seen[i] < spec.at + spec.count:
+                hit = spec
+        if hit is not None:
+            self.injected.append((self.total_ops, op, hit.kind, name))
+            if hit.kind in (KIND_TORN_CRASH, KIND_CRASH):
+                self.crashed = True
+        return hit
+
+    def disarm(self) -> None:
+        """Stop injecting (the recovery half of a torture run)."""
+        self.crashed = True
+
+    # ----------------------------------------------------------- generation
+    @classmethod
+    def generate(cls, seed: int, n_faults: int = 4,
+                 ops: Iterable[str] = ("put", "get", "delete"),
+                 kinds: Iterable[str] = (KIND_UNAVAILABLE, KIND_LATENCY),
+                 window: int = 200) -> "FaultPlan":
+        """A deterministic pseudo-random campaign: ``n_faults`` specs over
+        the first ``window`` matching calls, entirely a function of
+        ``seed``.  Crash kinds are excluded by default — a generated soak
+        plan should perturb, not kill, unless asked."""
+        rng = SplitMix64(seed)
+        ops_t, kinds_t = tuple(ops), tuple(kinds)
+        specs = []
+        for _ in range(n_faults):
+            kind = rng.choice(kinds_t)
+            specs.append(FaultSpec(
+                op=rng.choice(ops_t), kind=kind,
+                at=rng.randint(1, max(1, window)),
+                count=rng.randint(1, 3) if kind == KIND_UNAVAILABLE else 1,
+                latency_ms=round(rng.uniform() * 5.0, 3)
+                if kind == KIND_LATENCY else 0.0))
+        return cls(faults=tuple(specs), seed=seed)

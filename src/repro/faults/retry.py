@@ -1,0 +1,112 @@
+"""Bounded, deterministic retry with exponential backoff + seeded jitter.
+
+The classification contract, in one place: the *only* exception class a
+``RetryPolicy`` absorbs is ``BackendUnavailableError`` — the backend
+failed, the bytes are presumed intact, trying again can help.  Corruption
+(``CorruptSegmentError``/``UnknownFormatError``/``TruncatedLogError``/
+``PageCorruptError``) propagates on the first throw: retrying re-reads
+the same wrong bytes and, worse, a retry loop that "handles" corruption
+converts data loss into silence.  reprolint's ``retry-discipline`` rule
+pins exactly this shape on every catcher in the tree.
+
+Determinism: backoff delays are a pure function of ``(seed, attempt)`` —
+jitter comes from ``SplitMix64``, never the stdlib ``random`` (the
+determinism lint rule covers this package).  By default no wall-clock
+sleeping happens at all: delays are *charged* to ``slept_ms`` (and to an
+iosim-style clock when one is attached), which keeps every test and the
+torture sweep instant and replayable.  A deployment that wants real
+sleeping passes ``sleep=time.sleep``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from ..media.errors import BackendUnavailableError
+from ..obs import metrics as _metrics
+from ..obs.flightrec import FLIGHT as _FLIGHT
+from .plan import SplitMix64
+
+_C_RETRIES = _metrics.counter("retry.attempts")
+_C_EXHAUSTED = _metrics.counter("retry.exhausted")
+
+
+class RetryPolicy:
+    """Bounded attempts, exponential backoff, seeded jitter.
+
+    One policy instance is one backoff schedule: ``call`` runs a thunk
+    through it, ``backoff(attempt)`` exposes the schedule to callers that
+    own their own loop (``Replica.catch_up``, the buffer pool's eviction
+    path) — both shapes satisfy ``retry-discipline`` because both are
+    bounded by ``max_attempts`` and both touch only the transient branch
+    of the error hierarchy.
+    """
+
+    def __init__(self, max_attempts: int = 4, base_delay_ms: float = 1.0,
+                 multiplier: float = 2.0, max_delay_ms: float = 250.0,
+                 jitter_frac: float = 0.25, seed: int = 0,
+                 sleep: Optional[Callable[[float], None]] = None,
+                 clock: Optional[object] = None) -> None:
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        self.max_attempts = max_attempts
+        self.base_delay_ms = base_delay_ms
+        self.multiplier = multiplier
+        self.max_delay_ms = max_delay_ms
+        self.jitter_frac = jitter_frac
+        self.seed = seed
+        self.sleep = sleep               # real sleeping is opt-in
+        self.clock = clock               # iosim-style: .work(ms)
+        self._rng = SplitMix64(seed)
+        # stats (instance-level; process-wide mirrors via the registry)
+        self.retries = 0
+        self.exhausted = 0
+        self.slept_ms = 0.0
+
+    # ------------------------------------------------------------- schedule
+    def delay_ms(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (1-based): exponential
+        with +/- ``jitter_frac`` seeded jitter, capped at
+        ``max_delay_ms``.  Consumes PRNG state — deterministic across a
+        policy's lifetime, not per call."""
+        base = min(self.base_delay_ms * (self.multiplier ** (attempt - 1)),
+                   self.max_delay_ms)
+        jitter = 1.0 + self.jitter_frac * (2.0 * self._rng.uniform() - 1.0)
+        return base * jitter
+
+    def backoff(self, attempt: int) -> float:
+        """Charge (and optionally sleep) one backoff step; returns the
+        delay in ms.  The deterministic clock, when attached, advances by
+        the same amount — injected latency and retry delay share one
+        timeline."""
+        delay = self.delay_ms(attempt)
+        self.slept_ms += delay
+        self.retries += 1
+        _C_RETRIES.inc()
+        _FLIGHT.record("retry.backoff", attempt, delay)
+        work = getattr(self.clock, "work", None)
+        if work is not None:
+            work(delay)
+        if self.sleep is not None:
+            self.sleep(delay / 1e3)
+        return delay
+
+    # ----------------------------------------------------------------- call
+    def call(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
+        """Run ``fn`` with bounded retries on transient backend failure.
+
+        Only ``BackendUnavailableError`` is ever absorbed; everything
+        else — corruption first among it — propagates on the first
+        throw.  After ``max_attempts`` tries the last transient error
+        propagates too: a retry policy bounds an outage, it does not
+        hide one."""
+        attempt = 1
+        while True:
+            try:
+                return fn(*args, **kwargs)
+            except BackendUnavailableError:
+                if attempt >= self.max_attempts:
+                    self.exhausted += 1
+                    _C_EXHAUSTED.inc()
+                    raise
+                self.backoff(attempt)
+                attempt += 1

@@ -25,7 +25,8 @@ from .codec import (FORMAT_VERSION, decode_master, decode_record,
                     decode_segment, decode_segment_header, decode_snapshot,
                     encode_master, encode_record, encode_segment,
                     encode_snapshot)
-from .errors import (BackendMissingError, CorruptSegmentError, MediaError,
+from .errors import (BackendMissingError, BackendUnavailableError,
+                     CorruptSegmentError, MediaError, TransientMediaError,
                      UnknownFormatError)
 
 _LAZY = ("cold_restore", "cold_restore_replica", "archive_log_view",
@@ -36,7 +37,8 @@ __all__ = [
     "FORMAT_VERSION", "encode_record", "decode_record", "encode_segment",
     "decode_segment", "decode_segment_header", "encode_snapshot",
     "decode_snapshot", "encode_master", "decode_master",
-    "MediaError", "CorruptSegmentError", "UnknownFormatError",
+    "MediaError", "TransientMediaError", "BackendUnavailableError",
+    "CorruptSegmentError", "UnknownFormatError",
     "BackendMissingError", *_LAZY,
 ]
 

@@ -58,10 +58,19 @@ class MediaBackend:
         return self.get(name)[:n]
 
     def exists(self, name: str) -> bool:
+        """Boolean probe: is ``name`` present?
+
+        Classification-correct: only a *definite* absence
+        (``BackendMissingError``) maps to False.  A transient outage
+        (``BackendUnavailableError``) propagates — the backend did not
+        answer, and reporting "missing" would let retention or restore
+        act on data loss that never happened.  Corruption likewise
+        propagates (this probe reads bytes, it does not validate them,
+        but a backend that detects a torn blob must stay loud)."""
         try:
             self.get_head(name, 1)
             return True
-        except KeyError:
+        except BackendMissingError:
             return False
 
     def _init_metrics(self, kind: str) -> None:

@@ -5,12 +5,39 @@ the exact byte-faithful record stream must fail loudly.  A short or
 corrupt segment silently yielding fewer records would make recovery,
 restore or shipping *look* successful while losing committed work — the
 one failure mode a recovery system must never have.
+
+The hierarchy encodes the retry classification the whole stack obeys:
+
+  transient  ``TransientMediaError`` / ``BackendUnavailableError`` — the
+             *backend* failed (timeout, throttle, connection loss), the
+             bytes themselves are presumed intact.  The only errors a
+             ``RetryPolicy`` may ever swallow-and-retry.
+  corrupt    ``CorruptSegmentError`` / ``UnknownFormatError`` — the bytes
+             came back and are wrong.  Retrying re-reads the same wrong
+             bytes; these must always propagate (reprolint
+             ``loud-corruption`` / ``retry-discipline``).
+  missing    ``BackendMissingError`` — a definite answer: the blob is not
+             there.  Neither transient nor corrupt; ``exists`` maps it to
+             False, everything else propagates it.
 """
 from __future__ import annotations
 
 
 class MediaError(RuntimeError):
     """Base class for durable-media failures."""
+
+
+class TransientMediaError(MediaError):
+    """The backend, not the bytes, failed — the one branch of the
+    hierarchy a bounded retry may legitimately absorb."""
+
+
+class BackendUnavailableError(TransientMediaError):
+    """The backend could not serve the operation right now: timeout,
+    throttle, dropped connection, injected outage (``FaultyBackend``).
+    The blob's bytes are presumed intact; retrying with backoff is the
+    correct response, and ``faults.RetryPolicy`` is the mediator every
+    catcher must go through (reprolint ``retry-discipline``)."""
 
 
 class CorruptSegmentError(MediaError):

@@ -39,19 +39,27 @@ from .backend import MediaBackend, open_backend
 BackendLike = Union[str, Path, MediaBackend]
 
 
-def load_media(where: BackendLike, *, cache_segments: int = 8
+def load_media(where: BackendLike, *, cache_segments: int = 8, retry=None
                ) -> tuple[MediaBackend, LogArchive, SnapshotStore]:
     """Open a backend and rebuild the archive + snapshot store from it —
-    the shared first step of every cold entry point."""
+    the shared first step of every cold entry point.
+
+    ``retry`` (a ``faults.RetryPolicy``) mediates every backend *read*
+    this load and the archive it returns perform: a transient outage
+    costs a bounded, deterministic backoff instead of a failed restore.
+    Corruption never retries — the classification contract lives in
+    ``RetryPolicy.call``."""
     backend = open_backend(where)
-    archive = LogArchive.load(backend, cache_segments=cache_segments)
-    store = SnapshotStore.load(backend, archive=archive)
+    archive = LogArchive.load(backend, cache_segments=cache_segments,
+                              retry=retry)
+    store = SnapshotStore.load(backend, archive=archive, retry=retry)
     return backend, archive, store
 
 
 def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
                  *, cache_segments: int = 8, streaming: bool = True,
                  apply_window: int = 1024, progress: object = None,
+                 retry=None,
                  **db_kwargs: object) -> tuple[Database, RestoreStats]:
     """Point-in-time restore in a fresh process: a writable ``Database``
     equal to the committed prefix <= ``target_lsn``, built from the
@@ -63,10 +71,22 @@ def cold_restore(where: BackendLike, target_lsn: Optional[LSN] = None,
     apply engine every ``apply_window`` records, so peak memory is
     (window + in-flight straddlers + LRU), independent of archive length —
     an archive much larger than RAM restores without materializing it.
-    ``streaming=False`` keeps the materializing reference path."""
+    ``streaming=False`` keeps the materializing reference path.
+
+    A restore should survive a flaky backend but never a corrupt one:
+    ``retry`` defaults to a fresh ``faults.RetryPolicy`` so transient
+    ``BackendUnavailableError``s absorb into bounded backoff, while
+    corruption (torn segment, torn snapshot) stays first-throw loud.
+    Pass ``RetryPolicy(max_attempts=1)`` to effectively disable retries."""
+    if retry is None:
+        # call-time import: media.restore already sits above archive, and
+        # faults sits above media — importing here keeps module-load DAG flat
+        from ..faults.retry import RetryPolicy
+        retry = RetryPolicy()
     with _TRACER.span("cold_restore", streaming=streaming) as sp:
         backend, archive, store = load_media(where,
-                                             cache_segments=cache_segments)
+                                             cache_segments=cache_segments,
+                                             retry=retry)
         if target_lsn is None:
             target_lsn = archive.archived_upto
             if target_lsn == 0:

@@ -389,6 +389,40 @@ class Replica(ApplyEngine):
         self._reset_volatile()
         shipper.subscribe(self.replica_id, self.resume_lsn)
 
+    def catch_up(self, shipper: LogShipper, *, retry=None) -> int:
+        """Drain ``shipper`` into this replica, absorbing transient backend
+        outages (cold shipping cursors read through the archive's backend)
+        by backing off and re-subscribing from the durable resume point —
+        re-shipped records dedup through the ordinary overlap/duplicate
+        machinery, so convergence to the committed oracle is unaffected by
+        where the outage struck.  Bounded: after ``retry.max_attempts``
+        consecutive failed rounds the last transient error propagates.
+        Returns ops applied.  ``retry`` is a ``faults.RetryPolicy``
+        (default-constructed when omitted)."""
+        # call-time imports: replication must not pull faults/media in at
+        # module load (the dependency arrow points the other way)
+        from ..faults.retry import RetryPolicy
+        from ..media.errors import BackendUnavailableError
+        if retry is None:
+            retry = RetryPolicy()
+        applied = 0
+        failures = 0
+        while True:
+            try:
+                batch = shipper.poll(self.replica_id)
+                applied += self.apply_batch(batch)
+            except BackendUnavailableError:
+                failures += 1
+                if failures >= retry.max_attempts:
+                    raise
+                retry.backoff(failures)
+                _FLIGHT.record("repl.resubscribe", failures)
+                self.resubscribe(shipper)
+                continue
+            failures = 0
+            if not batch.has_more:
+                return applied
+
     # --------------------------------------------------------------- reseed
     def reseed_from(self, snapshot) -> None:
         """Replace this standby's entire local database with a fuzzy

@@ -69,10 +69,16 @@ class LogShipper:
     """
 
     def __init__(self, source: Union[LogManager, object],
-                 batch_records: int = 256):
+                 batch_records: int = 256, retry=None):
         self.log: LogManager = source if isinstance(source, LogManager) \
             else source.log
         self.batch_records = batch_records
+        # a ``faults.RetryPolicy``: when shipping reads through a spliced
+        # archive (cold cursor), a transient backend outage under
+        # scan_stable retries bounded instead of failing the poll.  The
+        # cursor only advances after a successful scan, so a failed poll
+        # re-ships nothing and loses nothing.
+        self.retry = retry
         self.cursors: dict[str, LSN] = {}
         self.shipped_records = 0
         self.polls = 0
@@ -135,7 +141,10 @@ class LogShipper:
         done = False
         while not done:
             try:
-                chunk, _ = self.log.scan_stable(nxt, 64)
+                if self.retry is None:
+                    chunk, _ = self.log.scan_stable(nxt, 64)
+                else:
+                    chunk, _ = self.retry.call(self.log.scan_stable, nxt, 64)
             except TruncatedLogError:
                 # the cursor fell below the retention horizon (segments
                 # pruned underneath a stalled subscriber): shipping cannot

@@ -1,0 +1,348 @@
+"""Faults package: deterministic injection, retry classification, and the
+degraded modes the retry layer buys — archiver outages, flaky shipping,
+flush failures that must not take the pool down.
+"""
+import random
+
+import pytest
+
+from repro.archive import Archiver, LogArchive, SnapshotStore
+from repro.core import Database, committed_state_oracle, make_key
+from repro.faults import (ALL_KINDS, KIND_CRASH, KIND_LATENCY, KIND_LOST,
+                          KIND_TORN_CRASH, KIND_UNAVAILABLE, FaultPlan,
+                          FaultSpec, FaultyBackend, InjectedCrash,
+                          RetryPolicy, SplitMix64, make_faulty)
+from repro.media import (BackendMissingError, BackendUnavailableError,
+                         CorruptSegmentError, MemoryBackend)
+from repro.replication import LogShipper, Replica
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # image has no hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _drive(backend, ops=40):
+    """A fixed op script; returns the injected trace."""
+    for i in range(ops):
+        name = f"blob/{i % 7}"
+        try:
+            if i % 3 == 0:
+                backend.put(name, bytes([i % 251]) * 32)
+            elif i % 3 == 1:
+                try:
+                    backend.get(name)
+                except BackendMissingError:
+                    pass
+            else:
+                backend.list("blob/")
+        except (BackendUnavailableError, InjectedCrash):
+            pass
+    return list(backend.plan.injected)
+
+
+# ------------------------------------------------------------ determinism
+def test_same_seed_same_campaign():
+    for seed in (0, 1, 7, 12345, 2**63):
+        p1, p2 = FaultPlan.generate(seed), FaultPlan.generate(seed)
+        assert p1.faults == p2.faults
+        t1 = _drive(FaultyBackend(MemoryBackend(), p1))
+        t2 = _drive(FaultyBackend(MemoryBackend(), p2))
+        assert t1 == t2
+    assert FaultPlan.generate(1).faults != FaultPlan.generate(2).faults
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**64 - 1))
+    def test_seed_fully_determines_injection(seed):
+        t1 = _drive(FaultyBackend(MemoryBackend(), FaultPlan.generate(seed)))
+        t2 = _drive(FaultyBackend(MemoryBackend(), FaultPlan.generate(seed)))
+        assert t1 == t2
+
+
+def test_splitmix_is_stable():
+    rng = SplitMix64(42)
+    first = [rng.next_u64() for _ in range(4)]
+    assert first == [SplitMix64(42).next_u64() if i == 0 else v
+                     for i, v in enumerate(first)]   # re-seed reproduces
+    assert all(0.0 <= SplitMix64(s).uniform() < 1.0 for s in range(50))
+
+
+# ------------------------------------------------------------- fault kinds
+def test_unavailable_then_retry_succeeds():
+    fb = make_faulty(MemoryBackend(),
+                     FaultSpec(op="put", kind=KIND_UNAVAILABLE, at=1,
+                               count=2))
+    retry = RetryPolicy(max_attempts=4)
+    retry.call(fb.put, "a", b"x")                  # two failures absorbed
+    assert fb.inner.get("a") == b"x"
+    assert retry.retries == 2 and retry.slept_ms > 0
+
+
+def test_latency_charges_clock():
+    class Clock:
+        ms = 0.0
+
+        def work(self, ms):
+            self.ms += ms
+
+    clock = Clock()
+    fb = make_faulty(MemoryBackend(),
+                     FaultSpec(op="get", kind=KIND_LATENCY, at=1,
+                               latency_ms=7.5),
+                     clock=clock)
+    fb.put("a", b"x")
+    assert fb.get("a") == b"x"
+    assert clock.ms == 7.5 and fb.injected_latency_ms == 7.5
+
+
+def test_torn_crash_persists_prefix_then_disarms():
+    fb = make_faulty(MemoryBackend(),
+                     FaultSpec(op="put", kind=KIND_TORN_CRASH, at=2,
+                               torn_frac=0.25))
+    fb.put("a", b"A" * 100)
+    with pytest.raises(InjectedCrash):
+        fb.put("b", b"B" * 100)
+    assert fb.inner.get("b") == b"B" * 25          # the torn prefix landed
+    assert fb.plan.crashed
+    fb.put("c", b"C")                              # disarmed: clean again
+    assert fb.get("c") == b"C"
+
+
+def test_injected_crash_evades_broad_handlers():
+    fb = make_faulty(MemoryBackend(),
+                     FaultSpec(op="put", kind=KIND_CRASH, at=1))
+    with pytest.raises(InjectedCrash):
+        try:
+            fb.put("a", b"x")
+        except Exception:                          # cleanup-style handler
+            pytest.fail("InjectedCrash must not be an Exception")
+    assert not isinstance(InjectedCrash("put", "a", 1), Exception)
+
+
+def test_lost_blob_stays_lost_until_rewritten():
+    fb = make_faulty(MemoryBackend(),
+                     FaultSpec(op="put", kind=KIND_LOST, at=2))
+    fb.put("a", b"v1")
+    fb.put("a", b"v2")                             # this write is lost
+    with pytest.raises(BackendMissingError):
+        fb.get("a")
+    assert not fb.exists("a")                      # definite absence
+    fb.put("a", b"v3")                             # resurrection
+    assert fb.get("a") == b"v3"
+
+
+def test_all_kinds_have_distinct_codes():
+    from repro.faults import KIND_CODE
+    assert sorted(KIND_CODE.values()) == list(range(1, len(ALL_KINDS) + 1))
+
+
+# -------------------------------------------------------- classification
+def test_exists_maps_only_definite_absence():
+    be = MemoryBackend()
+    assert be.exists("nope") is False
+    fb = make_faulty(MemoryBackend(),
+                     FaultSpec(op="get_head", kind=KIND_UNAVAILABLE, at=1))
+    fb.put("a", b"x")
+    with pytest.raises(BackendUnavailableError):
+        fb.exists("a")          # an outage is NOT "absent" — it propagates
+
+
+def test_retry_never_touches_corruption():
+    retry = RetryPolicy(max_attempts=5)
+
+    def corrupt():
+        raise CorruptSegmentError("CRC mismatch")
+
+    with pytest.raises(CorruptSegmentError):
+        retry.call(corrupt)
+    assert retry.retries == 0                      # first throw, no retry
+
+
+def test_retry_is_bounded_and_deterministic():
+    calls = {"n": 0}
+
+    def always_down():
+        calls["n"] += 1
+        raise BackendUnavailableError("down")
+
+    retry = RetryPolicy(max_attempts=3, seed=9)
+    with pytest.raises(BackendUnavailableError):
+        retry.call(always_down)
+    assert calls["n"] == 3 and retry.exhausted == 1
+    # same (seed, attempt) -> same schedule; delays stay capped
+    a = [RetryPolicy(seed=5).delay_ms(i) for i in range(1, 8)]
+    b = [RetryPolicy(seed=5).delay_ms(i) for i in range(1, 8)]
+    assert a == b
+    assert all(d <= 250.0 * 1.25 for d in a)
+
+
+# ------------------------------------------------------- degraded: archiver
+def _primary(n_txns=30):
+    rng = random.Random(7)
+    db = Database(page_size=2048, cache_pages=256)
+    rows = [(f"k{i:03d}".encode(), bytes([i % 251]) * 16) for i in range(40)]
+    db.load_table("t", rows)
+    base = {make_key("t", k): v for k, v in rows}
+    for _ in range(n_txns):
+        k = rows[rng.randrange(len(rows))][0]
+        db.run_txn([("update", "t", k, bytes([rng.randrange(251)]) * 12)])
+    return db, base
+
+
+def test_archiver_outage_degrades_then_seals_backlog():
+    db, base = _primary()
+    fb = FaultyBackend(MemoryBackend())
+    snaps = SnapshotStore()
+    arch = Archiver(db, archive=LogArchive(segment_records=16, backend=fb),
+                    snapshots=snaps, retry=RetryPolicy(max_attempts=2))
+    snaps.take(db)
+    # outage begins after the snapshot landed: every put now fails
+    fb.plan = FaultPlan(faults=(
+        FaultSpec(op="put", kind=KIND_UNAVAILABLE, at=1, count=1000),))
+    r1 = arch.run_once()
+    assert r1["ok"] is False and r1["truncated"] == 0
+    assert arch.consecutive_failures == 1
+    r2 = arch.run_once()
+    assert r2["ok"] is False and arch.consecutive_failures == 2
+    assert arch.archive.archived_upto == 0         # nothing claimed durable
+    fb.plan.disarm()                               # outage ends
+    r3 = arch.run_once()
+    assert r3["ok"] is True and arch.consecutive_failures == 0
+    assert r3["sealed"] > 0                        # whole backlog sealed
+    assert arch.archive.archived_upto >= db.log.stable_lsn - 2
+    assert fb.inner.list("seg/")                   # segments really landed
+
+
+def test_prune_survives_transient_outage():
+    db, _ = _primary()
+    fb = FaultyBackend(MemoryBackend())
+    snaps = SnapshotStore()
+    arch = Archiver(db, archive=LogArchive(segment_records=16, backend=fb),
+                    snapshots=snaps, retry=RetryPolicy(max_attempts=3))
+    snaps.take(db)
+    arch.run_once()
+    for _ in range(10):
+        db.run_txn([("update", "t", b"k001", b"zz")])
+    snaps.take(db)
+    arch.run_once()
+    fb.plan = FaultPlan(faults=(
+        FaultSpec(op="delete", kind=KIND_UNAVAILABLE, at=1),))
+    out = arch.prune(keep_snapshots=1)             # one flaky delete absorbed
+    assert out["snapshots_dropped"] == 1
+
+
+# ----------------------------------------------- degraded: shipping/replica
+def _sealed_primary_with_faulty_segments():
+    """Primary whose sealed prefix lives on a FaultyBackend and whose
+    in-memory log is truncated — shipping from LSN 1 must read segments.
+    All state is *logged* (inserts, no bulk load) so a fresh replica can
+    converge to the full oracle from the archive alone."""
+    rng = random.Random(7)
+    db = Database(page_size=2048, cache_pages=256)
+    db.load_table("t", [])
+    rows = [(f"k{i:03d}".encode(), bytes([i % 251]) * 16) for i in range(40)]
+    for i in range(0, 40, 10):
+        db.run_txn([("insert", "t", k, v) for k, v in rows[i:i + 10]])
+    for _ in range(30):
+        k = rows[rng.randrange(len(rows))][0]
+        db.run_txn([("update", "t", k, bytes([rng.randrange(251)]) * 12)])
+    fb = FaultyBackend(MemoryBackend())
+    snaps = SnapshotStore()
+    arch = Archiver(db, archive=LogArchive(segment_records=16, backend=fb),
+                    snapshots=snaps, retry=RetryPolicy(max_attempts=3))
+    snaps.take(db)
+    arch.run_once()
+    assert db.log._base > 0                        # splice reads are real
+    return db, {}, fb
+
+
+def test_shipper_poll_retries_transient_segment_reads():
+    db, base, fb = _sealed_primary_with_faulty_segments()
+    # without a policy a segment-read outage is loud at the caller
+    # (this must run first: a successful read caches the segment decode)
+    shipper2 = LogShipper(db.log)
+    shipper2.subscribe("r2", db.log.retained_lsn)
+    fb.plan = FaultPlan(faults=(
+        FaultSpec(op="get", kind=KIND_UNAVAILABLE, at=1, count=2),))
+    with pytest.raises(BackendUnavailableError):
+        shipper2.poll("r2")
+    # with a policy the same outage is absorbed
+    shipper = LogShipper(db.log, retry=RetryPolicy(max_attempts=3))
+    shipper.subscribe("r", db.log.retained_lsn)
+    fb.plan = FaultPlan(faults=(
+        FaultSpec(op="get", kind=KIND_UNAVAILABLE, at=1, count=2),))
+    batch = shipper.poll("r")                      # both blips absorbed
+    assert batch.records
+
+
+def test_replica_catch_up_converges_through_outages():
+    db, base, fb = _sealed_primary_with_faulty_segments()
+    shipper = LogShipper(db.log, batch_records=8)
+    rep = Replica("r", page_size=4096, cache_pages=128)
+    rep.resubscribe(shipper)
+    # recurring single-op outages spread over the catch-up; spaced so
+    # consecutive failed polls stay under the retry budget (a failed
+    # segment read is not cached, so a retried poll re-reads it at the
+    # next op index — adjacent windows would chain failures)
+    fb.plan = FaultPlan(faults=tuple(
+        FaultSpec(op="get", kind=KIND_UNAVAILABLE, at=a)
+        for a in (1, 4, 9, 14, 21)))
+    rep.catch_up(shipper, retry=RetryPolicy(max_attempts=4))
+    fb.plan.disarm()
+    assert rep.user_state() == committed_state_oracle(db.crash(), base)
+
+
+def test_replica_catch_up_bounded_on_permanent_outage():
+    db, base, fb = _sealed_primary_with_faulty_segments()
+    shipper = LogShipper(db.log, batch_records=8)
+    rep = Replica("r", cache_pages=128)
+    rep.resubscribe(shipper)
+    fb.plan = FaultPlan(faults=(
+        FaultSpec(op="get", kind=KIND_UNAVAILABLE, at=1, count=10_000),))
+    retry = RetryPolicy(max_attempts=3)
+    with pytest.raises(BackendUnavailableError):
+        rep.catch_up(shipper, retry=retry)
+    assert retry.retries <= retry.max_attempts     # bounded, not a spin
+
+
+# --------------------------------------------------- degraded: buffer pool
+def test_flush_failure_keeps_page_dirty_and_readable():
+    fb = FaultyBackend(MemoryBackend())
+    db = Database(page_size=1024, cache_pages=64, page_backend=fb,
+                  media_retry=RetryPolicy(max_attempts=2))
+    rows = [(f"k{i:03d}".encode(), bytes([i % 251]) * 24) for i in range(60)]
+    db.load_table("t", rows)
+    db.run_txn([("update", "t", b"k001", b"new")])
+    pool = db.dc.pool
+    dirty = pool.dirty_pids()
+    assert dirty
+    fb.plan = FaultPlan(faults=(
+        FaultSpec(op="put", kind=KIND_UNAVAILABLE, at=1, count=1000),))
+    with pytest.raises(BackendUnavailableError):
+        pool.flush_page(dirty[0])
+    assert pool.flush_failures > 0
+    assert dirty[0] in pool.dirty_pids()           # nothing lost, still dirty
+    assert db.dc.read("t", b"k001") == b"new"      # and still serving reads
+    # background flushing degrades per-page instead of raising
+    assert pool.flush_some(4) == 0
+    fb.plan.disarm()
+    assert pool.flush_some(64) > 0                 # outage over: drains
+    assert dirty[0] not in pool.dirty_pids()
+
+
+def test_eviction_raises_only_when_all_dirty_all_failing():
+    fb = FaultyBackend(MemoryBackend())
+    db = Database(page_size=1024, cache_pages=4, page_backend=fb,
+                  media_retry=RetryPolicy(max_attempts=2))
+    db.load_table("t", [(b"k0", b"v")])
+    fb.plan = FaultPlan(faults=(
+        FaultSpec(op="put", kind=KIND_UNAVAILABLE, at=1, count=10_000),))
+    with pytest.raises(BackendUnavailableError):
+        for i in range(400):                       # overflow the 4-frame pool
+            db.run_txn([("insert", "t", f"x{i:04d}".encode(), b"y" * 64)])
+    fb.plan.disarm()
+    assert db.dc.read("t", b"x0000") == b"y" * 64  # pool survived the raise

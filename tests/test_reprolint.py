@@ -671,7 +671,8 @@ def test_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for rule in ("codec-parity", "loud-corruption", "wal-discipline",
                  "sorted-stream", "tracer-guard", "metric-name",
-                 "determinism", "dataclass-hygiene", "packed-mutation"):
+                 "determinism", "dataclass-hygiene", "packed-mutation",
+                 "retry-discipline"):
         assert rule in out
 
 
@@ -746,6 +747,94 @@ def test_packed_mutation_pragma_suppresses(tmp_path):
             page.records[k] = v
         """})
     assert r.ok and len(suppressed(r, "packed-mutation")) == 1
+
+
+# ======================================================= retry-discipline
+def test_retry_mixed_handler_fires(tmp_path):
+    # one handler treating "retry me" and "stop everything" alike
+    r = lint(tmp_path, {"src/repro/launch/x.py": """\
+        def f(g):
+            try:
+                return g()
+            except (BackendUnavailableError, CorruptSegmentError):
+                raise
+        """})
+    v = fired(r, "retry-discipline")
+    assert len(v) == 1 and "CorruptSegmentError" in v[0].message
+
+
+def test_retry_hand_rolled_while_loop_fires(tmp_path):
+    r = lint(tmp_path, {"src/repro/launch/x.py": """\
+        def f(g):
+            while True:
+                try:
+                    return g()
+                except BackendUnavailableError:
+                    continue
+        """})
+    v = fired(r, "retry-discipline")
+    assert len(v) == 1 and "RetryPolicy" in v[0].message
+
+
+def test_retry_loop_with_policy_backoff_is_clean(tmp_path):
+    # the replica.catch_up idiom: bounded by max_attempts, waits via the
+    # policy's seeded backoff — sanctioned machinery, not hand-rolled
+    r = lint(tmp_path, {"src/repro/launch/x.py": """\
+        def f(g, retry):
+            failures = 0
+            while True:
+                try:
+                    return g()
+                except BackendUnavailableError:
+                    failures += 1
+                    if failures >= retry.max_attempts:
+                        raise
+                    retry.backoff(failures)
+        """})
+    assert r.ok
+
+
+def test_retry_for_loop_degradation_is_clean(tmp_path):
+    # the background-flusher idiom: per-item degradation in a for loop
+    # is bounded by construction
+    r = lint(tmp_path, {"src/repro/launch/x.py": """\
+        def f(items, g):
+            done = 0
+            for item in items:
+                try:
+                    g(item)
+                except BackendUnavailableError:
+                    continue
+                done += 1
+            return done
+        """})
+    assert r.ok
+
+
+def test_retry_transient_alone_outside_loop_is_clean(tmp_path):
+    # classifying a transient error once (degrade-and-report) is the
+    # archiver idiom, not a retry loop
+    r = lint(tmp_path, {"src/repro/launch/x.py": """\
+        def f(g):
+            try:
+                return g()
+            except BackendUnavailableError:
+                return None
+        """})
+    assert r.ok
+
+
+def test_retry_pragma_suppresses(tmp_path):
+    r = lint(tmp_path, {"src/repro/launch/x.py": """\
+        def f(g):
+            while True:
+                try:
+                    return g()
+                # reprolint: allow(retry-discipline) — bounded by caller's deadline
+                except BackendUnavailableError:
+                    continue
+        """})
+    assert r.ok and len(suppressed(r, "retry-discipline")) == 1
 
 
 # ============================================================== meta-test

@@ -1,0 +1,104 @@
+"""Bounded crash-point torture for tier-1.
+
+A strided slice of the full sweep (``make torture-full`` / the CI torture
+job runs every point): crash the scripted workload at a sample of backend
+operations — always including the first op of every phase — recover both
+ways, and require oracle-equality or documented loud death.  Plus targeted
+probes the sweep's sampling might miss: a torn seal write must never
+produce a silently short archive, and the profiling pass must keep
+covering every phase the sweep's contract names.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from repro.core.log import TruncatedLogError                  # noqa: E402
+from repro.faults import (KIND_CRASH, KIND_TORN_CRASH,        # noqa: E402
+                          FaultPlan, FaultSpec, InjectedCrash, RetryPolicy)
+from repro.media import (CorruptSegmentError,                 # noqa: E402
+                         UnknownFormatError, cold_restore)
+from tools import torture                                     # noqa: E402
+from tools.torture import (check_crash_point,                 # noqa: E402
+                           check_transient_point, profile, run_workload,
+                           shadow_oracle, sweep)
+
+EXPECTED_PHASES = ["load", "txns1", "snapshot1", "seal1", "txns2",
+                   "checkpoint", "snapshot2", "seal2", "prune", "txns3",
+                   "seal3", "ship"]
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """One fault-free profiling pass shared by the module (it asserts the
+    baseline recover/replica/cold-restore equalities internally)."""
+    return profile()
+
+
+def test_profile_covers_every_phase(baseline):
+    names = [p for p, _ in baseline.marks]
+    assert [p for p in names if p in EXPECTED_PHASES] == EXPECTED_PHASES, \
+        f"workload lost a phase: {names}"
+    assert baseline.plan.total_ops > 40     # thin workloads sweep nothing
+
+
+def test_strided_crash_sweep(baseline):
+    total = baseline.plan.total_ops
+    points = sorted(set(range(1, total + 1, 9))
+                    | {i for _, i in baseline.marks if i <= total})
+    matrix, violations = sweep(points, [KIND_CRASH, KIND_TORN_CRASH])
+    assert violations == []
+    phases_hit = {phase for (phase, _, _) in matrix}
+    assert len(phases_hit & set(EXPECTED_PHASES)) >= 8
+    # a clean crash must never go loud — loud is the torn-write budget
+    assert not any(kind == KIND_CRASH and outcome.endswith(":loud")
+                   for (_, kind, outcome) in matrix)
+
+
+def test_transient_outage_mid_seal(baseline):
+    seal1 = dict(baseline.marks)["seal1"]
+    phase, live, cold = check_transient_point(seal1)
+    assert (live, cold) == ("ok", "ok")
+
+
+def test_crash_point_is_deterministic(baseline):
+    at = dict(baseline.marks)["txns2"]
+    assert check_crash_point(at, KIND_CRASH) == \
+        check_crash_point(at, KIND_CRASH)
+
+
+def test_torn_seal_write_is_loud_never_short():
+    """Tear each of the first six segment puts (one run per tear).  A
+    torn segment the retained snapshot fully covers is legally
+    restorable — but then the state must equal the committed oracle at
+    the reported target; a torn segment that redo *does* need must raise
+    (CRC / truncation / unindexable archive).  Never a silently short
+    restore — and across the set, at least one tear must actually land
+    in redo's path and go loud, else the probe proves nothing."""
+    saw_loud = False
+    for at in range(1, 7):
+        plan = FaultPlan(faults=(FaultSpec(
+            op="put", kind=KIND_TORN_CRASH, at=at, name_prefix="seg/"),))
+        try:
+            run_workload(plan)
+            break                      # fewer than ``at`` segment puts
+        except InjectedCrash:
+            pass
+        ctx = torture._last_ctx
+        assert ctx.db is not None and ctx.base is not None
+        try:
+            db, stats = cold_restore(ctx.backend, page_size=4096,
+                                     retry=RetryPolicy(max_attempts=1))
+        except (CorruptSegmentError, UnknownFormatError,
+                TruncatedLogError, ValueError):
+            saw_loud = True
+            continue
+        image = ctx.db.crash()
+        assert dict(db.scan_all()) == \
+            shadow_oracle(ctx, image, upto_lsn=stats.target_lsn), \
+            f"torn seg put #{at}: silently wrong restore"
+    assert saw_loud, "no torn segment ever reached redo — probe is vacuous"

@@ -9,6 +9,7 @@ from .determinism import DeterminismRule
 from .loud_corruption import LoudCorruptionRule
 from .metric_naming import MetricNamingRule
 from .packed_mutation import PackedMutationRule
+from .retry_discipline import RetryDisciplineRule
 from .sorted_stream import SortedStreamRule
 from .tracer_guard import TracerGuardRule
 from .wal_discipline import WalDisciplineRule
@@ -17,6 +18,7 @@ ALL_RULES = (
     CodecParityRule,
     LoudCorruptionRule,
     WalDisciplineRule,
+    RetryDisciplineRule,
     SortedStreamRule,
     PackedMutationRule,
     TracerGuardRule,

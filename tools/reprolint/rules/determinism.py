@@ -25,7 +25,8 @@ from typing import Iterable, List
 from ..engine import FileCtx, Rule, Violation
 
 ENGINE_DIRS = ("src/repro/core/", "src/repro/media/",
-               "src/repro/archive/", "src/repro/replication/")
+               "src/repro/archive/", "src/repro/replication/",
+               "src/repro/faults/")
 WALL_CLOCK = {("time", "time"), ("time", "time_ns")}
 DATETIME_NOW = {("datetime", "now"), ("datetime", "utcnow"),
                 ("datetime", "today")}

@@ -31,7 +31,8 @@ CORRUPTION_BASES = {"RuntimeError", "LookupError"}
 BROAD = {"Exception", "BaseException"}
 
 ENGINE_DIRS = ("src/repro/core/", "src/repro/media/",
-               "src/repro/archive/", "src/repro/replication/")
+               "src/repro/archive/", "src/repro/replication/",
+               "src/repro/faults/")
 SRC_PREFIX = "src/repro/"
 
 

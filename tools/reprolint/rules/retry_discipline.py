@@ -1,0 +1,91 @@
+"""retry-discipline: transient errors retry through policy, nothing else.
+
+The fault layer's classification contract (PR 10) has exactly one
+retryable class: ``BackendUnavailableError`` (base
+``TransientMediaError``) — the backend *did nothing*, so re-issuing the
+call is safe.  Corruption errors mean the backend *returned damaged
+bytes*, and retrying those either loops forever or, worse, papers over
+a real torn write.  Two ways code drifts off that contract:
+
+  * one ``except`` clause catching a transient error *together with* a
+    corruption error (or a broad base) — the handler body necessarily
+    treats "retry me" and "stop everything" the same way;
+  * a hand-rolled retry loop: ``except BackendUnavailableError`` inside
+    a ``while`` with no ``RetryPolicy`` in sight.  Unbounded hand-rolled
+    loops spin forever through a dead backend and, without the seeded
+    backoff, make fault campaigns non-reproducible.  ``for`` loops are
+    exempt — iterating items and degrading per item (the background
+    flusher idiom) is bounded by construction.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import body_names, enclosing_function, exception_names
+from ..engine import FileCtx, Rule, Violation
+
+TRANSIENT = {"BackendUnavailableError", "TransientMediaError"}
+#: never-retry classes (and their shared base): one handler must not
+#: treat these and a transient outage alike
+NON_RETRYABLE = {"CorruptSegmentError", "UnknownFormatError",
+                 "TruncatedLogError", "PageCorruptError", "MediaError",
+                 "Exception", "BaseException"}
+#: a function that constructs/receives a RetryPolicy or calls its
+#: seeded backoff is using the sanctioned machinery, not hand-rolling
+POLICY_MARKERS = {"RetryPolicy", "backoff"}
+
+SRC_PREFIX = "src/repro/"
+
+
+class RetryDisciplineRule(Rule):
+    name = "retry-discipline"
+    invariant = ("only BackendUnavailableError is retryable, and retry "
+                 "loops go through the seeded RetryPolicy — never a "
+                 "hand-rolled while, never mixed with corruption errors")
+
+    def check_file(self, ctx: FileCtx) -> Iterable[Violation]:
+        if ctx.tree is None or not ctx.path.startswith(SRC_PREFIX):
+            return []
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            names = set(exception_names(node))
+            transient = names & TRANSIENT
+            if not transient:
+                continue
+            mixed = names & NON_RETRYABLE
+            if mixed:
+                out.append(Violation(
+                    self.name, ctx.path, node.lineno,
+                    f"one handler catches {', '.join(sorted(transient))} "
+                    f"together with {', '.join(sorted(mixed))} — a "
+                    "transient outage retries, corruption never does; "
+                    "classify them in separate handlers"))
+                continue
+            if self._in_while(node, ctx.parents):
+                func = enclosing_function(node, ctx.parents)
+                markers = body_names(func) if func is not None else set()
+                if not markers & POLICY_MARKERS:
+                    out.append(Violation(
+                        self.name, ctx.path, node.lineno,
+                        "hand-rolled retry loop: "
+                        f"{', '.join(sorted(transient))} caught inside a "
+                        "while loop with no RetryPolicy — unbounded spins "
+                        "and unseeded waits break fault-campaign "
+                        "reproducibility; use faults.RetryPolicy"))
+        return out
+
+    @staticmethod
+    def _in_while(node: ast.AST, parents: dict) -> bool:
+        """Is the handler inside a ``while`` within the same function?"""
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return False
+            if isinstance(cur, ast.While):
+                return True
+            cur = parents.get(cur)
+        return False

@@ -1,0 +1,423 @@
+"""Crash-point torture: crash at EVERY backend operation, recover, compare.
+
+The sweep runs one scripted, fully deterministic workload — load, user
+transactions, fuzzy snapshots, archiver seal/master-save/truncate, prune,
+explicit checkpoint page flushes, and a sharded-replica catch-up with
+epoch barriers — over a ``FaultyBackend`` that carries *all* durable
+artifacts (page blobs, sealed segments, snapshot rows, the master
+pointer).  A profiling pass with an empty ``FaultPlan`` counts the
+backend operations and stamps which workload phase each op index falls
+in; the sweep then re-runs the workload once per injection point with a
+crash (clean or torn-write) scripted at exactly that op, and checks the
+two recovery stories against ``committed_state_oracle``:
+
+  in-process   ``db.crash()`` + ``recover(LOG1, batched)`` — must equal
+               the committed prefix, or (torn-write sweeps only) die
+               loudly on the injected corruption;
+  cold         ``cold_restore`` from the backend alone — must equal the
+               committed prefix at its own target LSN, raise the
+               documented nothing-sealed-yet ``ValueError``, or die
+               loudly on injected corruption.
+
+"Loudly" is a closed list: ``CorruptSegmentError`` / ``UnknownFormatError``
+/ ``TruncatedLogError`` / ``PageCorruptError``.  Any other exception, and
+any silently wrong state, fails the sweep — that is the whole point.
+
+A third sweep scripts *transient* outages (``BackendUnavailableError``)
+at every put/get and requires the workload to complete — retry layers
+absorbing every injection — with the final primary, replica, and cold
+restore all oracle-equal.
+
+Usage:
+  PYTHONPATH=src python tools/torture.py             # bounded default sweep
+  PYTHONPATH=src python tools/torture.py --full      # every point (CI job)
+  PYTHONPATH=src python tools/torture.py --stride 7 --max-points 40
+Exits non-zero on the first contract violation; prints a phase x outcome
+matrix either way.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.archive import Archiver, LogArchive, SnapshotStore
+from repro.core import (Database, Strategy, make_key, recover,
+                        recovered_state)
+from repro.core.log import TruncatedLogError
+from repro.core.pages import PageCorruptError
+from repro.faults import (KIND_CRASH, KIND_TORN_CRASH, KIND_UNAVAILABLE,
+                          FaultPlan, FaultSpec, FaultyBackend, InjectedCrash,
+                          RetryPolicy)
+from repro.media import (CorruptSegmentError, MemoryBackend,
+                         UnknownFormatError, cold_restore)
+from repro.replication import LogShipper, ShardedApplier
+
+#: the only exceptions a post-fault recovery may legally die with — every
+#: one of them names corruption or a documented empty-archive degradation
+LOUD = (CorruptSegmentError, UnknownFormatError, TruncatedLogError,
+        PageCorruptError)
+
+#: ctx of the most recent run_workload call, reachable after an
+#: InjectedCrash unwound it (module-global on purpose: the exception IS
+#: the return path for a crashed workload)
+_last_ctx: Optional["TortureCtx"] = None
+
+N_ROWS = 120
+ROWS = [(f"k{i:04d}".encode(), bytes(((i * 7) % 251,)) * 36)
+        for i in range(N_ROWS)]
+
+
+def _txn_ops(round_no: int, j: int):
+    """Deterministic op mix: mostly updates, some inserts/deletes."""
+    sel = (round_no * 13 + j * 5) % N_ROWS
+    roll = (round_no * 31 + j * 17) % 10
+    if roll < 7:
+        return [("update", "t", ROWS[sel][0],
+                 bytes(((round_no + j) % 251,)) * 30)]
+    if roll < 9:
+        return [("insert", "t", f"x{round_no:03d}{j:02d}".encode(),
+                 bytes(((round_no * j + 3) % 251,)) * 20)]
+    return [("delete", "t", ROWS[sel][0], None)]
+
+
+@dataclass
+class TortureCtx:
+    """Everything the driver needs after an ``InjectedCrash`` unwound the
+    workload: references survive here even though the run did not."""
+    plan: FaultPlan
+    backend: Optional[FaultyBackend] = None
+    db: Optional[Database] = None
+    base: Optional[dict] = None
+    archiver: Optional[Archiver] = None
+    snaps: Optional[SnapshotStore] = None
+    replica: Optional[ShardedApplier] = None
+    marks: list = field(default_factory=list)    # (phase, first op index)
+    ledger: list = field(default_factory=list)   # (commit_lsn, ops) per txn
+    pending: Optional[list] = None               # ops of the txn in flight
+    snap1_target: Optional[int] = None           # LSN pinning snapshot1
+
+    def mark(self, phase: str) -> None:
+        self.marks.append((phase, self.plan.total_ops + 1))
+
+    def phase_of(self, op_index: int) -> str:
+        name = "pre"
+        for phase, first in self.marks:
+            if first <= op_index:
+                name = phase
+        return name
+
+
+def run_workload(plan: FaultPlan, *, retries: bool = False) -> TortureCtx:
+    """The scripted workload.  With ``retries`` every retryable layer gets
+    a ``RetryPolicy`` (the transient sweep); without, layers run with
+    single-attempt policies so a crash sweep is not perturbed by backoff
+    bookkeeping.  Raises ``InjectedCrash`` when the plan says so — the
+    ``TortureCtx`` keeps the references the driver needs afterwards."""
+    global _last_ctx
+    ctx = TortureCtx(plan=plan)
+    _last_ctx = ctx
+    policy = (lambda seed: RetryPolicy(max_attempts=5, seed=seed)) if retries \
+        else (lambda seed: None)
+    faulty = FaultyBackend(MemoryBackend(), plan)
+    ctx.backend = faulty
+
+    ctx.mark("load")
+    db = Database(page_size=1024, cache_pages=12, tracker_interval=20,
+                  bg_flush_per_txn=2, page_backend=faulty,
+                  media_retry=policy(1))
+    ctx.db = db
+    db.load_table("t", ROWS)
+    ctx.base = {make_key("t", k): v for k, v in ROWS}
+
+    arch = LogArchive(segment_records=24, backend=faulty, cache_segments=2,
+                      retry=policy(2))
+    snaps = SnapshotStore()
+    archiver = Archiver(db, archive=arch, snapshots=snaps,
+                        retry=policy(3) or RetryPolicy(max_attempts=1))
+    ctx.archiver, ctx.snaps = archiver, snaps
+
+    def txns(phase, round_no, n):
+        ctx.mark(phase)
+        for j in range(n):
+            # the pending/ledger pair is the oracle's bookkeeping: a txn
+            # whose run_txn never returned may still have committed stably
+            # (the crash can land in post-commit page flushing) — the
+            # driver resolves that boundary via last_stable_commit_lsn
+            ops = _txn_ops(round_no, j)
+            ctx.pending = ops
+            lsn = db.run_txn(ops)
+            ctx.ledger.append((lsn, ops))
+            ctx.pending = None
+
+    def take(phase):
+        ctx.mark(phase)
+        if retries:
+            RetryPolicy(max_attempts=5, seed=4).call(
+                snaps.take, db, chunk_keys=16)
+        else:
+            snaps.take(db, chunk_keys=16)
+
+    txns("txns1", 1, 10)
+    take("snapshot1")
+    ctx.snap1_target = db.log.end_lsn     # pins snapshot1 for the ship phase
+    ctx.mark("seal1")
+    archiver.run_once()
+    txns("txns2", 2, 10)
+    ctx.mark("checkpoint")
+    db.checkpoint()
+    take("snapshot2")
+    ctx.mark("seal2")
+    archiver.run_once()
+    ctx.mark("prune")
+    archiver.prune(keep_snapshots=2)      # keep snapshot1: ship reseeds there
+    txns("txns3", 3, 6)
+    ctx.mark("seal3")
+    archiver.run_once()
+
+    # replica catch-up: reseed at the OLD snapshot (snapshot1) so the
+    # shipping cursor starts below the truncation base and every poll
+    # reads through the archive splice — sealed segments on the faulty
+    # backend — and the sharded applier ends on an epoch barrier
+    ctx.mark("ship")
+    shipper = LogShipper(db, batch_records=32, retry=policy(5))
+    rep = snaps.restore_replica("torture", target_lsn=ctx.snap1_target,
+                                replica_cls=ShardedApplier,
+                                n_shards=2, epoch_txns=4, page_size=4096,
+                                cache_pages=64)
+    ctx.replica = rep
+    rep.resubscribe(shipper)
+    if retries:
+        rep.catch_up(shipper, retry=RetryPolicy(max_attempts=5, seed=6))
+    else:
+        rep.catch_up(shipper, retry=RetryPolicy(max_attempts=1))
+    ctx.mark("barrier")
+    rep.barrier()
+    ctx.mark("done")
+    return ctx
+
+
+# ----------------------------------------------------------------- oracle
+def shadow_oracle(ctx: TortureCtx, image, upto_lsn=None) -> dict:
+    """The committed prefix, computed from the driver's own ledger rather
+    than a log scan — the workload prunes archive segments mid-run, so
+    ``committed_state_oracle``'s replay-from-LSN-1 is (correctly!)
+    impossible afterwards.  The ledger records every txn whose ``run_txn``
+    returned; the one in flight at crash time is included iff the image
+    shows a stable commit NEWER than the last ledgered one (its commit was
+    durable even though the driver never saw the return)."""
+    stable = image.log.last_stable_commit_lsn
+    hi = stable if upto_lsn is None else min(upto_lsn, stable)
+    commits = list(ctx.ledger)
+    last_recorded = commits[-1][0] if commits else 0
+    if ctx.pending is not None and stable > last_recorded:
+        commits.append((stable, ctx.pending))
+    state = dict(ctx.base)
+    for lsn, ops in commits:
+        if lsn > hi:
+            break
+        for verb, table, key, value in ops:
+            k = make_key(table, key)
+            if verb == "delete":
+                state.pop(k, None)
+            else:
+                state[k] = value            # absolute after-image semantics
+    return state
+
+
+# --------------------------------------------------------------- verdicts
+def check_crash_point(at: int, kind: str) -> tuple[str, str, str]:
+    """Re-run the workload with a crash scripted at backend op ``at``;
+    recover both ways.  Returns (phase, in-process outcome, cold outcome);
+    raises AssertionError on any contract violation."""
+    plan = FaultPlan(faults=(FaultSpec(op="*", kind=kind, at=at),))
+    try:
+        ctx = run_workload(plan)
+        # the plan never fired (at > total ops) — nothing to verify
+        return ctx.phase_of(at), "not-reached", "not-reached"
+    except InjectedCrash:
+        ctx = _last_ctx
+    phase = ctx.phase_of(at)
+    if ctx.db is None:
+        return phase, "pre-db", "pre-db"
+    # a crash inside load_table interrupts the *unlogged* bulk build —
+    # the committed-prefix oracle only covers logged operations, so for
+    # those points we require recovery to complete (or die loudly on a
+    # torn blob) without asserting on the partially-built content
+    mid_load = ctx.base is None
+
+    image = ctx.db.crash()
+    oracle = None if mid_load else shadow_oracle(ctx, image)
+
+    # in-process: the paper's own recovery over the crash image
+    try:
+        rec_db, _ = recover(image, Strategy.LOG1, batched=True,
+                            page_size=2048)
+        if oracle is not None:
+            assert recovered_state(rec_db) == oracle, (
+                f"recover() at op {at} ({kind}, {phase}): state diverges "
+                "from the committed oracle")
+        live = "mid-load" if mid_load else "ok"
+    except LOUD:
+        assert kind == KIND_TORN_CRASH, (
+            f"recover() at op {at} ({kind}, {phase}) died loudly with no "
+            "torn write in play — a clean crash must always recover")
+        live = "loud"
+
+    # cold: the dead-primary story, from the backend bytes alone
+    try:
+        restored, stats = cold_restore(ctx.backend, page_size=4096,
+                                       retry=RetryPolicy(max_attempts=1))
+        if oracle is not None:
+            cold_oracle = shadow_oracle(ctx, image,
+                                        upto_lsn=stats.target_lsn)
+            assert dict(restored.scan_all()) == cold_oracle, (
+                f"cold_restore at op {at} ({kind}, {phase}): state "
+                "diverges from the committed oracle at LSN "
+                f"{stats.target_lsn}")
+        cold = "mid-load" if mid_load else "ok"
+    except ValueError:
+        cold = "no-archive"          # documented: nothing sealed yet
+    except LOUD:
+        assert kind == KIND_TORN_CRASH, (
+            f"cold_restore at op {at} ({kind}, {phase}) died loudly with "
+            "no torn write in play")
+        cold = "loud"
+    return phase, live, cold
+
+
+def check_transient_point(at: int) -> tuple[str, str, str]:
+    """Script a 2-op transient outage at ``at`` (puts and gets); the
+    retry-wired workload must complete and stay oracle-equal end to end."""
+    plan = FaultPlan(faults=(
+        FaultSpec(op="put", kind=KIND_UNAVAILABLE, at=at, count=2),
+        FaultSpec(op="get", kind=KIND_UNAVAILABLE, at=at, count=2),
+    ))
+    ctx = run_workload(plan, retries=True)
+    # the workload is over: disarm before the verdicts below clone the
+    # store / cold-restore, else a spec that never reached its window
+    # during the run fires on verification reads instead
+    plan.disarm()
+    if not ctx.plan.injected:
+        return "beyond-end", "not-reached", "not-reached"
+    # ``at`` counts per-op-kind (the Nth put / Nth get); the injected
+    # trace records the *global* op index, which is what phases map
+    phase = ctx.phase_of(ctx.plan.injected[0][0])
+    image = ctx.db.crash()
+    oracle = shadow_oracle(ctx, image)
+    rec_db, _ = recover(image, Strategy.LOG1, batched=True, page_size=2048)
+    assert recovered_state(rec_db) == oracle, (
+        f"transient outage at op {at} ({phase}): post-outage recover "
+        "diverges from the oracle")
+    applied_oracle = shadow_oracle(ctx, image,
+                                   upto_lsn=ctx.replica.applied_lsn)
+    assert ctx.replica.user_state() == applied_oracle, (
+        f"transient outage at op {at} ({phase}): replica diverges from "
+        "the oracle at its applied watermark")
+    restored, stats = cold_restore(ctx.backend, page_size=4096)
+    assert dict(restored.scan_all()) == shadow_oracle(
+        ctx, image, upto_lsn=stats.target_lsn), (
+        f"transient outage at op {at} ({phase}): cold restore diverges")
+    return phase, "ok", "ok"
+
+
+# ------------------------------------------------------------------ driver
+def profile() -> TortureCtx:
+    """Fault-free pass: counts backend ops, stamps phases, and checks the
+    baseline end-state invariants the sweeps rely on."""
+    ctx = run_workload(FaultPlan())
+    image = ctx.db.crash()
+    oracle = shadow_oracle(ctx, image)
+    rec_db, _ = recover(image, Strategy.LOG1, batched=True, page_size=2048)
+    assert recovered_state(rec_db) == oracle, "baseline recover() diverges"
+    applied_oracle = shadow_oracle(ctx, image,
+                                   upto_lsn=ctx.replica.applied_lsn)
+    assert ctx.replica.user_state() == applied_oracle, \
+        "baseline replica diverges"
+    ctx.plan.disarm()
+    restored, stats = cold_restore(ctx.backend, page_size=4096)
+    assert dict(restored.scan_all()) == shadow_oracle(
+        ctx, image, upto_lsn=stats.target_lsn), \
+        "baseline cold_restore diverges"
+    return ctx
+
+
+def sweep(points, kinds, *, verbose=False):
+    """Run the crash sweeps (and the transient sweep) over ``points``.
+    Returns (matrix, violations): matrix maps (phase, kind, outcome) ->
+    count; violations is a list of failure strings."""
+    matrix: dict = {}
+    violations: list[str] = []
+    total = len(points) * (len(kinds) + 1)
+    done = 0
+    for at in points:
+        checks = [(k, lambda a=at, kk=k: check_crash_point(a, kk))
+                  for k in kinds]
+        checks.append(("transient", lambda a=at: check_transient_point(a)))
+        for kind, run in checks:
+            done += 1
+            try:
+                phase, live, cold = run()
+            except AssertionError as exc:
+                violations.append(str(exc))
+                matrix[("?", kind, "VIOLATION")] = \
+                    matrix.get(("?", kind, "VIOLATION"), 0) + 1
+                continue
+            for side, outcome in (("live", live), ("cold", cold)):
+                key = (phase, kind, f"{side}:{outcome}")
+                matrix[key] = matrix.get(key, 0) + 1
+            if verbose:
+                print(f"  [{done}/{total}] op {at:4d} {kind:<10s} "
+                      f"{phase:<10s} live={live} cold={cold}")
+    return matrix, violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--stride", type=int, default=11,
+                    help="test every Nth injectable point (default 11)")
+    ap.add_argument("--max-points", type=int, default=48,
+                    help="cap on points per sweep (default 48)")
+    ap.add_argument("--full", action="store_true",
+                    help="every point, no cap (the CI torture job)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    ctx = profile()
+    total_ops = ctx.plan.total_ops
+    phases = ", ".join(f"{p}@{i}" for p, i in ctx.marks)
+    print(f"workload: {total_ops} backend ops | phases: {phases}")
+
+    if args.full:
+        points = list(range(1, total_ops + 1))
+    else:
+        points = list(range(1, total_ops + 1, max(1, args.stride)))
+        # always include the first op of every phase — those are the
+        # boundaries where half-done multi-blob operations live
+        points = sorted(set(points)
+                        | {i for _, i in ctx.marks if i <= total_ops})
+        if len(points) > args.max_points:
+            step = len(points) / args.max_points
+            points = [points[int(i * step)] for i in range(args.max_points)]
+    print(f"sweeping {len(points)} points x "
+          f"({KIND_CRASH}, {KIND_TORN_CRASH}, transient)")
+
+    matrix, violations = sweep(points, [KIND_CRASH, KIND_TORN_CRASH],
+                               verbose=args.verbose)
+
+    print("\nphase x outcome matrix:")
+    for (phase, kind, outcome), n in sorted(matrix.items()):
+        print(f"  {phase:<12s} {kind:<10s} {outcome:<16s} {n:4d}")
+    if violations:
+        print(f"\n{len(violations)} CONTRACT VIOLATION(S):", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print(f"\ntorture sweep green: {len(points)} points, "
+          f"{len(points) * 3} scenarios, 0 violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
